@@ -1,0 +1,269 @@
+"""Benchmark harness — one function per paper table.
+
+  table1_latency_split   Tab. I   frontend vs backend time, 3 modes
+  table_fe_fm_ratio      Fig. 4   FE vs FM stage latency (multiplexing
+                                  rationale: steady period = max(2FE, FM))
+  table2_module_cost     Tab. II  per-module cost split (FE ~ 2/3 claim)
+  table3_accuracy        Tab. III hardware path (Pallas) vs software
+                                  (jnp oracle) + word-length ablation
+  table4_throughput      Tab. IV  fps at 640x480 / 1280x720 on this CPU
+                                  + modeled TPU-v5e roofline fps
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+Prints CSV rows ``table,name,value,unit,note``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CameraIntrinsics, ORBConfig, backend,
+                        extract_features, match_pair, pipeline_schedule,
+                        process_stereo_frame, stereo_match, temporal_match)
+from repro.core import sad_rectify
+from repro.data import scenes
+
+ROWS = []
+
+
+def emit(table, name, value, unit="", note=""):
+    ROWS.append((table, name, value, unit, note))
+    print(f"{table},{name},{value},{unit},{note}", flush=True)
+
+
+def _bench(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters, out
+
+
+def _scene(h, w, n=300, seed=11):
+    cfg = scenes.SceneConfig(height=h, width=w, n_points=n, seed=seed,
+                             baseline=0.3)
+    frames, poses, intr = scenes.render_sequence(cfg, 3)
+    return frames, poses, intr, cfg
+
+
+# ---------------------------------------------------------------------------
+
+def table1_latency_split(quick=False):
+    """Tab. I analog: share of localization time spent in the visual
+    frontend for three backend modes.  Paper: 54.8% (SLAM), 86.7% (VIO),
+    84.6% (Registration)."""
+    h, w = (120, 160) if quick else (240, 320)
+    frames, poses, intr, _ = _scene(h, w)
+    ocfg = ORBConfig(height=h, width=w, max_features=256, n_levels=2,
+                     max_disparity=64)
+
+    fe_fm = jax.jit(lambda l, r: process_stereo_frame(l, r, ocfg, intr))
+    t_front, out0 = _bench(fe_fm, frames[0, 0], frames[0, 1])
+    out1 = fe_fm(frames[1, 0], frames[1, 1])
+
+    def make_backend(refine, iters):
+        def run(prev_feats, prev_depth, curr_feats, curr_depth):
+            tm = temporal_match(prev_feats, curr_feats, ocfg)
+            pts_p = backend.triangulate(prev_feats, prev_depth, intr)
+            pts_c = backend.triangulate(curr_feats, curr_depth, intr)
+            idx = tm.right_index
+            wgt = (tm.valid & prev_depth.valid
+                   & curr_depth.valid[idx]).astype(jnp.float32)
+            return backend.estimate_relative_pose(
+                pts_p, pts_c[idx], wgt, curr_feats.xy[idx], intr,
+                refine=refine, robust_iters=iters)
+        return jax.jit(run)
+
+    modes = {"slam": make_backend(True, 3),
+             "vio": make_backend(False, 1),
+             "registration": make_backend(True, 6)}
+    for mode, fn in modes.items():
+        t_back, _ = _bench(fn, out0.features_l, out0.depth,
+                           out1.features_l, out1.depth)
+        share = t_front / (t_front + t_back)
+        emit("table1", f"frontend_share_{mode}", round(100 * share, 1),
+             "%", f"front {t_front*1e3:.1f}ms back {t_back*1e3:.1f}ms")
+    emit("table1", "paper_frontend_share",
+         "54.8/86.7/84.6", "%", "slam/vio/registration (paper Tab. I)")
+
+
+def table_fe_fm_ratio(quick=False):
+    """Fig. 4 rationale: FM latency ~ 2x FE at 640x480 in the paper
+    (7.28 vs 14.59 ms) -> two channels share one FE."""
+    h, w = (240, 320) if quick else (480, 640)
+    frames, poses, intr, _ = _scene(h, w)
+    ocfg = ORBConfig(height=h, width=w, max_features=512, n_levels=2,
+                     max_disparity=96)
+    fe = jax.jit(lambda im: extract_features(im, ocfg))
+    t_fe, featl = _bench(fe, frames[0, 0])
+    featr = fe(frames[0, 1])
+    fm = jax.jit(lambda l, r, fl, fr: match_pair(l, r, fl, fr, ocfg,
+                                                 intr))
+    t_fm, _ = _bench(fm, frames[0, 0], frames[0, 1], featl, featr)
+    emit("fig4", "t_fe_ms", round(t_fe * 1e3, 2), "ms", "one image")
+    emit("fig4", "t_fm_ms", round(t_fm * 1e3, 2), "ms", "stereo pair")
+    emit("fig4", "fm_over_fe", round(t_fm / t_fe, 2), "x",
+         "paper: 2.0 (7.28 vs 14.59 ms)")
+    sched = pipeline_schedule(100, t_fe * 1e3, t_fm * 1e3)
+    emit("fig4", "steady_period_ms", round(sched["steady_period_ms"], 2),
+         "ms", "frame-multiplexed pipeline")
+    emit("fig4", "serial_period_ms", round(sched["serial_period_ms"], 2),
+         "ms", "no pipelining")
+    emit("fig4", "pipeline_speedup",
+         round(sched["serial_period_ms"] / sched["steady_period_ms"], 2),
+         "x", "Fig. 4 schedule vs serial")
+
+
+def table2_module_cost(quick=False):
+    """Tab. II analog: per-module share of frontend cost.  The FPGA
+    spends ~2/3 of its resources on FE; we report the wall-time split of
+    the same module boundary plus per-module times."""
+    h, w = (240, 320) if quick else (480, 640)
+    frames, poses, intr, _ = _scene(h, w)
+    ocfg = ORBConfig(height=h, width=w, max_features=512, n_levels=2,
+                     max_disparity=96)
+    from repro.core import brief, fast, pyramid
+    from repro.kernels import ops
+    img = frames[0, 0]
+
+    mods = {}
+    t, levels = _bench(jax.jit(lambda i: pyramid.build_pyramid(i, ocfg)),
+                       img)
+    mods["resize"] = t
+    t, _ = _bench(jax.jit(lambda i: ops.fast_score_map(
+        i, float(ocfg.fast_threshold))), levels[0])
+    mods["fast_detect"] = t
+    xy = jnp.asarray(np.stack([np.random.RandomState(0).randint(
+        16, w - 16, 512), np.random.RandomState(1).randint(
+        16, h - 16, 512)], 1).astype(np.int32))
+    t, _ = _bench(jax.jit(lambda i, p: fast.orientations(i, p)),
+                  levels[0], xy)
+    mods["orientation"] = t
+    t, sm = _bench(jax.jit(lambda i: ops.gaussian_blur7(i)), levels[0])
+    mods["smoothing"] = t
+    th = jnp.zeros((512,))
+    t, _ = _bench(jax.jit(lambda s, p, a: brief.describe(s, p, a)),
+                  sm, xy, th)
+    mods["descriptor"] = t
+    fe = jax.jit(lambda i: extract_features(i, ocfg))
+    featl = fe(frames[0, 0])
+    featr = fe(frames[0, 1])
+    t, m = _bench(jax.jit(lambda a, b: stereo_match(a, b, ocfg)),
+                  featl, featr)
+    mods["stereo_match"] = t
+    t, _ = _bench(jax.jit(lambda l, r, fl, fr, mm: sad_rectify(
+        l, r, fl, fr, mm, ocfg, intr)), frames[0, 0], frames[0, 1],
+        featl, featr, m)
+    mods["sad_rectify"] = t
+
+    total = sum(mods.values())
+    fe_mods = ("resize", "fast_detect", "orientation", "smoothing",
+               "descriptor")
+    fe_share = sum(mods[k] for k in fe_mods) / total
+    for k, v in mods.items():
+        emit("table2", f"{k}_ms", round(v * 1e3, 3), "ms",
+             "FE" if k in fe_mods else "FM")
+    emit("table2", "fe_share", round(100 * fe_share, 1), "%",
+         "paper: FE ~ 2/3 of frontend resources")
+
+
+def table3_accuracy(quick=False):
+    """Tab. III: hardware path vs software reference over frames.
+    Paper error: < 0.3% on counts; ours is bit-exact (0.0%).  Plus the
+    word-length (quantized vs float) ablation."""
+    h, w = (120, 160) if quick else (240, 320)
+    n_frames = 2 if quick else 6
+    cfg = scenes.SceneConfig(height=h, width=w, n_points=200, seed=5,
+                             baseline=0.3)
+    frames, _, intr = scenes.render_sequence(cfg, n_frames)
+    ocfg = ORBConfig(height=h, width=w, max_features=256, n_levels=2,
+                     max_disparity=64)
+    tot = {"feat": [0, 0], "match": [0, 0], "depth": [0, 0]}
+    coord_eq = [0, 0]
+    for t in range(n_frames):
+        hw = process_stereo_frame(frames[t, 0], frames[t, 1], ocfg, intr,
+                                  impl="pallas")
+        sw = process_stereo_frame(frames[t, 0], frames[t, 1], ocfg, intr,
+                                  impl="ref")
+        tot["feat"][0] += int(hw.features_l.count())
+        tot["feat"][1] += int(sw.features_l.count())
+        tot["match"][0] += int(hw.matches.count())
+        tot["match"][1] += int(sw.matches.count())
+        tot["depth"][0] += int(hw.depth.count())
+        tot["depth"][1] += int(sw.depth.count())
+        eq = np.asarray(hw.features_l.xy) == np.asarray(sw.features_l.xy)
+        coord_eq[0] += int(eq.all(-1).sum())
+        coord_eq[1] += int(eq.shape[0])
+    for k, (a, b) in tot.items():
+        err = 100.0 * abs(a - b) / max(b, 1)
+        emit("table3", f"{k}_hw_vs_sw", f"{a}/{b}", "count",
+             f"err {err:.2f}% (paper <0.3%)")
+    emit("table3", "coord_agreement",
+         round(100 * coord_eq[0] / coord_eq[1], 2), "%",
+         "paper: 99.7/98.2/96.8%")
+
+    q = ocfg
+    f = ORBConfig(**{**q.__dict__, "quantized": False})
+    hwq = process_stereo_frame(frames[0, 0], frames[0, 1], q, intr)
+    hwf = process_stereo_frame(frames[0, 0], frames[0, 1], f, intr)
+    emit("table3", "wordlen_feat_counts",
+         f"{int(hwq.features_l.count())}/{int(hwf.features_l.count())}",
+         "count", "8-bit vs float datapath (ablation)")
+
+
+def table4_throughput(quick=False):
+    """Tab. IV: frontend fps at the paper's two resolutions, on this
+    CPU (measured) and on TPU v5e (roofline model from kernel
+    flops/bytes).  Paper: 69 fps @640x480, 50.7 fps @1280x720 (FPGA);
+    9 fps (TX1), 15 fps (i7) @720p."""
+    from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+    resolutions = [(480, 640)] + ([] if quick else [(720, 1280)])
+    for h, w in resolutions:
+        frames, poses, intr, _ = _scene(h, w, n=400)
+        ocfg = ORBConfig(height=h, width=w, max_features=1000,
+                         n_levels=2, max_disparity=96)
+        step = jax.jit(lambda l, r: process_stereo_frame(l, r, ocfg,
+                                                         intr))
+        t, _ = _bench(step, frames[0, 0], frames[0, 1], iters=3)
+        emit("table4", f"cpu_fps_{w}x{h}", round(1.0 / t, 1), "fps",
+             "this host, one stereo pair")
+        # v5e roofline model: frontend is stencil/popcount bound ->
+        # bytes-dominated; count pyramid+blur+fast traffic + matcher
+        px = h * w * (1 + 1 / (ocfg.scale_factor ** 2))
+        bytes_img = px * 4 * 6          # score map, blur, pyramid r/w
+        flops_img = px * (16 * 3 * 9 + 49 * 2)  # fast arcs + blur taps
+        k = ocfg.max_features
+        bytes_match = k * k * 4 + k * 32 * 2
+        t_mem = (2 * bytes_img + bytes_match) / HBM_BW
+        t_cmp = (2 * flops_img + k * k * 256 * 2) / PEAK_FLOPS_BF16
+        fps = 1.0 / max(t_mem, t_cmp)
+        emit("table4", f"v5e_model_fps_{w}x{h}", round(fps, 0), "fps",
+             "roofline bound, one chip")
+    emit("table4", "paper_fpga_fps", "69/50.7", "fps",
+         "640x480 / 1280x720")
+    emit("table4", "paper_baselines_720p", "TX1 9, i7 15", "fps",
+         "paper Tab. IV")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("table,name,value,unit,note")
+    t0 = time.time()
+    table1_latency_split(args.quick)
+    table_fe_fm_ratio(args.quick)
+    table2_module_cost(args.quick)
+    table3_accuracy(args.quick)
+    table4_throughput(args.quick)
+    print(f"# done in {time.time() - t0:.1f}s ({len(ROWS)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: run the quad-camera ORB visual frontend on a synthetic
+scene and print what it found.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import ORBConfig, process_quad_frame, sync
+from repro.data import scenes
+
+
+def main() -> None:
+    # 1. simulate the quad-camera rig (two stereo pairs, front + back)
+    scene = scenes.SceneConfig(height=240, width=320, n_points=300,
+                               baseline=0.3)
+    frames, poses, intr = scenes.render_sequence(scene, n_frames=2)
+    print(f"rendered {frames.shape} (frames, cameras, H, W)")
+
+    # 2. hardware-synchronized capture (paper Sec. III-A): one trigger
+    #    clock stamps all four cameras + IMU
+    trig = sync.TriggerConfig()
+    cam_tags, imu_tags = sync.hardware_trigger(trig, 2)
+    print(f"max inter-camera desync: {float(sync.max_desync(cam_tags))} s"
+          " (hardware sync is exact by construction)")
+
+    # 3. the frame-multiplexed visual frontend (paper Sec. III-B..D):
+    #    ORB extraction -> stereo Hamming match -> SAD rectify -> depth
+    ocfg = ORBConfig(height=240, width=320, max_features=512,
+                     n_levels=2, max_disparity=64)
+    out = jax.jit(lambda f: process_quad_frame(f, ocfg, intr))(frames[0])
+    for pair in (0, 1):
+        nf = int(np.asarray(out.features_l.valid[pair]).sum())
+        nm = int(np.asarray(out.matches.valid[pair]).sum())
+        nd = int(np.asarray(out.depth.valid[pair]).sum())
+        z = np.asarray(out.depth.depth[pair])[
+            np.asarray(out.depth.valid[pair])]
+        print(f"pair {pair}: {nf} features, {nm} matches, {nd} depths, "
+              f"median depth {np.median(z):.2f} m")
+
+
+if __name__ == "__main__":
+    main()

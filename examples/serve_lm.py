@@ -1,0 +1,68 @@
+"""Serve a small LM: batched prefill -> batched greedy decode, the same
+prefill/decode_step pair the 512-chip dry-run lowers.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma2_2b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import lm, transformer
+from repro.models.params import init_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2_2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(lm.model_schema(cfg), jax.random.key(0))
+    rng = np.random.RandomState(0)
+    prompts = jnp.asarray(rng.randint(0, cfg.vocab,
+                                      (args.batch, args.prompt_len)))
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros(
+            (args.batch, cfg.vlm_prefix, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(rng.normal(size=(
+            args.batch, args.prompt_len, cfg.d_model)) * 0.1,
+            jnp.float32)
+
+    max_len = args.prompt_len + args.new_tokens + (
+        cfg.vlm_prefix if cfg.family == "vlm" else 0)
+
+    prefill = jax.jit(lambda p, b: lm.prefill(p, cfg, b))
+    decode = jax.jit(lambda p, t, c, i: lm.decode_step(p, cfg, t, c, i),
+                     donate_argnums=(2,))
+
+    t0 = time.time()
+    cache, last_logits, pos = prefill(params, batch)
+    cache = lm.expand_cache(cfg, cache, max_len, args.prompt_len)
+    tok = jnp.argmax(last_logits[:, :cfg.vocab], -1)[:, None]
+    outs = [tok]
+    for i in range(args.new_tokens - 1):
+        logits, cache = decode(params, tok, cache,
+                               jnp.asarray(int(pos) + i, jnp.int32))
+        tok = jnp.argmax(logits[:, 0, :cfg.vocab], -1)[:, None]
+        outs.append(tok)
+    gen = np.concatenate([np.asarray(t) for t in outs], 1)
+    dt = time.time() - t0
+    print(f"arch={args.arch} ({cfg.family}) batch={args.batch}")
+    print(f"generated {gen.shape} tokens in {dt:.2f}s "
+          f"({args.batch * args.new_tokens / dt:.1f} tok/s incl. "
+          "compile)")
+    print("first sequence:", gen[0][:16], "...")
+
+
+if __name__ == "__main__":
+    main()

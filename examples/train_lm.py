@@ -1,0 +1,47 @@
+"""Train a ~100M-parameter LM for a few hundred steps on the synthetic
+induction corpus (second half of each sequence repeats the first half,
+so the loss on the copyable half drops fast once the model learns to
+attend backwards).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+Checkpoints + crash-restart: add --ckpt-dir /tmp/lm_ckpt and re-run the
+same command after killing it — training resumes bit-identically.
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data.tokens import TokenDataConfig
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import train_loop
+from repro.optim import AdamWConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    # a ~100M-param gemma-family config (full machinery, reduced dims)
+    cfg = get_smoke_config("gemma_7b").replace(
+        n_layers=6, d_model=512, n_heads=8, n_kv=8, head_dim=64,
+        d_ff=2048, vocab=8192, remat="nothing")
+    data = TokenDataConfig(vocab=cfg.vocab, seq_len=256, global_batch=8)
+    opt = AdamWConfig(lr=3e-4, warmup_steps=30, total_steps=args.steps)
+    mesh = make_host_mesh()
+
+    _, hist = train_loop(cfg, data, opt, mesh, args.steps,
+                         ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                         log_every=20)
+    losses = [l for _, l in hist]
+    print(f"\nloss: {np.mean(losses[:10]):.3f} (start) -> "
+          f"{np.mean(losses[-10:]):.3f} (end); uniform floor would be "
+          f"{np.log(cfg.vocab):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Atomic, resharding-aware checkpointing."""
+
+from repro.checkpoint.store import (latest_step, restore, restore_array_tree,
+                                    save, save_async)
+
+__all__ = ["latest_step", "restore", "restore_array_tree", "save",
+           "save_async"]

@@ -1,0 +1,124 @@
+"""Atomic sharded checkpoint store.
+
+Layout: <dir>/step_<N>/  one .npy per flattened tree path + index.json.
+Writes go to a tmp dir and are renamed into place (atomic on POSIX), so
+a crash mid-save never corrupts the latest checkpoint — the restart
+driver (launch/train.py) just resumes from the newest complete step.
+
+Restore reshards: arrays are device_put against the CURRENT mesh/specs,
+so a checkpoint taken on one mesh restores onto a smaller/larger one
+(elastic scaling).  ``save_async`` overlaps the host write with the next
+step (the device->host copy is synchronous, the file IO is not).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_SEP = "§"
+
+# numpy can't natively save bf16 & friends — persist as a same-width
+# integer view with the logical dtype recorded in the index
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
+    """Synchronous atomic save.  Returns the final directory."""
+    flat = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    index = {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"{abs(hash(key)) & 0xFFFFFFFF:08x}.npy"
+        logical = str(arr.dtype)
+        if logical in _VIEW_AS:
+            arr = arr.view(_VIEW_AS[logical])
+        np.save(os.path.join(tmp, fname), arr)
+        index[key] = {"file": fname, "shape": list(arr.shape),
+                      "dtype": logical}
+    with open(os.path.join(tmp, "index.json"), "w") as f:
+        json.dump({"step": step, "leaves": index}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def save_async(ckpt_dir: str, step: int, tree,
+               keep: int = 3) -> threading.Thread:
+    """Device->host copy now; file IO in a background thread."""
+    flat = {k: np.asarray(jax.device_get(v)) for k, v in
+            _flatten(tree).items()}
+
+    def _write():
+        save(ckpt_dir, step, flat, keep)
+
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(ckpt_dir, d, "index.json"))]
+    return max(steps) if steps else None
+
+
+def restore_array_tree(ckpt_dir: str, step: int, like) -> object:
+    """Restore as host numpy arrays with the structure of ``like``."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "index.json")) as f:
+        index = json.load(f)["leaves"]
+    flat_like = _flatten(like)
+    out = {}
+    for key in flat_like:
+        meta = index[key]
+        arr = np.load(os.path.join(d, meta["file"]))
+        if meta["dtype"] in _VIEW_AS:
+            arr = arr.view(getattr(ml_dtypes, meta["dtype"]))
+        out[key] = arr
+    leaves = [out[k] for k in flat_like]
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore(ckpt_dir: str, step: int, like, shardings=None):
+    """Restore + device_put with per-leaf shardings (elastic re-mesh:
+    the target mesh need not match the one that saved)."""
+    host = restore_array_tree(ckpt_dir, step, like)
+    if shardings is None:
+        return jax.tree.map(jax.numpy.asarray, host)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), host,
+                        shardings)

@@ -1,0 +1,7 @@
+"""Architecture configs (assigned pool) + the paper's frontend config."""
+
+from repro.configs.base import (ARCH_IDS, ModelConfig, ShapeCell,
+                                get_config, get_smoke_config, shape_cells)
+
+__all__ = ["ARCH_IDS", "ModelConfig", "ShapeCell", "get_config",
+           "get_smoke_config", "shape_cells"]

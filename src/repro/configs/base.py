@@ -1,0 +1,172 @@
+"""Model-config schema + registry + shape cells.
+
+Every assigned architecture is a ``ModelConfig`` in its own module
+(``src/repro/configs/<id>.py``), constructed from the exact public
+hyper-parameters, plus a reduced ``smoke()`` variant of the same family
+for CPU tests.  ``shape_cells`` enumerates the assigned (arch x shape)
+dry-run cells with applicability flags.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None       # default d_model // n_heads
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    mlp_act: str = "silu"                # silu (SwiGLU) | gelu (GeGLU)
+    tie_embeddings: bool = False
+    embed_scale: bool = False            # gemma: x *= sqrt(d_model)
+    rms_unit_offset: bool = True
+    rms_eps: float = 1e-6
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    query_scale: Optional[float] = None  # default head_dim ** -0.5
+    sliding_window: Optional[int] = None
+    local_global_period: int = 0         # gemma2: 2 -> alternate local/global
+    post_norms: bool = False             # gemma2: post-attn/post-mlp norms
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    first_dense: int = 0                 # deepseek first_k_dense_replace
+    first_dense_ff: int = 0              # dense-MLP width of that layer
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_cap_data: bool = False           # shard expert capacity over data
+    moe_impl: str = "a2a"                # a2a (shard_map EP) | gather
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    ssm_intra_bf16: bool = True
+    # --- hybrid (zamba2) ---
+    hybrid_period: int = 0               # shared attn block every N ssm layers
+    # --- enc-dec ---
+    n_enc_layers: int = 0
+    # --- vlm ---
+    vlm_prefix: int = 0                  # image patch tokens (stub frontend)
+    # --- substrate knobs ---
+    vocab_pad_mult: int = 256
+    remat: str = "full"                  # nothing | dots | full
+    loss_chunk: int = 512                # fused-head xent seq chunk
+    attn_chunk: int = 1024               # flash-attention kv chunk
+    dtype: str = "bfloat16"              # compute dtype
+    notes: str = ""
+
+    # ---- derived ----
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def vocab_padded(self) -> int:
+        return _pad_to(self.vocab, self.vocab_pad_mult)
+
+    @property
+    def kv_eff(self) -> int:
+        """KV heads after TP repetition (mathematically identical; lets
+        the kv dim shard when n_kv doesn't divide the model axis but a
+        small integer multiple does).  16 == production model-axis size."""
+        tp = 16
+        if self.n_kv == 0 or self.n_heads % tp != 0:
+            return self.n_kv
+        if self.n_kv % tp == 0:
+            return self.n_kv
+        # smallest multiple of n_kv that divides n_heads and is % tp == 0
+        m = self.n_kv
+        while m <= self.n_heads:
+            if m % tp == 0 and self.n_heads % m == 0:
+                return m
+            m += self.n_kv
+        return self.n_kv
+
+    @property
+    def ssm_heads(self) -> int:
+        return (self.ssm_expand * self.d_model) // self.ssm_head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def query_scale_(self) -> float:
+        return (self.query_scale if self.query_scale is not None
+                else self.head_dim_ ** -0.5)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str                    # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                    # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    applicable: bool = True
+    skip_reason: str = ""
+
+
+ARCH_IDS = [
+    "moonshot_v1_16b_a3b", "phi35_moe_42b_a66b", "gemma_7b", "qwen25_32b",
+    "h2o_danube_18b", "gemma2_2b", "paligemma_3b", "mamba2_780m",
+    "zamba2_7b", "seamless_m4t_medium",
+]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.smoke()
+
+
+def shape_cells(cfg: ModelConfig) -> list[ShapeCell]:
+    """The 4 assigned shapes with per-family applicability.
+
+    long_500k needs sub-quadratic attention: run for SSM / hybrid /
+    sliding-window archs, skip (documented) for pure full-attention ones.
+    Enc-dec/decoder rules: all assigned archs have a decoder, so decode
+    shapes always lower ``serve_step``.
+    """
+    # all-layers sliding window counts; gemma2's alternating stack still
+    # has full-attention global layers, so it does NOT qualify.
+    swa_everywhere = (cfg.sliding_window is not None
+                      and cfg.local_global_period == 0)
+    sub_quadratic = cfg.family in ("ssm", "hybrid") or swa_everywhere
+    cells = [
+        ShapeCell("train_4k", "train", 4096, 256),
+        ShapeCell("prefill_32k", "prefill", 32768, 32),
+        ShapeCell("decode_32k", "decode", 32768, 128),
+    ]
+    if sub_quadratic:
+        cells.append(ShapeCell("long_500k", "decode", 524288, 1))
+    else:
+        cells.append(ShapeCell(
+            "long_500k", "decode", 524288, 1, applicable=False,
+            skip_reason="pure full-attention arch: 500k decode is "
+                        "quadratic; skipped per spec (see DESIGN.md)"))
+    return cells

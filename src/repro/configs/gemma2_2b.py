@@ -1,0 +1,24 @@
+"""gemma2-2b: 26L dense, local/global alternating, logit softcaps,
+post-norms.  [arXiv:2408.00118]"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="gemma2_2b", family="dense",
+        n_layers=26, d_model=2304, n_heads=8, n_kv=4,
+        head_dim=256, d_ff=9216, vocab=256000,
+        mlp_act="gelu", tie_embeddings=True, embed_scale=True,
+        sliding_window=4096, local_global_period=2,
+        attn_softcap=50.0, final_softcap=30.0,
+        query_scale=256.0 ** -0.5, post_norms=True,
+        notes="gemma2-2b; alternating SWA/global; softcaps; post-norms",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, head_dim=32,
+        d_ff=128, vocab=512, sliding_window=32, attn_chunk=32,
+        query_scale=32.0 ** -0.5, dtype="float32")

@@ -1,0 +1,19 @@
+"""gemma-7b: 28L dense, GeGLU, head_dim 256.  [arXiv:2403.08295]"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="gemma_7b", family="dense",
+        n_layers=28, d_model=3072, n_heads=16, n_kv=16,
+        head_dim=256, d_ff=24576, vocab=256000,
+        mlp_act="gelu", tie_embeddings=True, embed_scale=True,
+        notes="gemma-7b; GeGLU; tied embeddings; x *= sqrt(d_model)",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv=4, head_dim=32,
+        d_ff=128, vocab=512, attn_chunk=64, dtype="float32")

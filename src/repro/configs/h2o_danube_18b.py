@@ -1,0 +1,21 @@
+"""h2o-danube-1.8b: 24L dense, llama+mistral mix, sliding-window
+attention.  [arXiv:2401.16818]  All layers windowed -> rolling KV cache
+-> long_500k runs (window-bounded, sub-quadratic)."""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="h2o_danube_18b", family="dense",
+        n_layers=24, d_model=2560, n_heads=32, n_kv=8,
+        d_ff=6912, vocab=32000,
+        sliding_window=4096,
+        notes="h2o-danube 1.8b; SWA 4096 everywhere -> rolling cache",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+        vocab=512, sliding_window=32, attn_chunk=32, dtype="float32")

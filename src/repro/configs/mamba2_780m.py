@@ -1,0 +1,20 @@
+"""mamba2-780m: 48L attention-free SSD.  [arXiv:2405.21060]
+d_inner = 2 x 1536 = 3072, headdim 64 -> 48 ssm heads, state 128."""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="mamba2_780m", family="ssm",
+        n_layers=48, d_model=1536, n_heads=0, n_kv=0, d_ff=0,
+        vocab=50280, ssm_state=128, ssm_head_dim=64, ssm_expand=2,
+        tie_embeddings=True,
+        notes="mamba2-780m; SSD chunked scan; O(1)/token decode",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=64, ssm_state=16, ssm_head_dim=16,
+        ssm_chunk=32, vocab=512, dtype="float32", ssm_intra_bf16=False)

@@ -1,0 +1,29 @@
+"""moonshot-v1-16b-a3b (Moonlight-16B-A3B): 48L MoE, 64 experts top-6.
+
+[hf:moonshotai/Moonlight-16B-A3B]  DeepSeek-V3-style: 2 shared experts,
+first_k_dense_replace=1 (layer 0 keeps attention, dense MLP).  The
+listed d_ff=1408 is the per-expert (moe_intermediate) width; the dense
+layer-0 MLP uses ~active-width (top_k x 1408 != public 11264 — offline
+approximation, documented)."""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="moonshot_v1_16b_a3b", family="moe",
+        n_layers=48, d_model=2048, n_heads=16, n_kv=16,
+        d_ff=1408, vocab=163840,
+        n_experts=64, top_k=6, n_shared_experts=2,
+        first_dense=1, first_dense_ff=8448,
+        rope_theta=50000.0, mlp_act="silu",
+        notes="Moonlight 16B-A3B; 64e top-6 + 2 shared; first layer dense",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        n_layers=3, d_model=64, n_heads=4, n_kv=4, d_ff=48,
+        vocab=512, n_experts=8, top_k=2, n_shared_experts=1,
+        first_dense=1, first_dense_ff=96, attn_chunk=64, capacity_factor=8.0,
+        dtype="float32")

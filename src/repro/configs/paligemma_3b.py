@@ -1,0 +1,24 @@
+"""paligemma-3b: SigLIP + gemma decoder, MQA kv=1, prefix-LM.
+[arXiv:2407.07726]  The SigLIP vision tower is a STUB per spec:
+``input_specs()`` provides 256 precomputed patch embeddings; the
+backbone applies a prefix-LM mask (bidirectional over the patches)."""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="paligemma_3b", family="vlm",
+        n_layers=18, d_model=2048, n_heads=8, n_kv=1,
+        head_dim=256, d_ff=16384, vocab=257216,
+        mlp_act="gelu", tie_embeddings=True, embed_scale=True,
+        vlm_prefix=256,
+        notes="paligemma-3b backbone; SigLIP stub; prefix-LM over patches",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv=1, head_dim=32,
+        d_ff=128, vocab=512, vlm_prefix=8, attn_chunk=32,
+        dtype="float32")

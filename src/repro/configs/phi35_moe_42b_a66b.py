@@ -1,0 +1,25 @@
+"""phi3.5-moe-42b-a6.6b: 32L MoE, 16 experts top-2.
+
+[hf:microsoft/Phi-3.5-MoE-instruct]  Mixtral-style token-choice MoE
+(the public model routes with SparseMixer; we use softmax top-2 —
+documented simplification)."""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="phi35_moe_42b_a66b", family="moe",
+        n_layers=32, d_model=4096, n_heads=32, n_kv=8,
+        d_ff=6400, vocab=32064,
+        n_experts=16, top_k=2,
+        rope_theta=10000.0, mlp_act="silu",
+        notes="Phi-3.5-MoE; 16e top-2; softmax router (not SparseMixer)",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=96,
+        vocab=512, n_experts=4, top_k=2, attn_chunk=64, capacity_factor=8.0,
+        dtype="float32")

@@ -1,0 +1,23 @@
+"""qwen2.5-32b: 64L dense, GQA kv=8, QKV bias.  [hf:Qwen/Qwen2.5-32B]
+
+40 heads % 16-way model axis != 0 and no kv_eff repetition divides
+(40 % 16), so attention falls back to unsharded heads on the baseline;
+see EXPERIMENTS.md §Perf for the sequence-TP hillclimb."""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="qwen25_32b", family="dense",
+        n_layers=64, d_model=5120, n_heads=40, n_kv=8,
+        d_ff=27648, vocab=152064,
+        qkv_bias=True, rope_theta=1e6,
+        notes="Qwen2.5-32B; GQA kv8; QKV bias; rope 1e6",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        n_layers=2, d_model=80, n_heads=5, n_kv=1, d_ff=128,
+        vocab=512, attn_chunk=64, dtype="float32")

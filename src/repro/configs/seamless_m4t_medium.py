@@ -1,0 +1,23 @@
+"""seamless-m4t-medium: 12L enc + 12L dec, multimodal.  [arXiv:2308.11596]
+The speech frontend is a STUB per spec: ``input_specs()`` provides
+precomputed frame embeddings (B, S_src, d_model).  Self-attention uses
+RoPE on both sides (the public model uses relative position bias —
+documented simplification); cross-attention is position-free."""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="seamless_m4t_medium", family="encdec",
+        n_layers=12, n_enc_layers=12, d_model=1024, n_heads=16, n_kv=16,
+        d_ff=4096, vocab=256206,
+        mlp_act="gelu", tie_embeddings=True,
+        notes="seamless-m4t-medium; enc-dec; audio frontend stubbed",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        n_layers=2, n_enc_layers=2, d_model=64, n_heads=4, n_kv=4,
+        d_ff=128, vocab=512, attn_chunk=32, dtype="float32")

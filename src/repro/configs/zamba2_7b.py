@@ -1,0 +1,27 @@
+"""zamba2-7b: 81 Mamba2 layers + one SHARED full-attention transformer
+block applied after every 6 SSM layers (13 applications + 3-layer tail).
+[arXiv:2411.15242]  Simplifications (documented in DESIGN.md): the
+shared block runs at d_model (the public model concatenates the
+original embedding, 2 x d_model) and per-application LoRA deltas are
+omitted — the shared-parameter structure (the paper's memory-saving
+idea) is preserved."""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="zamba2_7b", family="hybrid",
+        n_layers=81, d_model=3584, n_heads=32, n_kv=32,
+        d_ff=14336, vocab=32000,
+        ssm_state=64, ssm_head_dim=64, ssm_expand=2,
+        hybrid_period=6,
+        notes="zamba2-7b; shared attn block every 6 mamba layers",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        n_layers=5, d_model=64, n_heads=4, n_kv=4, d_ff=128,
+        ssm_state=16, ssm_head_dim=16, ssm_chunk=32, hybrid_period=2,
+        vocab=512, attn_chunk=32, dtype="float32", ssm_intra_bf16=False)

@@ -1,0 +1,98 @@
+"""Oriented FAST detection (paper Sec. II-B1, III-C).
+
+Pipeline per pyramid level:
+  score map (Pallas kernel) -> 3x3 NMS -> border mask -> static top-K ->
+  intensity-centroid orientation from 31x31 circular-patch moments.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import ORBConfig
+from repro.kernels import ops
+
+PATCH = 31
+RADIUS = PATCH // 2
+
+# Circular patch mask and coordinate grids (paper Eq. 1: r = patch radius).
+_yy, _xx = np.mgrid[-RADIUS:RADIUS + 1, -RADIUS:RADIUS + 1]
+CIRCLE_MASK = (_xx ** 2 + _yy ** 2 <= RADIUS ** 2).astype(np.float32)
+X_GRID = (_xx * CIRCLE_MASK).astype(np.float32)
+Y_GRID = (_yy * CIRCLE_MASK).astype(np.float32)
+
+
+def nms3(score: jnp.ndarray) -> jnp.ndarray:
+    """3x3 non-max suppression: keep pixels that are the strict max of
+    their neighbourhood (ties keep the top-left via epsilon bias)."""
+    h, w = score.shape
+    pad = jnp.pad(score, 1, mode="constant", constant_values=-1.0)
+    neigh = []
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            if dy == 0 and dx == 0:
+                continue
+            neigh.append(jax.lax.dynamic_slice(pad, (1 + dy, 1 + dx), (h, w)))
+    nmax = functools.reduce(jnp.maximum, neigh)
+    return jnp.where(score >= nmax, score, 0.0) * (score > 0.0)
+
+
+def select_topk(score: jnp.ndarray, k: int, border: int):
+    """Top-K corners of a score map. Returns (xy (K,2) int32, score (K,),
+    valid (K,) bool)."""
+    h, w = score.shape
+    row = jnp.arange(h)[:, None]
+    col = jnp.arange(w)[None, :]
+    inside = ((row >= border) & (row < h - border)
+              & (col >= border) & (col < w - border))
+    masked = jnp.where(inside, score, 0.0)
+    vals, idx = jax.lax.top_k(masked.reshape(-1), k)
+    ys = (idx // w).astype(jnp.int32)
+    xs = (idx % w).astype(jnp.int32)
+    valid = vals > 0.0
+    return jnp.stack([xs, ys], axis=-1), vals, valid
+
+
+def _patch31(padded_img: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray):
+    """31x31 patch centered at (x, y); padded_img is edge-padded by RADIUS."""
+    return jax.lax.dynamic_slice(padded_img, (y, x), (PATCH, PATCH))
+
+
+def orientations(img: jnp.ndarray, xy: jnp.ndarray) -> jnp.ndarray:
+    """Intensity-centroid orientation theta = atan2(m01, m10) (paper Eq. 1).
+
+    img: (H, W) float32 level image; xy: (K, 2) int32.  Assumes xy at
+    least ``border`` >= RADIUS from the edge (guaranteed by select_topk),
+    so no padding is needed beyond edge replication.
+    """
+    padded = jnp.pad(img.astype(jnp.float32), RADIUS, mode="edge")
+    xg = jnp.asarray(X_GRID)
+    yg = jnp.asarray(Y_GRID)
+    mask = jnp.asarray(CIRCLE_MASK)
+
+    def one(pt):
+        patch = _patch31(padded, pt[0], pt[1]) * mask
+        m10 = jnp.sum(xg * patch)
+        m01 = jnp.sum(yg * patch)
+        return jnp.arctan2(m01, m10)
+
+    return jax.vmap(one)(xy)
+
+
+def detect(level_img: jnp.ndarray, cfg: ORBConfig, k: int,
+           impl: str | None = None):
+    """Run oriented FAST on one pyramid level.
+
+    Returns (xy (K,2) int32 level coords, score (K,), theta (K,),
+    valid (K,))."""
+    score = ops.fast_score_map(level_img, float(cfg.fast_threshold),
+                               impl=impl)
+    if cfg.nms:
+        score = nms3(score)
+    xy, vals, valid = select_topk(score, k, cfg.border)
+    theta = orientations(level_img, xy)
+    return xy, vals, theta, valid

@@ -1,0 +1,170 @@
+"""Quad-camera frame-multiplexed visual frontend (paper Sec. III-B).
+
+Mapping of the FPGA schedule (Fig. 4) onto TPU/XLA:
+
+* Frame-multiplexing (two camera channels share one FE): the L/R images
+  are a leading batch axis of ONE feature-extractor invocation — the
+  vector/matrix units are time-multiplexed across the batch exactly as
+  the FPGA FE is time-multiplexed across channels.
+* Two identical module pairs for the two stereo pairs: `vmap` over the
+  pair axis (shardable: data parallelism over pairs).
+* FE(N+1) overlapping FM(N): software-pipelined `lax.scan` — the scan
+  body computes FE(frame t) and FM(features of frame t-1), which have no
+  data dependence, so XLA is free to interleave them; results stream out
+  with one frame of latency, exactly the Fig. 4 timeline.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import matching, orb
+from repro.core.types import (CameraIntrinsics, DepthSet, FeatureSet,
+                              MatchSet, ORBConfig)
+
+
+class StereoOutput(NamedTuple):
+    features_l: FeatureSet
+    features_r: FeatureSet
+    matches: MatchSet
+    depth: DepthSet
+
+
+def extract_pair(img_l: jnp.ndarray, img_r: jnp.ndarray, cfg: ORBConfig,
+                 impl: str | None = None):
+    """Frame-multiplexed FE: one extractor invocation over the L/R batch."""
+    stacked = jnp.stack([img_l, img_r])          # (2, H, W)
+    feats = jax.vmap(lambda im: orb.extract_features(im, cfg, impl=impl))(
+        stacked)
+    feat_l = jax.tree.map(lambda x: x[0], feats)
+    feat_r = jax.tree.map(lambda x: x[1], feats)
+    return feat_l, feat_r
+
+
+def match_pair(img_l, img_r, feat_l: FeatureSet, feat_r: FeatureSet,
+               cfg: ORBConfig, intr: CameraIntrinsics,
+               impl: str | None = None):
+    matches = matching.stereo_match(feat_l, feat_r, cfg, impl=impl)
+    depth = matching.sad_rectify(img_l, img_r, feat_l, feat_r, matches,
+                                 cfg, intr, impl=impl)
+    return matches, depth
+
+
+def process_stereo_frame(img_l, img_r, cfg: ORBConfig,
+                         intr: CameraIntrinsics,
+                         impl: str | None = None) -> StereoOutput:
+    feat_l, feat_r = extract_pair(img_l, img_r, cfg, impl=impl)
+    matches, depth = match_pair(img_l, img_r, feat_l, feat_r, cfg, intr,
+                                impl=impl)
+    return StereoOutput(feat_l, feat_r, matches, depth)
+
+
+def process_quad_frame(images: jnp.ndarray, cfg: ORBConfig,
+                       intr: CameraIntrinsics,
+                       impl: str | None = None) -> StereoOutput:
+    """images: (4, H, W) — [pair0_L, pair0_R, pair1_L, pair1_R].
+
+    The two stereo pairs run through identical module instances in
+    parallel (vmap over the pair axis); outputs have a leading (2,) axis.
+    """
+    pairs = images.reshape(2, 2, *images.shape[1:])
+    return jax.vmap(
+        lambda p: process_stereo_frame(p[0], p[1], cfg, intr, impl=impl)
+    )(pairs)
+
+
+def run_sequence(frames: jnp.ndarray, cfg: ORBConfig,
+                 intr: CameraIntrinsics,
+                 impl: str | None = None) -> StereoOutput:
+    """Reference (non-pipelined) schedule: FE+FM of each frame in order.
+
+    frames: (T, 4, H, W) -> StereoOutput with leading (T, 2) axes.
+    """
+    def body(_, frame):
+        out = process_quad_frame(frame, cfg, intr, impl=impl)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, frames)
+    return outs
+
+
+def run_sequence_pipelined(frames: jnp.ndarray, cfg: ORBConfig,
+                           intr: CameraIntrinsics,
+                           impl: str | None = None) -> StereoOutput:
+    """Fig. 4 schedule: FE(t) overlaps FM(t-1) inside one scan step.
+
+    Output step t holds the *completed* result of frame t-1 (one-frame
+    pipeline latency); step 0 is a zero-filled bubble.  The final frame's
+    FM runs in a drain step, so outputs cover all T frames shifted by 1:
+    returns StereoOutput with leading (T, 2) axes, aligned to frames
+    (i.e. after the shift/drain, out[t] corresponds to frames[t]).
+    """
+    t_total = frames.shape[0]
+
+    def fe(frame):
+        pairs = frame.reshape(2, 2, *frame.shape[1:])
+        return pairs, jax.vmap(
+            lambda p: extract_pair(p[0], p[1], cfg, impl=impl))(pairs)
+
+    def fm(pairs, feats):
+        feat_l, feat_r = feats
+        return jax.vmap(
+            lambda pl_, fl, fr: match_pair(pl_[0], pl_[1], fl, fr, cfg,
+                                           intr, impl=impl)
+        )(pairs, feat_l, feat_r)
+
+    # Pipeline prologue: FE of frame 0.
+    pairs0, feats0 = fe(frames[0])
+
+    def body(carry, frame):
+        pairs_prev, feats_prev = carry
+        # FM(t-1) and FE(t): no data dependence -> XLA may overlap.
+        matches, depth = fm(pairs_prev, feats_prev)
+        pairs_t, feats_t = fe(frame)
+        out = StereoOutput(feats_prev[0], feats_prev[1], matches, depth)
+        return (pairs_t, feats_t), out
+
+    (pairs_last, feats_last), outs = jax.lax.scan(
+        body, (pairs0, feats0), frames[1:])
+    # Drain: FM of the final frame.
+    matches, depth = fm(pairs_last, feats_last)
+    last = StereoOutput(feats_last[0], feats_last[1], matches, depth)
+    outs = jax.tree.map(
+        lambda xs, x: jnp.concatenate([xs, x[None]], axis=0), outs, last)
+    assert outs.matches.valid.shape[0] == t_total
+    return outs
+
+
+def pipeline_schedule(n_frames: int, t_fe_ms: float, t_fm_ms: float):
+    """Analytic Fig. 4 timeline for the frame-multiplexed discipline.
+
+    One FE module serves both channels (2 x t_fe per frame, serialized
+    L then R); FM(t) runs concurrently with FE(t+1).  Returns a dict of
+    per-frame (fe_start, fe_end, fm_start, fm_end) lists plus makespan
+    and steady-state frame period max(2 * t_fe, t_fm).
+    """
+    fe_start, fe_end, fm_start, fm_end = [], [], [], []
+    fe_free = 0.0
+    fm_free = 0.0
+    for n in range(n_frames):
+        s = fe_free
+        e = s + 2.0 * t_fe_ms               # L then R through the shared FE
+        fe_start.append(s)
+        fe_end.append(e)
+        ms = max(e, fm_free)
+        me = ms + t_fm_ms
+        fm_start.append(ms)
+        fm_end.append(me)
+        fe_free = e                          # FE(n+1) may start right away
+        fm_free = me
+    period = max(2.0 * t_fe_ms, t_fm_ms)
+    return {
+        "fe_start": fe_start, "fe_end": fe_end,
+        "fm_start": fm_start, "fm_end": fm_end,
+        "makespan_ms": fm_end[-1],
+        "steady_period_ms": period,
+        "serial_period_ms": 2.0 * t_fe_ms + t_fm_ms,
+    }

@@ -1,0 +1,100 @@
+"""Feature matching — the paper's Feature Matcher block (Fig. 3e).
+
+Stereo matcher (fused search-region decision + Hamming argmin, Pallas
+kernel) followed by SAD rectification (11x11 window, +-range sweep,
+Pallas kernel) and disparity/depth computation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import (CameraIntrinsics, DepthSet, FeatureSet,
+                              MatchSet, ORBConfig)
+from repro.kernels import ops
+
+
+def _meta(feat: FeatureSet) -> jnp.ndarray:
+    return jnp.stack([feat.xy[:, 0], feat.xy[:, 1],
+                      feat.level.astype(jnp.float32),
+                      feat.valid.astype(jnp.float32)], axis=-1)
+
+
+def stereo_match(feat_l: FeatureSet, feat_r: FeatureSet,
+                 cfg: ORBConfig, impl: str | None = None) -> MatchSet:
+    """Best Hamming match in the strip-like search region (Sec. II-C1)."""
+    dist, idx = ops.hamming_match(
+        feat_l.desc, _meta(feat_l), feat_r.desc, _meta(feat_r),
+        row_band=float(cfg.row_band),
+        max_disparity=float(cfg.max_disparity), impl=impl)
+    valid = (idx >= 0) & (dist <= cfg.max_hamming) & feat_l.valid
+    return MatchSet(right_index=jnp.where(valid, idx, 0),
+                    distance=dist, valid=valid)
+
+
+def _gather_patches(img: jnp.ndarray, xy: jnp.ndarray, ph: int, pw: int):
+    """Gather (ph, pw) patches centered at integer xy from an image.
+
+    Patches are clamped inside via edge padding; xy: (K, 2) float32."""
+    ry, rx = ph // 2, pw // 2
+    padded = jnp.pad(img.astype(jnp.float32), ((ry, ry), (rx, rx)),
+                     mode="edge")
+    xs = jnp.clip(jnp.round(xy[:, 0]).astype(jnp.int32), 0,
+                  img.shape[1] - 1)
+    ys = jnp.clip(jnp.round(xy[:, 1]).astype(jnp.int32), 0,
+                  img.shape[0] - 1)
+
+    def one(x, y):
+        return jax.lax.dynamic_slice(padded, (y, x), (ph, pw))
+
+    return jax.vmap(one)(xs, ys)
+
+
+def sad_rectify(img_l: jnp.ndarray, img_r: jnp.ndarray,
+                feat_l: FeatureSet, feat_r: FeatureSet, matches: MatchSet,
+                cfg: ORBConfig, intr: CameraIntrinsics,
+                impl: str | None = None) -> DepthSet:
+    """SAD rectification + disparity/depth (Sec. II-C2, III-D).
+
+    Operates on level-0 images with level-0 coordinates (the pyramid-
+    multiplexed FM block of the paper processes both levels; our static
+    top-K already merged levels into level-0 coords).
+    """
+    p = cfg.sad_window
+    r = cfg.sad_range
+    xy_l = feat_l.xy
+    xy_r = feat_r.xy[matches.right_index]
+
+    left_patches = _gather_patches(img_l, xy_l, p, p)
+    right_strips = _gather_patches(img_r, xy_r, p, p + 2 * r)
+    table = ops.sad_search(left_patches, right_strips, impl=impl)
+    best = jnp.argmin(table, axis=1).astype(jnp.float32) - float(r)
+
+    x_r_rect = xy_r[:, 0] + best
+    disparity = xy_l[:, 0] - x_r_rect
+    valid = matches.valid & (disparity > 0.5)
+    depth = jnp.where(valid, intr.fx * intr.baseline
+                      / jnp.maximum(disparity, 0.5), 0.0)
+    xy_right = jnp.stack([x_r_rect, xy_r[:, 1]], axis=-1)
+    return DepthSet(disparity=jnp.where(valid, disparity, 0.0),
+                    depth=depth, xy_right=xy_right, valid=valid)
+
+
+def temporal_match(feat_a: FeatureSet, feat_b: FeatureSet,
+                   cfg: ORBConfig, search_radius: float = 48.0,
+                   impl: str | None = None) -> MatchSet:
+    """Frame-to-frame matching for the VO backend: same kernel, wider
+    square search region (band in y, +-radius in x via shifted meta)."""
+    meta_a = _meta(feat_a)
+    meta_b = _meta(feat_b)
+    # Reuse the [0, max_disparity] window as [-radius, +radius] by
+    # shifting the left x coordinate.
+    meta_a = meta_a.at[:, 0].add(search_radius)
+    dist, idx = ops.hamming_match(
+        feat_a.desc, meta_a, feat_b.desc, meta_b,
+        row_band=search_radius, max_disparity=2.0 * search_radius,
+        impl=impl)
+    valid = (idx >= 0) & (dist <= cfg.max_hamming) & feat_a.valid
+    return MatchSet(right_index=jnp.where(valid, idx, 0),
+                    distance=dist, valid=valid)

@@ -1,0 +1,36 @@
+"""ORB feature extraction — the paper's Feature Extractor block (Fig. 3d).
+
+Per level: resize -> FAST detect -> orientation -> smoothing -> rBRIEF,
+then merge levels into one static-shape FeatureSet with level-0 coords.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import brief, fast, pyramid
+from repro.core.types import FeatureSet, ORBConfig
+
+
+def extract_features(image: jnp.ndarray, cfg: ORBConfig,
+                     impl: str | None = None) -> FeatureSet:
+    """image: (H, W) uint8/float in [0, 255] -> FeatureSet of K features."""
+    levels = pyramid.build_pyramid(image, cfg)
+    ks = cfg.features_per_level()
+    parts = []
+    for lvl, (img_l, k_l) in enumerate(zip(levels, ks)):
+        xy, score, theta, valid = fast.detect(img_l, cfg, k_l, impl=impl)
+        smoothed = brief.smooth(img_l, cfg, impl=impl)
+        desc = brief.describe(smoothed, xy, theta)
+        scale = cfg.scale_factor ** lvl
+        parts.append(FeatureSet(
+            xy=xy.astype(jnp.float32) * scale,
+            level=jnp.full((k_l,), lvl, dtype=jnp.int32),
+            score=score,
+            theta=theta,
+            desc=desc,
+            valid=valid,
+        ))
+    return FeatureSet(*[jnp.concatenate([getattr(p, f) for p in parts],
+                                        axis=0)
+                        for f in FeatureSet._fields])

@@ -1,0 +1,32 @@
+"""Image pyramid (paper Sec. III-C, "Image Resizing").
+
+Two-layer pyramid with bilinear interpolation; 1280x720 -> 1067x600 at
+the paper's 1.2 scale factor.  Works on float32 images in [0, 255]; the
+quantized path rounds back to uint8 levels, matching the FPGA's 8-bit
+datapath.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ORBConfig
+
+
+def bilinear_resize(image: jnp.ndarray, out_hw: tuple[int, int]) -> jnp.ndarray:
+    """Bilinear resize of a single-channel image (H, W) -> out_hw."""
+    img = image.astype(jnp.float32)
+    return jax.image.resize(img, out_hw, method="bilinear")
+
+
+def build_pyramid(image: jnp.ndarray, cfg: ORBConfig) -> list[jnp.ndarray]:
+    """Return ``cfg.n_levels`` float32 images; level 0 is the input."""
+    img = image.astype(jnp.float32)
+    levels = [img]
+    for lvl in range(1, cfg.n_levels):
+        out = bilinear_resize(levels[-1], cfg.level_shape(lvl))
+        if cfg.quantized:
+            out = jnp.round(jnp.clip(out, 0.0, 255.0))
+        levels.append(out)
+    return levels

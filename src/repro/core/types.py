@@ -1,0 +1,107 @@
+"""Shared dataclasses / pytrees for the visual frontend."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class FeatureSet(NamedTuple):
+    """Static-shape feature list (top-K with validity mask).
+
+    The FPGA emits a variable-length feature stream into RAM; XLA needs
+    static shapes, so we keep the K strongest corners and a mask.  All
+    arrays share the leading K axis.
+    """
+
+    xy: jnp.ndarray       # (K, 2) float32 — (x, y) in *level-0* pixel coords
+    level: jnp.ndarray    # (K,)  int32   — pyramid level the point came from
+    score: jnp.ndarray    # (K,)  float32 — FAST corner score
+    theta: jnp.ndarray    # (K,)  float32 — patch orientation (radians)
+    desc: jnp.ndarray     # (K, 8) uint32 — 256-bit rBRIEF descriptor
+    valid: jnp.ndarray    # (K,)  bool
+
+    @property
+    def k(self) -> int:
+        return self.xy.shape[0]
+
+    def count(self) -> jnp.ndarray:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+
+class MatchSet(NamedTuple):
+    """Stereo matches: one candidate per left feature."""
+
+    right_index: jnp.ndarray   # (K,) int32 — index into right FeatureSet
+    distance: jnp.ndarray      # (K,) int32 — Hamming distance of best match
+    valid: jnp.ndarray         # (K,) bool  — passed band/disparity/dist gates
+
+    def count(self) -> jnp.ndarray:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+
+class DepthSet(NamedTuple):
+    """Per-left-feature disparity/depth after SAD rectification."""
+
+    disparity: jnp.ndarray     # (K,) float32 — rectified disparity (px)
+    depth: jnp.ndarray         # (K,) float32 — fx * baseline / disparity (m)
+    xy_right: jnp.ndarray      # (K, 2) float32 — rectified right coordinates
+    valid: jnp.ndarray         # (K,) bool
+
+    def count(self) -> jnp.ndarray:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class CameraIntrinsics:
+    fx: float = 460.0
+    fy: float = 460.0
+    cx: float = 640.0
+    cy: float = 360.0
+    baseline: float = 0.12    # stereo baseline in metres
+
+    def scaled(self, s: float) -> "CameraIntrinsics":
+        return CameraIntrinsics(self.fx * s, self.fy * s,
+                                self.cx * s, self.cy * s, self.baseline)
+
+
+@dataclasses.dataclass(frozen=True)
+class ORBConfig:
+    """Visual-frontend configuration (paper defaults)."""
+
+    height: int = 720
+    width: int = 1280
+    n_levels: int = 2               # two-layer pyramid (Sec. III-C)
+    scale_factor: float = 1.2       # 1280x720 -> 1067x600, as in the paper
+    max_features: int = 1000        # static top-K (paper measures ~961)
+    fast_threshold: int = 20        # FAST intensity threshold
+    nms: bool = True                # 3x3 non-max suppression on score map
+    border: int = 16                # keep 31x31 patches inside the image
+    # --- matching ---
+    row_band: int = 2               # strip-like epipolar search half-height
+    max_disparity: int = 96         # search range x_L - x_R in [0, max_disp]
+    max_hamming: int = 64           # match acceptance threshold (of 256)
+    # --- SAD rectification ---
+    sad_window: int = 11            # 11x11 patch (Sec. III-D)
+    sad_range: int = 5              # slide +-range pixels
+    # --- arithmetic (paper Sec. III-C word-length optimization) ---
+    quantized: bool = True          # uint8 image path with int32 accumulators
+
+    def level_shape(self, level: int) -> tuple[int, int]:
+        """(H, W) of a pyramid level, matching the paper's rounding."""
+        h, w = self.height, self.width
+        for _ in range(level):
+            h = int(round(h / self.scale_factor))
+            w = int(round(w / self.scale_factor))
+        return h, w
+
+    def features_per_level(self) -> list[int]:
+        """Split the top-K budget across levels proportional to area."""
+        areas = [self.level_shape(l)[0] * self.level_shape(l)[1]
+                 for l in range(self.n_levels)]
+        total = sum(areas)
+        ks = [max(1, int(self.max_features * a / total)) for a in areas]
+        ks[0] += self.max_features - sum(ks)
+        return ks

@@ -1,0 +1,147 @@
+"""Synthetic quad-camera scene simulator.
+
+Stands in for the paper's camera hardware: a deterministic 3-D landmark
+field rendered into four pinhole views (two stereo pairs, front/back)
+with known ego-motion, so every frontend/backend quantity has ground
+truth.  Landmarks render as small high-contrast squares (strong FAST
+corners); the background is a smooth gradient plus mild noise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import CameraIntrinsics
+
+
+@dataclasses.dataclass(frozen=True)
+class SceneConfig:
+    n_points: int = 400
+    height: int = 480
+    width: int = 640
+    stamp: int = 5               # landmark square size (px)
+    depth_range: tuple[float, float] = (2.0, 12.0)
+    spread: float = 8.0          # lateral landmark spread (m)
+    noise_std: float = 2.0
+    baseline: float = 0.12       # stereo baseline (m); larger -> finer depth
+    seed: int = 0
+
+
+def default_intrinsics(cfg: SceneConfig) -> CameraIntrinsics:
+    f = 0.72 * cfg.width
+    return CameraIntrinsics(fx=f, fy=f, cx=cfg.width / 2.0,
+                            cy=cfg.height / 2.0, baseline=cfg.baseline)
+
+
+def make_landmarks(cfg: SceneConfig) -> tuple[np.ndarray, np.ndarray]:
+    """(N, 3) world points (both hemispheres) + (N, S, S) texture stamps.
+
+    Each landmark gets a unique high-contrast texture patch so BRIEF
+    descriptors are discriminative (uniform squares would alias and
+    poison temporal matching — real scenes are textured)."""
+    rng = np.random.RandomState(cfg.seed)
+    n = cfg.n_points
+    x = rng.uniform(-cfg.spread, cfg.spread, n)
+    y = rng.uniform(-cfg.spread / 2, cfg.spread / 2, n)
+    z = rng.uniform(*cfg.depth_range, n)
+    z[n // 2:] *= -1.0            # back hemisphere for the rear pair
+    pts = np.stack([x, y, z], axis=1)
+    s = cfg.stamp
+    base = rng.uniform(90.0, 250.0, n)
+    texture = rng.uniform(0.4, 1.0, (n, s, s)) * base[:, None, None]
+    texture[:, s // 2, s // 2] = 255.0      # bright center -> strong corner
+    return pts, texture
+
+
+def _background(cfg: SceneConfig, seed: int) -> jnp.ndarray:
+    rng = np.random.RandomState(seed + 77)
+    yy, xx = np.mgrid[0:cfg.height, 0:cfg.width]
+    grad = 40.0 + 30.0 * (xx / cfg.width) + 20.0 * (yy / cfg.height)
+    noise = rng.normal(0.0, cfg.noise_std, (cfg.height, cfg.width))
+    return jnp.asarray(np.clip(grad + noise, 0, 255).astype(np.float32))
+
+
+def render_view(pts_cam: jnp.ndarray, texture: jnp.ndarray,
+                intr: CameraIntrinsics, cfg: SceneConfig,
+                bg: jnp.ndarray) -> jnp.ndarray:
+    """Project camera-frame points and stamp textured patches.
+
+    pts_cam: (N, 3); texture: (N, S, S)."""
+    z = pts_cam[:, 2]
+    vis = z > 0.5
+    zs = jnp.where(vis, z, 1.0)
+    u = jnp.round(intr.fx * pts_cam[:, 0] / zs + intr.cx).astype(jnp.int32)
+    v = jnp.round(intr.fy * pts_cam[:, 1] / zs + intr.cy).astype(jnp.int32)
+    r = cfg.stamp // 2
+    inb = (vis & (u >= r) & (u < cfg.width - r)
+           & (v >= r) & (v < cfg.height - r))
+    u = jnp.where(inb, u, 0)
+    v = jnp.where(inb, v, 0)
+    img = bg
+    # Stamp texture patches by max-composite: static loop over offsets.
+    for dy in range(-r, r + 1):
+        for dx in range(-r, r + 1):
+            val = jnp.where(inb, texture[:, dy + r, dx + r], 0.0)
+            img = img.at[v + dy, u + dx].max(val)
+    return jnp.clip(img, 0.0, 255.0)
+
+
+def camera_poses(rig_r: jnp.ndarray, rig_t: jnp.ndarray,
+                 intr: CameraIntrinsics):
+    """World->camera transforms for the 4 cameras of the rig.
+
+    Rig frame: +z forward.  Cameras: [front_L, front_R, back_L, back_R];
+    right cameras offset +baseline along the rig x axis; the back pair
+    looks along -z (180-degree yaw).
+    """
+    flip = jnp.asarray([[-1.0, 0.0, 0.0], [0.0, 1.0, 0.0],
+                        [0.0, 0.0, -1.0]])
+    poses = []
+    for pair, r_pair in ((0, jnp.eye(3)), (1, flip)):
+        for side in (0, 1):
+            off = jnp.asarray([side * intr.baseline, 0.0, 0.0])
+            # camera rotation in world: rig_r @ r_pair; position:
+            # rig_t + rig_r @ r_pair @ off
+            r_wc = rig_r @ r_pair
+            t_w = rig_t + r_wc @ off
+            poses.append((r_wc, t_w))
+    return poses
+
+
+def render_quad(pts_world: jnp.ndarray, texture: jnp.ndarray,
+                rig_r: jnp.ndarray, rig_t: jnp.ndarray,
+                intr: CameraIntrinsics, cfg: SceneConfig) -> jnp.ndarray:
+    """(4, H, W) images for the rig at pose (rig_r, rig_t)."""
+    views = []
+    for i, (r_wc, t_w) in enumerate(camera_poses(rig_r, rig_t, intr)):
+        pts_cam = (pts_world - t_w) @ r_wc          # == r_wc^T applied rowwise
+        bg = _background(cfg, seed=cfg.seed + i)
+        views.append(render_view(pts_cam, jnp.asarray(texture), intr,
+                                 cfg, bg))
+    return jnp.stack(views)
+
+
+def render_sequence(cfg: SceneConfig, n_frames: int,
+                    step_t: tuple[float, float, float] = (0.05, 0.0, 0.10),
+                    yaw_per_frame: float = 0.01):
+    """Deterministic trajectory: constant twist. Returns
+    (frames (T, 4, H, W), rig poses [(R, t)], intrinsics)."""
+    pts, tex = make_landmarks(cfg)
+    pts = jnp.asarray(pts)
+    intr = default_intrinsics(cfg)
+    frames, poses = [], []
+    r = jnp.eye(3)
+    t = jnp.zeros((3,))
+    dt = jnp.asarray(step_t)
+    c, s = np.cos(yaw_per_frame), np.sin(yaw_per_frame)
+    dr = jnp.asarray([[c, 0.0, s], [0.0, 1.0, 0.0], [-s, 0.0, c]])
+    for _ in range(n_frames):
+        frames.append(render_quad(pts, tex, r, t, intr, cfg))
+        poses.append((r, t))
+        t = t + r @ dt
+        r = r @ dr
+    return jnp.stack(frames), poses, intr

@@ -1,0 +1,46 @@
+"""Deterministic sharded synthetic token pipeline.
+
+Every batch is a pure function of (seed, step): restart at step k
+reproduces byte-identical batches with no iterator state to checkpoint
+(the data-side half of fault tolerance).  Sequences carry an induction
+structure (second half repeats the first half with a fixed stride-shift)
+so that a small model measurably learns — loss drops well below the
+uniform-entropy floor on the copyable half.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenDataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    copy_frac: float = 0.5        # tail fraction that repeats the head
+
+
+def get_batch(c: TokenDataConfig, step: int | jnp.ndarray) -> dict:
+    """(global_batch, seq_len) int32 tokens for `step` (jit-safe)."""
+    key = jax.random.fold_in(jax.random.key(c.seed), step)
+    head_len = int(c.seq_len * (1.0 - c.copy_frac))
+    head = jax.random.randint(
+        key, (c.global_batch, head_len), 0, c.vocab, dtype=jnp.int32)
+    reps = c.seq_len - head_len
+    idx = jnp.arange(reps) % head_len
+    tail = head[:, idx]
+    return {"tokens": jnp.concatenate([head, tail], axis=1)}
+
+
+def host_shard(batch: dict, host_id: int, n_hosts: int) -> dict:
+    """Per-host slice of the global batch (multi-host data loading:
+    each host materializes only its rows)."""
+    def f(x):
+        per = x.shape[0] // n_hosts
+        return x[host_id * per:(host_id + 1) * per]
+    return jax.tree.map(f, batch)

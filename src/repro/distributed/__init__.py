@@ -1,0 +1,8 @@
+"""Distribution layer: logical-axis sharding, meshes, gradient
+compression, pipeline parallelism, elastic re-meshing."""
+
+from repro.distributed.sharding import (Rules, constrain, current_ctx,
+                                        resolve, spec_for, use_sharding)
+
+__all__ = ["Rules", "constrain", "current_ctx", "resolve", "spec_for",
+           "use_sharding"]

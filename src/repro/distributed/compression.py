@@ -1,0 +1,104 @@
+"""Compressed gradient all-reduce (int8 ring), via shard_map.
+
+The TPU analog of the paper's 8-bit word-length optimization, applied to
+the DP gradient sync: a ring reduce-scatter whose wire format is int8
+with one f32 scale per shard-chunk, followed by an int8 all-gather.
+Wire volume: 2 x size/4 bytes vs 2 x size (f32 AR) — ~4x reduction, at
+a bounded quantization error (tested).
+
+Accumulation stays exact-ish: each hop dequantizes, adds in f32, and
+requantizes, so error grows O(log-ish) with ring length rather than
+compounding catastrophically; relative error is bounded by ~1/127 per
+hop on the running partial sum.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as Ps
+
+
+def _quant(x: jnp.ndarray):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def _ring_allreduce_int8(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """All-reduce over mesh axis `axis` with int8 wire format.
+
+    x: per-device f32 vector (flat, length % n == 0; caller pads).
+    Classic two-phase ring: n-1 reduce-scatter hops + n-1 all-gather
+    hops, each hop sending size/n int8 + one f32 scale.
+    """
+    n = jax.lax.axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    chunks = x.reshape(n, -1)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    # reduce-scatter: after n-1 hops, device d owns the full sum of
+    # chunk (d + 1) % n
+    def rs_body(i, carry):
+        acc = carry                       # (n, c) running per-chunk sums
+        send_idx = (me - i) % n
+        q, s = _quant(acc[send_idx])
+        q2 = jax.lax.ppermute(q, axis, perm)
+        s2 = jax.lax.ppermute(s, axis, perm)
+        recv_idx = (me - i - 1) % n
+        acc = acc.at[recv_idx].add(_dequant(q2, s2))
+        return acc
+
+    acc = jax.lax.fori_loop(0, n - 1, rs_body, chunks)
+    own = (me + 1) % n                    # chunk this device fully owns
+
+    # all-gather: circulate the owned chunk in int8
+    out = jnp.zeros_like(chunks)
+    q, s = _quant(acc[own])
+    out = out.at[own].set(_dequant(q, s))
+
+    def ag_body(i, carry):
+        out_c, q_c, s_c = carry
+        q2 = jax.lax.ppermute(q_c, axis, perm)
+        s2 = jax.lax.ppermute(s_c, axis, perm)
+        idx = (me - i) % n                # chunk that just arrived
+        out_c = out_c.at[idx].set(_dequant(q2, s2))
+        return out_c, q2, s2
+
+    out, _, _ = jax.lax.fori_loop(0, n - 1, ag_body, (out, q, s))
+    return out.reshape(x.shape)
+
+
+def compressed_psum(tree, mesh: Mesh, axis: str = "data"):
+    """Compressed all-reduce (sum) of a pytree of replicated-along-axis
+    f32 arrays.  Returns the summed tree.  Used by the compressed train
+    step to sync per-shard gradients over the DP axis."""
+    flat, treedef = jax.tree.flatten(tree)
+    sizes = [x.size for x in flat]
+    n = mesh.shape[axis]
+    cat = jnp.concatenate([x.reshape(-1) for x in flat])
+    pad = (-cat.size) % n
+    cat = jnp.pad(cat, (0, pad))
+
+    spec = Ps(*(None,) * cat.ndim)
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=spec,
+                       out_specs=spec, check_rep=False)
+    def run(v):
+        return _ring_allreduce_int8(v, axis)
+
+    summed = run(cat)[:cat.size - pad if pad else None]
+    if pad:
+        summed = summed[:sum(sizes)]
+    out, off = [], 0
+    for x, size in zip(flat, sizes):
+        out.append(summed[off:off + size].reshape(x.shape))
+        off += size
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,26 @@
+"""Elastic re-meshing: restore a checkpoint onto a different mesh.
+
+The checkpoint stores full (unsharded) host arrays; re-sharding is a
+device_put against the new mesh's resolved specs.  Combined with the
+divisibility-aware resolver this lets a job restart on half (or double)
+the chips after a pod failure — dims that no longer divide simply drop
+that mesh axis instead of failing.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro import checkpoint
+from repro.distributed.sharding import Rules, use_sharding
+from repro.models.params import param_specs
+from jax.sharding import NamedSharding
+
+
+def reshard_restore(ckpt_dir: str, step: int, like, schema, mesh,
+                    rules: Rules):
+    """Restore `like`-structured params onto `mesh` under `rules`."""
+    with use_sharding(mesh, rules):
+        specs = param_specs(schema)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+    return checkpoint.restore(ckpt_dir, step, like, shardings)

@@ -1,0 +1,73 @@
+"""GPipe-style pipeline parallelism over a mesh axis, via shard_map.
+
+The stack is split into S stages (params stacked on a leading stage
+axis, sharded over the chosen mesh axis); a microbatched forward runs
+the classic (M + S - 1)-tick schedule where activations hop stage ->
+stage+1 through ``ppermute`` each tick.  Stage s sits idle for s ticks
+(the pipeline bubble): utilization = M / (M + S - 1).
+
+This is the optional PP wrapper (production cells default to DP over
+the pod axis); it is demonstrated + compiled on a reduced config in the
+dry-run and equivalence-tested against the serial stack in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as Ps
+
+
+def pipeline_forward(stage_fn, mesh: Mesh, axis: str, stage_params,
+                     x_micro: jnp.ndarray) -> jnp.ndarray:
+    """Run ``stage_fn(params_s, x)`` over S stages for M microbatches.
+
+    stage_params: pytree with leading stage axis (sharded over `axis`).
+    x_micro: (M, micro_batch, ...) microbatched input (replicated).
+    Returns (M, micro_batch, ...) outputs, as if applied serially.
+    """
+    n_stages = mesh.shape[axis]
+    m = x_micro.shape[0]
+    ticks = m + n_stages - 1
+
+    p_spec = jax.tree.map(lambda _: Ps(axis), stage_params)
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(p_spec, Ps()), out_specs=Ps(),
+        check_rep=False)
+    def run(params, xm):
+        params = jax.tree.map(lambda a: a[0], params)   # local stage slice
+        sid = jax.lax.axis_index(axis)
+        act = jnp.zeros_like(xm[0])
+        out = jnp.zeros_like(xm)
+
+        def tick(t, carry):
+            act_c, out_c = carry
+            # stage 0 ingests microbatch t; others take the hop input
+            x_in = jnp.where(sid == 0,
+                             xm[jnp.clip(t, 0, m - 1)], act_c)
+            y = stage_fn(params, x_in)
+            # completed microbatch index at the last stage
+            done = t - (n_stages - 1)
+            out_c = jax.lax.cond(
+                (sid == n_stages - 1) & (done >= 0) & (done < m),
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.maximum(done, 0), 0),
+                lambda o: o, out_c)
+            # hop activations to the next stage
+            act_next = jax.lax.ppermute(y, axis, perm)
+            return act_next, out_c
+
+        act, out = jax.lax.fori_loop(0, ticks, tick, (act, out))
+        # only the last stage holds real outputs; broadcast them
+        out = jax.lax.psum(
+            jnp.where(sid == n_stages - 1, out, jnp.zeros_like(out)),
+            axis)
+        return out
+
+    return run(stage_params, x_micro)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (FE + FM).
+
+fast_detect    — FAST-9/16 corner score map (stencil, halo'd VMEM tiles)
+gaussian_blur  — fused separable 7x7 Gaussian (line-buffer analog)
+hamming_match  — fused search-region + Hamming argmin (FM front half)
+sad_rectify    — 11x11 SAD sweep (FM rectifier)
+
+ops.py dispatches kernels vs. the pure-jnp oracles in ref.py.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,139 @@
+"""Jit'd dispatch wrappers around the Pallas kernels and jnp oracles.
+
+Every op takes ``impl``:
+  - "ref"     — pure-jnp oracle (ref.py), any backend.
+  - "pallas"  — Pallas kernel; on CPU it automatically runs in
+                interpret mode (the kernel body executed in Python),
+                on TPU it compiles to Mosaic.
+  - None      — module default (``set_default_impl`` / REPRO_KERNEL_IMPL
+                env var; "ref" on CPU, "pallas" on TPU).
+
+The wrappers own all padding/unpadding so kernels see tile-aligned
+shapes and callers see exact shapes.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.fast_detect import (HALO, TILE_H, TILE_W,
+                                       fast_score_map_pallas)
+from repro.kernels.gaussian_blur import gaussian_blur7_pallas
+from repro.kernels.hamming_match import BIG, BK, hamming_match_pallas
+from repro.kernels.sad_rectify import sad_search_pallas
+
+_DEFAULT_IMPL: str | None = os.environ.get("REPRO_KERNEL_IMPL") or None
+
+
+def set_default_impl(impl: str | None) -> None:
+    global _DEFAULT_IMPL
+    assert impl in (None, "ref", "pallas")
+    _DEFAULT_IMPL = impl
+
+
+def resolve_impl(impl: str | None) -> str:
+    if impl is not None:
+        return impl
+    if _DEFAULT_IMPL is not None:
+        return _DEFAULT_IMPL
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_tiles(img: jnp.ndarray, halo: int, th: int, tw: int):
+    """Edge-pad by halo and zero-pad H/W up to tile multiples.
+
+    Returns (padded, (H, W)) where padded is ((H'+2h), (W'+2h))."""
+    h, w = img.shape
+    hp = (-h) % th
+    wp = (-w) % tw
+    padded = jnp.pad(img.astype(jnp.float32),
+                     ((halo, halo + hp), (halo, halo + wp)), mode="edge")
+    return padded, (h, w)
+
+
+def fast_score_map(img: jnp.ndarray, threshold: float,
+                   impl: str | None = None) -> jnp.ndarray:
+    """(H, W) image -> (H, W) float32 FAST-9/16 corner score map."""
+    if resolve_impl(impl) == "ref":
+        return _ref.fast_score_map(img, threshold)
+    padded, (h, w) = _pad_tiles(img, HALO, TILE_H, TILE_W)
+    out = fast_score_map_pallas(padded, threshold=float(threshold),
+                                interpret=_interpret())
+    return out[:h, :w]
+
+
+def gaussian_blur7(img: jnp.ndarray, quantized: bool = True,
+                   impl: str | None = None) -> jnp.ndarray:
+    """(H, W) image -> (H, W) float32 7x7-Gaussian-smoothed image."""
+    if resolve_impl(impl) == "ref":
+        return _ref.gaussian_blur7(img, quantized=quantized)
+    padded, (h, w) = _pad_tiles(img, HALO, TILE_H, TILE_W)
+    out = gaussian_blur7_pallas(padded, quantized=quantized,
+                                interpret=_interpret())
+    return out[:h, :w]
+
+
+def _pad_rows(x: jnp.ndarray, mult: int, fill=0):
+    n = x.shape[0]
+    p = (-n) % mult
+    if p == 0:
+        return x
+    pad_width = [(0, p)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad_width, constant_values=fill)
+
+
+def hamming_match(desc_l: jnp.ndarray, meta_l: jnp.ndarray,
+                  desc_r: jnp.ndarray, meta_r: jnp.ndarray, *,
+                  row_band: float, max_disparity: float,
+                  impl: str | None = None):
+    """Fused search-region + Hamming argmin (paper's FM front half).
+
+    desc_*: (K, 8) uint32; meta_*: (K, 4) float32 (x, y, level, valid).
+    Returns (best_dist (K,) int32 [BIG when no candidate], best_idx (K,)
+    int32 [-1 when no candidate])."""
+    k = desc_l.shape[0]
+    if resolve_impl(impl) == "ref":
+        dist = _ref.hamming_distance_matrix(desc_l, desc_r)
+        dx = meta_l[:, 0][:, None] - meta_r[:, 0][None, :]
+        dy = jnp.abs(meta_l[:, 1][:, None] - meta_r[:, 1][None, :])
+        mask = ((dy <= row_band) & (dx >= 0.0) & (dx <= max_disparity)
+                & (meta_l[:, 2][:, None] == meta_r[:, 2][None, :])
+                & (meta_l[:, 3][:, None] > 0.5)
+                & (meta_r[:, 3][None, :] > 0.5))
+        dist = jnp.where(mask, dist, BIG)
+        best = jnp.min(dist, axis=1)
+        idx = jnp.where(best >= BIG, -1,
+                        jnp.argmin(dist, axis=1).astype(jnp.int32))
+        return best.astype(jnp.int32), idx
+    # Pad to BK multiples with invalid rows (valid=0 masks them out).
+    dl = _pad_rows(desc_l, BK)
+    dr = _pad_rows(desc_r, BK)
+    ml = _pad_rows(meta_l, BK)
+    mr = _pad_rows(meta_r, BK)
+    dist, idx = hamming_match_pallas(dl, ml, dr, mr, row_band=float(row_band),
+                                     max_disparity=float(max_disparity),
+                                     interpret=_interpret())
+    dist, idx = dist[:k], idx[:k]
+    return dist, jnp.where(dist >= BIG, -1, idx)
+
+
+def sad_search(left_patches: jnp.ndarray, right_strips: jnp.ndarray,
+               impl: str | None = None) -> jnp.ndarray:
+    """(K, P, P) x (K, P, P+2R) patches -> (K, 2R+1) int32 SAD table."""
+    if resolve_impl(impl) == "ref":
+        return _ref.sad_search(left_patches, right_strips)
+    k = left_patches.shape[0]
+    lp = _pad_rows(left_patches, 128)
+    rs = _pad_rows(right_strips, 128)
+    return sad_search_pallas(lp, rs, interpret=_interpret())[:k]
+
+
+NO_MATCH_DIST = BIG

@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground-truth implementations: numerically straightforward,
+shape-polymorphic, no tiling.  ``ops.py`` dispatches between these and
+the Pallas kernels; tests assert exact/allclose agreement on shape and
+dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Bresenham circle of radius 3 — the 16 FAST taps, in order around the
+# circle, as (dx, dy) with y down.  (paper Sec. II-B1)
+CIRCLE16: tuple[tuple[int, int], ...] = (
+    (0, -3), (1, -3), (2, -2), (3, -1), (3, 0), (3, 1), (2, 2), (1, 3),
+    (0, 3), (-1, 3), (-2, 2), (-3, 1), (-3, 0), (-3, -1), (-2, -2), (-1, -3),
+)
+ARC_LEN = 9  # FAST-9/16: a corner needs >= 9 contiguous bright/dark taps
+
+
+def fast_score_map(img: jnp.ndarray, threshold: float) -> jnp.ndarray:
+    """FAST-9/16 corner score map.
+
+    score(p) = max(max_s min_{j<9} d[s+j], -min_s max_{j<9} d[s+j]) where
+    d[i] = I(circle_i) - I(p); a pixel is a corner iff score > threshold.
+    Returns float32 (H, W); 0 where not a corner.  Border pixels (3 px)
+    use edge padding and are masked downstream by the feature border.
+    """
+    img = img.astype(jnp.float32)
+    h, w = img.shape
+    pad = jnp.pad(img, 3, mode="edge")
+    taps = [
+        jax.lax.dynamic_slice(pad, (3 + dy, 3 + dx), (h, w)) - img
+        for dx, dy in CIRCLE16
+    ]
+    d = jnp.stack(taps)                        # (16, H, W)
+    dd = jnp.concatenate([d, d[: ARC_LEN - 1]], axis=0)   # wrap for arcs
+    bright = jnp.stack(
+        [jnp.min(dd[s : s + ARC_LEN], axis=0) for s in range(16)]
+    )                                           # (16, H, W) min over each arc
+    dark = jnp.stack(
+        [jnp.max(dd[s : s + ARC_LEN], axis=0) for s in range(16)]
+    )
+    score = jnp.maximum(jnp.max(bright, axis=0), -jnp.min(dark, axis=0))
+    return jnp.where(score > threshold, score, 0.0).astype(jnp.float32)
+
+
+# 7x7 Gaussian (sigma=2) with integer weights — the word-length-optimized
+# filter of paper Sec. III-C.  Integer taps keep the quantized path exact.
+GAUSS7_WEIGHTS_INT = np.array([1, 4, 8, 10, 8, 4, 1], dtype=np.int32)
+GAUSS7_NORM = int(GAUSS7_WEIGHTS_INT.sum())  # 36
+
+
+def gaussian_blur7(img: jnp.ndarray, quantized: bool = True) -> jnp.ndarray:
+    """Separable 7x7 Gaussian smoothing (paper's Image Smoothing module).
+
+    quantized=True reproduces the 8-bit datapath: integer taps, integer
+    accumulate, single rounding division at the end (exactly computable
+    in int32, so the Pallas kernel can match bit-for-bit).
+    """
+    w = jnp.asarray(GAUSS7_WEIGHTS_INT, dtype=jnp.float32)
+    img_f = img.astype(jnp.float32)
+    pad = jnp.pad(img_f, 3, mode="edge")
+    h, wid = img.shape
+    # Horizontal then vertical pass, as two explicit tap sums (streaming
+    # line-buffer analog; avoids conv_general_dilated for interpret parity).
+    horiz = sum(
+        w[k] * jax.lax.dynamic_slice(pad, (3, k), (h + 6, wid))
+        for k in range(7)
+    )                                             # (H+6, W), weight-summed x
+    vert = sum(
+        w[k] * jax.lax.dynamic_slice(horiz, (k, 0), (h, wid))
+        for k in range(7)
+    )                                             # (H, W)
+    if quantized:
+        # round-half-up of vert / norm^2, all-integer equivalent
+        return jnp.floor((vert + (GAUSS7_NORM * GAUSS7_NORM) / 2.0)
+                         / (GAUSS7_NORM * GAUSS7_NORM)).astype(jnp.float32)
+    return vert / float(GAUSS7_NORM * GAUSS7_NORM)
+
+
+def _popcount32(x: jnp.ndarray) -> jnp.ndarray:
+    """SWAR popcount of a uint32 array -> int32 (no native popcount on VPU)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def hamming_distance_matrix(desc_l: jnp.ndarray,
+                            desc_r: jnp.ndarray) -> jnp.ndarray:
+    """(K, 8) x (M, 8) uint32 descriptors -> (K, M) int32 Hamming distances."""
+    x = jnp.bitwise_xor(desc_l[:, None, :], desc_r[None, :, :])
+    return jnp.sum(_popcount32(x), axis=-1)
+
+
+def sad_search(left_patches: jnp.ndarray,
+               right_strips: jnp.ndarray) -> jnp.ndarray:
+    """SAD rectification sweep (paper Sec. II-C2 / III-D).
+
+    left_patches: (K, P, P) — window around each left feature.
+    right_strips: (K, P, P + 2R) — horizontal strip around the matched
+      right feature.
+    Returns (K, 2R + 1) int32 SAD values; caller argmins to re-locate F'.
+    """
+    k, p, _ = left_patches.shape
+    sweep = right_strips.shape[-1] - p + 1
+    lp = left_patches.astype(jnp.int32)
+    rs = right_strips.astype(jnp.int32)
+    sads = [
+        jnp.sum(jnp.abs(lp - jax.lax.dynamic_slice_in_dim(rs, s, p, axis=2)),
+                axis=(1, 2))
+        for s in range(sweep)
+    ]
+    return jnp.stack(sads, axis=1)

@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init); smoke tests and benches never import this
+# module, so they keep seeing the single real CPU device.
+
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config, shape_cells  # noqa: E402
+from repro.launch import hlo_stats, specs as specs_mod       # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
+                               make_production_mesh)
+from repro.models import lm  # noqa: E402
+from repro.models.params import P, logical_axes  # noqa: E402
+
+"""Multi-pod dry-run: AOT lower + compile every (architecture x shape)
+cell on the production meshes, and extract the roofline terms from the
+compiled artifact.  No arrays are allocated — inputs are
+ShapeDtypeStructs and parameters are abstract.
+
+  single-pod: (16, 16) over ("data", "model")        = 256 chips
+  multi-pod:  (2, 16, 16) over ("pod","data","model") = 512 chips
+
+Per cell we record: memory_analysis (proves it fits), per-device HLO
+FLOPs / HBM-write proxy / collective bytes (loop-aware, see
+hlo_stats.py), the three roofline terms, the dominant term, and
+MODEL_FLOPS / HLO_FLOPs (useful-compute ratio).
+"""
+
+
+def count_params_split(cfg) -> dict:
+    """(embed, expert, other) parameter counts from the schema axes."""
+    schema = lm.model_schema(cfg)
+    counts = {"embed": 0, "expert": 0, "other": 0}
+
+    def walk(node, path):
+        for k, v in node.items():
+            if isinstance(v, P):
+                n = 1
+                for s in v.shape:
+                    n *= s
+                if "vocab" in v.axes:
+                    counts["embed"] += n
+                elif "experts" in v.axes:
+                    counts["expert"] += n
+                else:
+                    counts["other"] += n
+            else:
+                walk(v, path + "/" + k)
+
+    walk(schema, "")
+    return counts
+
+
+def model_flops(cfg, cell) -> float:
+    """6·N_active·D train / 2·N_active·D serve (N excludes embeddings,
+    MoE experts scaled by top_k/E + shared)."""
+    c = count_params_split(cfg)
+    n_active = c["other"]
+    if cfg.n_experts:
+        n_active += c["expert"] * cfg.top_k / cfg.n_experts
+    # embedding lookup is gather (no matmul flops); lm head IS a matmul
+    n_active += cfg.d_model * cfg.vocab_padded
+    tokens = cell.global_batch * cell.seq_len
+    if cfg.family == "encdec":
+        # each token passes one of the two stacks: src half through the
+        # encoder, tgt half through the decoder (N counts both stacks)
+        tokens = tokens // 2
+    if cell.kind == "train":
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * cell.global_batch          # decode: 1 token
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool,
+             sharding_mode: str = "fsdp_tp",
+             seq_parallel: bool | None = None,
+             overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    cell = next(c for c in shape_cells(cfg) if c.name == cell_name)
+    rec = {"arch": arch, "cell": cell_name, "kind": cell.kind,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "mode": sharding_mode, "ok": False}
+    if not cell.applicable:
+        rec.update(skipped=True, skip_reason=cell.skip_reason)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    try:
+        t0 = time.time()
+        built = specs_mod.build_cell(cfg, cell, mesh, sharding_mode,
+                                     seq_parallel)
+        jit_kwargs = dict(in_shardings=built.in_shardings)
+        if built.out_shardings is not None:
+            jit_kwargs["out_shardings"] = built.out_shardings
+        # donation (production norm): train donates the state, decode
+        # donates the cache — removes the functional-update copy
+        if cell.kind == "train":
+            jit_kwargs["donate_argnums"] = (0,)
+        elif cell.kind == "decode":
+            jit_kwargs["donate_argnums"] = (2,)
+        lowered = jax.jit(built.step_fn, **jit_kwargs).lower(
+            *built.arg_specs)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        txt = compiled.as_text()
+        st = hlo_stats.analyze(txt)
+        ca = compiled.cost_analysis() or {}
+
+        # wire-volume weights: a ring all-reduce moves ~2x its payload
+        # per device; AG/RS/A2A/permute move ~1x
+        wire = sum(v * (2.0 if k == "all-reduce" else 1.0)
+                   for k, v in st.per_collective.items())
+        per_dev = {
+            "flops": st.flops,
+            "hbm_bytes": st.hbm_bytes,
+            "collective_bytes": st.collective_bytes,
+            "collective_wire_bytes": wire,
+        }
+        terms = {
+            "compute_s": st.flops / PEAK_FLOPS_BF16,
+            "memory_s": st.hbm_bytes / HBM_BW,
+            "collective_s": wire / ICI_BW,
+        }
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(cfg, cell)
+        hlo_global = st.flops * n_chips
+        rec.update(
+            ok=True,
+            lower_s=round(t1 - t0, 1), compile_s=round(t2 - t1, 1),
+            n_chips=n_chips,
+            memory_analysis={
+                "arg_bytes": mem.argument_size_in_bytes,
+                "out_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                # donated buffers alias in place on TPU; the CPU backend
+                # additionally copy-double-buffers while carries, which
+                # `alias` corrects for
+                "fits_16g": (mem.argument_size_in_bytes
+                             + mem.temp_size_in_bytes
+                             - mem.alias_size_in_bytes) < 16 * 1024**3,
+            },
+            per_device=per_dev,
+            per_collective={k: v for k, v in st.per_collective.items()},
+            cost_analysis_flops=float(ca.get("flops", 0.0)),
+            terms_s=terms,
+            dominant=dominant,
+            model_flops=mf,
+            useful_ratio=(mf / hlo_global) if hlo_global else 0.0,
+            step_time_bound_s=max(terms.values()),
+        )
+    except Exception as e:  # noqa: BLE001 — record, don't crash the sweep
+        rec.update(error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--cell", default="all",
+                    help="train_4k|prefill_32k|decode_32k|long_500k|all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--mode", default="fsdp_tp",
+                    choices=["tp", "fsdp_tp"])
+    ap.add_argument("--seq-parallel", default=None,
+                    choices=[None, "on", "off"])
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (hillclimb knob)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    cells = (["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+             if args.cell == "all" else [args.cell])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    sp = {None: None, "on": True, "off": False}[args.seq_parallel]
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for cell in cells:
+            for mp in meshes:
+                rec = run_cell(arch, cell, mp, args.mode, sp,
+                               overrides or None)
+                tag = f".{args.tag}" if args.tag else ""
+                fname = (f"{arch}.{cell}."
+                         f"{'multi' if mp else 'single'}{tag}.json")
+                with open(os.path.join(args.out, fname), "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = ("SKIP" if rec.get("skipped")
+                          else "OK" if rec["ok"] else "FAIL")
+                print(f"{status:4s} {arch:24s} {cell:12s} "
+                      f"{rec['mesh']:8s} "
+                      f"compile={rec.get('compile_s', '-')}s "
+                      f"dominant={rec.get('dominant', rec.get('error'))}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,355 @@
+"""HLO-text statistics for the roofline terms.
+
+``compiled.cost_analysis()`` visits a while body ONCE, so scanned-layer
+programs undercount FLOPs by ~n_layers (verified empirically).  We
+therefore parse the compiled HLO text:
+
+  * per-computation symbol tables (instruction -> result shape),
+  * dot/convolution FLOPs from result shape x contracted dims,
+  * collective result bytes per op kind,
+  * the call graph (fusion calls / to_apply / while bodies),
+  * while trip counts from XLA's ``known_trip_count`` backend_config
+    (fallback: the constant in the loop-condition compare),
+  * execution multipliers: an op inside a 48-deep layer scan counts 48x
+    (nested loops multiply).
+
+All sizes are PER-DEVICE (the module is the per-partition program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^\s*(?:\([^)]*\)|[\w\[\],{}]+)*\s*([a-z][\w\-]*)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_of(text: str):
+    """First shape literal: (dtype, dims tuple) or (None, ())."""
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None, ()
+    dt, dims = m.groups()
+    shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+    return dt, shape
+
+
+def _nbytes(dt, shape) -> int:
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = _DTYPE_BYTES[dt]
+    for d in shape:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    rest: str               # text after "name ="
+    shape: tuple            # (dtype, dims)
+    operands: list          # operand instruction names
+    is_root: bool = False
+    calls_cast: bool = False  # fusion classified as a cast artifact
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: list
+    table: dict             # name -> (dtype, dims)
+    whiles: list            # (body, cond, trip or None)
+    calls: list
+    by_name: dict = dataclasses.field(default_factory=dict)
+
+
+def parse_hlo(text: str) -> dict:
+    comps: dict = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        h = _HEADER_RE.match(line.strip())
+        if h:
+            cur = Computation(h.group(2), bool(h.group(1)), [], {}, [], [])
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip().startswith("}"):
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, rest = im.groups()
+        om = _OP_RE.match(rest)
+        # fallback: first "token(" occurrence
+        op = om.group(1) if om else ""
+        if not op:
+            toks = re.findall(r"([a-z][a-z0-9\-]*)\(", rest)
+            op = toks[0] if toks else ""
+        shape = _shape_of(rest)
+        # operand names: inside the first (...) after the op
+        operands = []
+        pm = re.search(re.escape(op) + r"\(([^)]*)\)", rest) if op else None
+        if pm:
+            operands = re.findall(r"%([\w\.\-]+)", pm.group(1))
+        ins = Instr(name, op, rest, shape, operands,
+                    is_root=line.lstrip().startswith("ROOT"))
+        cur.instrs.append(ins)
+        cur.table[name] = shape
+        cur.by_name[name] = ins
+        if op == "while":
+            bm = re.search(r"body=%?([\w\.\-]+)", rest)
+            cm = re.search(r"condition=%?([\w\.\-]+)", rest)
+            tm = _TRIP_RE.search(rest)
+            if bm and cm:
+                cur.whiles.append((bm.group(1), cm.group(1),
+                                   int(tm.group(1)) if tm else None))
+        else:
+            for cm in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)",
+                                  rest):
+                cur.calls.append(cm.group(1))
+            ccm = re.search(r"called_computations=\{([^}]*)\}", rest)
+            if ccm:
+                cur.calls.extend(re.findall(r"%?([\w\.\-]+)",
+                                            ccm.group(1)))
+    # second pass: mark cast-artifact fusions (operand deref needs it)
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                kind, _ = _classify_fusion(ins, comps)
+                ins.calls_cast = kind == "cast"
+    return comps
+
+
+def _cond_trip(comps: dict, cond_name: str) -> int:
+    """Fallback trip count: the constant compared against in the cond
+    (searches the cond and its called fusions)."""
+    seen = set()
+
+    def consts_and_compare(name):
+        comp = comps.get(name)
+        if comp is None or name in seen:
+            return None
+        seen.add(name)
+        consts = {}
+        for ins in comp.instrs:
+            cm = re.search(r"constant\((\d+)\)", ins.rest)
+            if cm:
+                consts[ins.name] = int(cm.group(1))
+        for ins in comp.instrs:
+            if ins.op == "compare":
+                for a in ins.operands:
+                    if a in consts:
+                        return consts[a]
+        for c in comp.calls:
+            r = consts_and_compare(c)
+            if r:
+                return r
+        return None
+
+    return consts_and_compare(cond_name) or 1
+
+
+def dot_flops(ins: Instr, table: dict) -> int:
+    out_dt, out_shape = ins.shape
+    out_n = 1
+    for d in out_shape:
+        out_n *= d
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    k = 1
+    if cm and ins.operands:
+        lhs = table.get(ins.operands[0], (None, ()))[1]
+        for i in (int(x) for x in cm.group(1).split(",") if x):
+            if i < len(lhs):
+                k *= lhs[i]
+    return 2 * out_n * k
+
+
+def conv_flops(ins: Instr, table: dict) -> int:
+    out_n = 1
+    for d in ins.shape[1]:
+        out_n *= d
+    k_n = 1
+    if len(ins.operands) >= 2:
+        rhs = table.get(ins.operands[1], (None, ()))[1]
+        for d in rhs:
+            k_n *= d
+    return 2 * out_n * k_n
+
+
+@dataclasses.dataclass
+class ModuleStats:
+    flops: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_count: int = 0
+    while_trips: dict = dataclasses.field(default_factory=dict)
+    dot_bytes: float = 0.0          # result bytes of dots
+    hbm_bytes: float = 0.0          # materialized-buffer write proxy
+
+
+# view-like / zero-traffic ops excluded from the HBM traffic proxy.
+# "copy" is also excluded: on this CPU backend the while-loop carries
+# are copy-double-buffered, which a TPU executable aliases in place —
+# counting them would charge phantom traffic to every scanned layer.
+# "convert" is excluded: the CPU backend legalizes every bf16 dot to
+# convert->f32-dot; a TPU MXU reads bf16 natively.  Consumers of a
+# convert dereference to the source tensor's bytes instead.
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "after-all",
+               "partition-id", "replica-id", "iota", "copy", "convert"}
+
+# ops a cast/view fusion may contain and still count as "no real compute"
+_VIEWLIKE = {"parameter", "constant", "convert", "bitcast", "copy",
+             "reshape", "transpose", "broadcast", "slice",
+             "dynamic-slice", "dynamic-update-slice", "select",
+             "select-n", "compare", "add", "subtract", "multiply",
+             "divide", "iota", "concatenate", "pad", "and", "or", "not",
+             "clamp", "maximum", "minimum", "lt", "gte"}
+
+
+def _bf16_equiv(shape) -> int:
+    dt, dims = shape
+    n = 2
+    for d in dims:
+        n *= d
+    return n if dt else 0
+
+
+def _deref_bytes(name: str, comp: "Computation", comps: dict) -> int:
+    """Bytes an operand costs to READ, dereferencing convert artifacts
+    (use the pre-convert source size — TPU reads bf16 natively)."""
+    ins = comp.by_name.get(name) if hasattr(comp, "by_name") else None
+    shape = comp.table.get(name, (None, ()))
+    if ins is None:
+        return _nbytes(*shape)
+    if ins.op == "convert" and ins.operands:
+        return _nbytes(*comp.table.get(ins.operands[0], (None, ())))
+    if ins.op == "fusion" and ins.calls_cast:
+        return _bf16_equiv(shape)
+    return _nbytes(*shape)
+
+
+def _classify_fusion(ins: Instr, comps: dict):
+    """(kind, payload): 'dus' -> update bytes; 'cast' -> bf16-equiv
+    result; 'compute' -> None."""
+    called = None
+    import re as _re
+    m = _re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+    if m:
+        called = comps.get(m.group(1))
+    if called is None:
+        return "compute", None
+    ops = {i.op for i in called.instrs}
+    if ops <= {"parameter", "convert", "bitcast", "copy"} \
+            and "convert" in ops:
+        # pure dtype-conversion fusion: CPU bf16-dot legalization; a
+        # TPU MXU reads bf16 natively — consumers charge their reads
+        return "pure_cast", 0
+    if ops <= _VIEWLIKE:
+        # a viewlike-only fusion containing a DUS is an in-place cache
+        # write (possibly wrapped in carry-dtype converts): charge the
+        # update window(s), not the buffer
+        dus = [i for i in called.instrs
+               if i.op == "dynamic-update-slice" and len(i.operands) > 1]
+        if dus:
+            upd = max(_nbytes(*called.table.get(i.operands[1],
+                                                (None, ())))
+                      for i in dus)
+            return "dus", upd
+        if "convert" in ops:
+            return "cast", None
+    return "compute", None
+
+
+def _traffic_bytes(ins: Instr, comp: "Computation", comps: dict) -> int:
+    """HBM traffic proxy for one scheduled instruction (reads+writes),
+    corrected for CPU-backend legalization artifacts."""
+    if ins.op in _NO_TRAFFIC:
+        return 0
+    if ins.op == "dynamic-slice":
+        return 2 * _nbytes(*ins.shape)
+    if ins.op == "dynamic-update-slice":
+        upd = comp.table.get(ins.operands[1], (None, ())) \
+            if len(ins.operands) > 1 else (None, ())
+        return 2 * _nbytes(*upd)
+    if ins.op == "fusion":
+        kind, payload = _classify_fusion(ins, comps)
+        if kind == "dus":
+            return 2 * payload
+        if kind == "pure_cast":
+            return 0
+        if kind == "cast":
+            # one slice-read + write at native (bf16) width
+            return 2 * _bf16_equiv(ins.shape)
+    total = _nbytes(*ins.shape)
+    for o in ins.operands:
+        total += _deref_bytes(o, comp, comps)
+    return total
+
+
+def analyze(text: str) -> ModuleStats:
+    comps = parse_hlo(text)
+    stats = ModuleStats()
+    entries = [c.name for c in comps.values() if c.is_entry]
+    if not entries:
+        called = set()
+        for c in comps.values():
+            called.update(c.calls)
+            for b, cn, _ in c.whiles:
+                called.update((b, cn))
+        entries = [n for n in comps if n not in called]
+
+    def walk(name: str, mult: float, depth: int, scheduled: bool):
+        """scheduled=True for entry/while-body computations, whose
+        instruction results are materialized buffers; fusion-called
+        computations contribute FLOPs but not HBM writes."""
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "dot":
+                stats.flops += mult * dot_flops(ins, comp.table)
+                stats.dot_bytes += mult * _nbytes(*ins.shape)
+            elif op == "convolution":
+                stats.flops += mult * conv_flops(ins, comp.table)
+            else:
+                base = op[:-6] if op.endswith("-start") else op
+                if base in COLLECTIVES:
+                    nb = mult * _nbytes(*ins.shape)
+                    stats.collective_bytes += nb
+                    stats.per_collective[base] += nb
+                    stats.collective_count += 1
+            if scheduled and not op.endswith("-done"):
+                stats.hbm_bytes += mult * _traffic_bytes(ins, comp,
+                                                         comps)
+        for b, cn, trip in comp.whiles:
+            t = trip if trip is not None else _cond_trip(comps, cn)
+            stats.while_trips[b] = t
+            walk(b, mult * t, depth + 1, True)
+            walk(cn, mult, depth + 1, False)
+        for cname in comp.calls:
+            walk(cname, mult, depth + 1, False)
+
+    for e in entries:
+        walk(e, 1.0, 0, True)
+    return stats

@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (smoke tests must keep seeing 1 CPU device;
+only launch/dryrun.py forces the 512-device placeholder platform).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over however many (host) devices exist — used by the
+    integration tests and the examples, never by the dry-run."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline terms (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link (~per-device collective bw)
+HBM_BYTES = 16 * 1024**3        # 16 GiB HBM per chip

@@ -1,0 +1,106 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+
+Prints the §Dry-run summary and the §Roofline table (single-pod) as
+markdown; EXPERIMENTS.md embeds the output.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+CELL_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(d: str, tag: str | None = None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        parts = os.path.basename(f)[:-5].split(".")
+        if tag is None and len(parts) != 3:
+            continue
+        if tag is not None and (len(parts) != 4 or parts[3] != tag):
+            continue
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(recs) -> str:
+    out = ["| arch | cell | mesh | status | compile s | per-dev args+temp-alias GiB | fits 16G |",
+           "|---|---|---|---|---|---|---|"]
+    key = lambda r: (r["arch"], CELL_ORDER.index(r["cell"]),  # noqa: E731
+                     r["mesh"])
+    for r in sorted(recs, key=key):
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['cell']} | {r['mesh']} | "
+                       f"SKIP ({r['skip_reason'][:40]}…) | | | |")
+            continue
+        if not r["ok"]:
+            out.append(f"| {r['arch']} | {r['cell']} | {r['mesh']} | "
+                       f"FAIL {r.get('error', '')[:60]} | | | |")
+            continue
+        m = r["memory_analysis"]
+        eff = (m["arg_bytes"] + m["temp_bytes"]
+               - m.get("alias_bytes", 0))
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} | OK | "
+            f"{r['compile_s']} | {fmt_bytes(eff)} | "
+            f"{'yes' if m['fits_16g'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs) -> str:
+    out = ["| arch | cell | compute s | memory s | collective s | "
+           "dominant | model TFLOPs | useful ratio | bound s |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    key = lambda r: (r["arch"], CELL_ORDER.index(r["cell"]))  # noqa: E731
+    for r in sorted([r for r in recs if r["mesh"] == "16x16"], key=key):
+        if r.get("skipped") or not r.get("ok"):
+            continue
+        t = r["terms_s"]
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {t['compute_s']:.4g} | "
+            f"{t['memory_s']:.4g} | {t['collective_s']:.4g} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{r['model_flops'] / 1e12:.3g} | "
+            f"{r['useful_ratio']:.3f} | {r['step_time_bound_s']:.4g} |")
+    return "\n".join(out)
+
+
+def summary(recs) -> str:
+    live = [r for r in recs if not r.get("skipped")]
+    ok = [r for r in live if r.get("ok")]
+    skip = [r for r in recs if r.get("skipped")]
+    lines = [f"cells: {len(recs)} total = {len(ok)} OK + "
+             f"{len(live) - len(ok)} FAIL + {len(skip)} documented skips"]
+    for r in live:
+        if not r.get("ok"):
+            lines.append(f"  FAIL {r['arch']} {r['cell']} {r['mesh']}: "
+                         f"{r.get('error', '')[:100]}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+    recs = load(args.dir, args.tag)
+    print("## Summary\n")
+    print(summary(recs))
+    print("\n## §Dry-run\n")
+    print(dryrun_table(recs))
+    print("\n## §Roofline (single-pod 16x16, TPU v5e terms)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""ShapeDtypeStruct input stand-ins + per-cell step builders.
+
+``input_specs`` produces weak-type-correct, shardable stand-ins for
+every model input of a (config x shape) cell — no device allocation, so
+the FULL production configs lower AOT on one CPU.  ``build_cell``
+returns (step_fn, arg_specs, in_shardings, out_shardings) ready for
+``jax.jit(...).lower(...)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as Ps
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed.sharding import Rules, resolve, use_sharding
+from repro.models import lm, transformer
+from repro.models.params import abstract_params, param_specs
+from repro.optim import AdamWConfig
+from repro.training.steps import TrainState, make_train_step
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def cell_rules(cfg: ModelConfig, cell: ShapeCell,
+               sharding_mode: str = "fsdp_tp",
+               seq_parallel: bool | None = None) -> Rules:
+    """Per-cell logical->mesh rules (the sharding *policy*).
+
+    - train/prefill: batch over (pod, data); TP over model; optional
+      context parallelism (q-seq over model) when heads cannot shard
+      (resolver ordering makes seq win only when it is enabled).
+    - decode: KV-cache seq over model (flash-decode style: XLA
+      partitions the softmax reductions); batch over (pod, data).
+    - long_500k (batch 1): cache seq over (data, model) — the whole
+      mesh splits one sequence's cache.
+    """
+    tp = 16
+    heads_shardable = cfg.n_heads > 0 and cfg.n_heads % tp == 0
+    if seq_parallel is None:
+        seq_parallel = not heads_shardable     # CP fallback
+    extra = {"capacity": ("data",)} if cfg.moe_cap_data else {}
+    if cell.kind in ("train", "prefill"):
+        return Rules.make(
+            sharding_mode=sharding_mode,
+            seq_axes=("model",) if seq_parallel else (),
+            cache_seq_axes=(), extra_acts=extra)
+    # decode
+    cache_axes = ("data", "model") if cell.global_batch == 1 \
+        else ("model",)
+    return Rules.make(sharding_mode=sharding_mode, seq_axes=(),
+                      cache_seq_axes=cache_axes, extra_acts=extra)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Model-input stand-ins for one cell (the spec's ``input_specs``)."""
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            text = s - cfg.vlm_prefix
+            return {"tokens": sds((b, text), jnp.int32),
+                    "patches": sds((b, cfg.vlm_prefix, cfg.d_model),
+                                   jnp.float32)}
+        if cfg.family == "encdec":
+            half = s // 2
+            return {"tokens": sds((b, half), jnp.int32),
+                    "frames": sds((b, half, cfg.d_model), jnp.float32)}
+        return {"tokens": sds((b, s), jnp.int32)}
+    # decode: one new token against a seq_len cache
+    return {"token": sds((b, 1), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Abstract decode cache for the cell (ShapeDtypeStructs)."""
+    b, s = cell.global_batch, cell.seq_len
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, b, s, dtype=dtype))
+    if cfg.family == "encdec":
+        # cross K/V covers the source half
+        cache = dict(cache)
+        for k in ("cross_k", "cross_v"):
+            old = cache[k]
+            cache[k] = sds((*old.shape[:-2], s // 2, old.shape[-1]),
+                           old.dtype)
+    return cache
+
+
+def batch_axes(cfg: ModelConfig, specs: dict) -> dict:
+    out = {}
+    for k, v in specs.items():
+        if k in ("tokens", "token"):
+            out[k] = ("batch", "seq")
+        elif k == "patches":
+            out[k] = ("batch", "seq", "act_embed")
+        elif k == "frames":
+            out[k] = ("batch", "seq", "act_embed")
+        else:
+            raise KeyError(k)
+    return out
+
+
+def cache_axes(cfg: ModelConfig, cache: dict) -> dict:
+    """Logical axes per cache entry (trees under ssm keys handled)."""
+    def kv_ax(ndim):
+        # (layers?, B, kv, S, D)
+        base = ("batch", "kv_heads", "cache_seq", "head_dim")
+        return ("layers",) * (ndim - 4) + base
+
+    out = {}
+    for k, v in cache.items():
+        if k in ("k", "v", "shared_k", "shared_v", "first_k", "first_v",
+                 "cross_k", "cross_v"):
+            out[k] = kv_ax(v.ndim)
+        elif k in ("ssm", "groups", "tail"):
+            # state dicts: h (L.., B, H, N, P); conv_* (L.., B, K-1, C)
+            bases = {"h": ("batch", "ssm_heads", "ssm_state", "head_dim"),
+                     "conv_x": ("batch", None, "conv_dim"),
+                     "conv_B": ("batch", None, "ssm_state"),
+                     "conv_C": ("batch", None, "ssm_state")}
+            out[k] = {
+                name: ("layers",) * (leaf.ndim - len(bases[name]))
+                + bases[name]
+                for name, leaf in v.items()}
+        else:
+            raise KeyError(k)
+    return out
+
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ModelConfig
+    cell: ShapeCell
+    step_fn: Any
+    arg_specs: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    rules: Rules
+    meta: dict
+
+
+def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh,
+               sharding_mode: str = "fsdp_tp",
+               seq_parallel: bool | None = None,
+               opt_cfg: AdamWConfig | None = None) -> Cell:
+    """Assemble the jit-able step + shardings for one dry-run cell."""
+    rules = cell_rules(cfg, cell, sharding_mode, seq_parallel)
+    schema = lm.model_schema(cfg)
+    with use_sharding(mesh, rules):
+        p_specs = param_specs(schema)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+    # serving runs bf16 weights (production norm — halves FSDP-gather
+    # wire bytes and avoids f32<->bf16 convert round-trips); training
+    # keeps f32 master params
+    p_dtype = jnp.float32 if cell.kind == "train" else jnp.bfloat16
+    params_abs = abstract_params(schema, p_dtype)
+    ins = input_specs(cfg, cell)
+    in_ax = batch_axes(cfg, ins)
+    with use_sharding(mesh, rules):
+        in_shard = jax.tree.map(
+            lambda l, a: NamedSharding(
+                mesh, resolve(rules.acts, a[:l.ndim], l.shape, mesh)),
+            ins, in_ax)
+
+    meta = {"arch": cfg.arch_id, "cell": cell.name, "kind": cell.kind,
+            "seq": cell.seq_len, "batch": cell.global_batch,
+            "mode": sharding_mode}
+
+    if cell.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        step = make_train_step(cfg, opt_cfg)
+        opt_abs = {
+            "mu": params_abs, "nu": params_abs,
+            "step": sds((), jnp.int32)}
+        state_abs = TrainState(params_abs, opt_abs)
+        opt_shard = {"mu": p_shard, "nu": p_shard,
+                     "step": NamedSharding(mesh, Ps())}
+        state_shard = TrainState(p_shard, opt_shard)
+
+        def fn(state, batch):
+            with use_sharding(mesh, rules):
+                return step(state, batch)
+
+        return Cell(cfg, cell, fn, (state_abs, ins),
+                    (state_shard, in_shard),
+                    (state_shard, None), rules, meta)
+
+    if cell.kind == "prefill":
+        def fn(params, batch):
+            with use_sharding(mesh, rules):
+                return lm.prefill(params, cfg, batch)
+
+        return Cell(cfg, cell, fn, (params_abs, ins),
+                    (p_shard, in_shard), None, rules, meta)
+
+    # decode
+    cache_abs = cache_specs(cfg, cell)
+    c_ax = cache_axes(cfg, cache_abs)
+    with use_sharding(mesh, rules):
+        cache_shard = jax.tree.map(
+            lambda l, a: NamedSharding(
+                mesh, resolve(rules.acts, a[:l.ndim], l.shape, mesh)),
+            cache_abs, c_ax, is_leaf=lambda x: isinstance(
+                x, jax.ShapeDtypeStruct))
+    pos_abs = sds((), jnp.int32)
+
+    def fn(params, token, cache, pos):
+        with use_sharding(mesh, rules):
+            return lm.decode_step(params, cfg, token, cache, pos)
+
+    return Cell(cfg, cell, fn,
+                (params_abs, ins["token"], cache_abs, pos_abs),
+                (p_shard, in_shard["token"], cache_shard,
+                 NamedSharding(mesh, Ps())),
+                (None, cache_shard), rules, meta)

@@ -1,0 +1,128 @@
+"""Fault-tolerant training driver.
+
+Run:  PYTHONPATH=src python -m repro.launch.train --arch gemma_7b \
+          --smoke --steps 200 --ckpt-dir /tmp/ckpt
+
+Fault-tolerance contract (tested in tests/test_substrate.py):
+  * checkpoint every --ckpt-every steps, atomic rename (a crash mid-save
+    can't corrupt the latest complete step);
+  * the data pipeline is a pure function of (seed, step) — nothing
+    stateful to restore;
+  * on start, resume from the newest complete checkpoint (crash/restart
+    or preemption = re-exec the same command);
+  * restart is bitwise identical to an uninterrupted run;
+  * --mesh-shape may differ across restarts (elastic re-mesh): restore
+    reshards onto the current mesh via the divisibility-aware resolver.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import checkpoint
+from repro.configs import get_config, get_smoke_config
+from repro.data.tokens import TokenDataConfig, get_batch
+from repro.distributed.sharding import Rules, use_sharding
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.models.params import init_params, param_specs
+from repro.optim import AdamWConfig
+from repro.training.steps import (TrainState, make_train_step,
+                                  train_state_init)
+from jax.sharding import NamedSharding
+
+
+def train_loop(cfg, data_cfg: TokenDataConfig, opt_cfg: AdamWConfig,
+               mesh, steps: int, ckpt_dir: str | None = None,
+               ckpt_every: int = 50, log_every: int = 10,
+               fail_at: int | None = None):
+    """Returns (state, history).  ``fail_at`` raises mid-run to exercise
+    the crash/restart path in tests."""
+    rules = Rules.make("fsdp_tp" if "model" in mesh.axis_names else "tp")
+    schema = lm.model_schema(cfg)
+    with use_sharding(mesh, rules):
+        p_specs = param_specs(schema)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+
+    start = checkpoint.latest_step(ckpt_dir) if ckpt_dir else None
+    if start is not None:
+        from repro.models.params import abstract_params
+        import jax.numpy as jnp
+        p_abs = abstract_params(schema)
+        like = TrainState(p_abs, {
+            "mu": p_abs, "nu": p_abs,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)})
+        host = checkpoint.restore_array_tree(ckpt_dir, start, like)
+        state = jax.tree.map(jax.numpy.asarray, host)
+        state = jax.device_put(state, TrainState(
+            p_shard, {"mu": p_shard, "nu": p_shard,
+                      "step": NamedSharding(
+                          mesh, jax.sharding.PartitionSpec())}))
+    else:
+        start = 0
+        params = init_params(schema, jax.random.key(0))
+        params = jax.device_put(params, p_shard)
+        state = train_state_init(params)
+
+    raw_step = make_train_step(cfg, opt_cfg)
+
+    def stepped(state, batch):
+        with use_sharding(mesh, rules):
+            return raw_step(state, batch)
+
+    step_jit = jax.jit(stepped, donate_argnums=(0,))
+
+    history = []
+    for s in range(start, steps):
+        if fail_at is not None and s == fail_at:
+            raise RuntimeError(f"injected failure at step {s}")
+        batch = get_batch(data_cfg, s)
+        t0 = time.time()
+        state, metrics = step_jit(state, batch)
+        loss = float(metrics["loss"])
+        history.append((s, loss))
+        if s % log_every == 0:
+            print(f"step {s:5d} loss {loss:.4f} "
+                  f"({time.time() - t0:.2f}s)", flush=True)
+        if ckpt_dir and (s + 1) % ckpt_every == 0:
+            checkpoint.save(ckpt_dir, s + 1, state)
+    if ckpt_dir:
+        checkpoint.save(ckpt_dir, steps, state)
+    return state, history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma_7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data-parallel", type=int, default=None)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    mesh = make_host_mesh(args.data_parallel, args.model_parallel)
+    data_cfg = TokenDataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                               global_batch=args.batch)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=20,
+                          total_steps=args.steps)
+    _, hist = train_loop(cfg, data_cfg, opt_cfg, mesh, args.steps,
+                         args.ckpt_dir, args.ckpt_every)
+    losses = [l for _, l in hist]
+    print(f"first-10 mean loss {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean {np.mean(losses[-10:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""LM-family architectures (assigned pool) on a shared functional stack."""
+
+from repro.models import lm, params
+
+__all__ = ["lm", "params"]

@@ -1,0 +1,90 @@
+"""Shared functional layers: norms, embeddings, RoPE, activations.
+
+All applies are pure functions of (params, inputs); activations are
+annotated with logical axes via ``constrain`` (no-ops without a mesh).
+Compute dtype is the caller's (bf16 in production, f32 in smoke tests);
+norms always accumulate in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.params import P
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+
+def rmsnorm_schema(dim: int) -> dict:
+    return {"scale": P((dim,), ("embed",), init="zeros")}
+
+
+def rmsnorm(params, x: jnp.ndarray, eps: float = 1e-6,
+            unit_offset: bool = True) -> jnp.ndarray:
+    """RMSNorm with the (1 + scale) parameterization (gemma convention;
+    scale is zero-init so ones-init archs use unit_offset=True too)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    w = (1.0 + scale) if unit_offset else scale
+    return (xn * w).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+
+def embed_schema(vocab: int, dim: int) -> dict:
+    # std = 1/sqrt(d): with gemma's sqrt(d) embed scaling the residual
+    # stream starts O(1), and tied logits stay O(1) at init.
+    return {"table": P((vocab, dim), ("vocab", "embed"), init="embed",
+                       scale=dim ** -0.5)}
+
+
+def embed(params, tokens: jnp.ndarray, scale_by_dim: bool = False):
+    x = jnp.take(params["table"], tokens, axis=0)
+    if scale_by_dim:
+        x = x * jnp.asarray(params["table"].shape[1] ** 0.5, x.dtype)
+    return constrain(x, "batch", "res_seq", "act_embed")
+
+
+def unembed(params, x: jnp.ndarray) -> jnp.ndarray:
+    """Project to (padded) vocab logits with the embedding table
+    (tied head) — callers with untied heads pass their own table."""
+    logits = jnp.einsum("...d,vd->...v", x, params["table"])
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (half-split convention)
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., seq, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq   # (..., S, half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# misc
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]

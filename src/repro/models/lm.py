@@ -1,0 +1,226 @@
+"""Top-level language model: embeddings -> stack -> head, loss, serving.
+
+Batch dicts (all inputs ShapeDtypeStruct-able for the dry-run):
+  train/prefill:  {"tokens": (B, S) i32}
+                  vlm adds    {"patches": (B, P, d) f32}  (stub frontend)
+                  encdec adds {"frames": (B, S_src, d) f32}  (stub audio)
+  decode:         {"token": (B, 1) i32} + cache + pos
+Loss positions with target id < 0 are masked (and the vlm prefix is
+masked automatically).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers, transformer
+from repro.models.params import P
+
+
+def model_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    out = {
+        "embed": layers.embed_schema(cfg.vocab_padded, d),
+        "stack": transformer.stack_schema(cfg),
+        "final_norm": layers.rmsnorm_schema(d),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = {
+            "w": P((d, cfg.vocab_padded), ("embed", "vocab"),
+                   scale=d ** -0.5)}
+    return out
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _head(params, cfg: ModelConfig, x) -> jnp.ndarray:
+    """Logits stay in the compute dtype (bf16 in production) — the loss
+    upcasts inside its reductions, so the (B, S, V) f32 tensor is never
+    materialized."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x,
+                            params["embed"]["table"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x,
+                            params["lm_head"]["w"].astype(x.dtype))
+    if cfg.final_softcap:
+        logits = layers.softcap(logits.astype(jnp.float32),
+                                cfg.final_softcap).astype(x.dtype)
+    # mask vocab padding
+    if cfg.vocab_padded != cfg.vocab:
+        pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad, jnp.asarray(-1e9, logits.dtype), logits)
+    return constrain(logits, "batch", "logits_seq", "vocab")
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens) -> jnp.ndarray:
+    x = layers.embed(params["embed"], tokens, scale_by_dim=cfg.embed_scale)
+    return x.astype(_dtype(cfg))
+
+
+def embed_inputs(params, cfg: ModelConfig, batch: dict):
+    """Returns (x, x_src, positions)."""
+    f = cfg.family
+    x_src = None
+    if f == "vlm":
+        tok = _embed_tokens(params, cfg, batch["tokens"])
+        patches = batch["patches"].astype(tok.dtype)
+        x = jnp.concatenate([patches, tok], axis=1)
+    elif f == "encdec":
+        x = _embed_tokens(params, cfg, batch["tokens"])
+        x_src = batch["frames"].astype(x.dtype)
+    else:
+        x = _embed_tokens(params, cfg, batch["tokens"])
+    x = constrain(x, "batch", "res_seq", "act_embed")
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return x, x_src, positions
+
+
+def forward_logits(params, cfg: ModelConfig, batch: dict,
+                   collect: bool = False):
+    x, x_src, positions = embed_inputs(params, cfg, batch)
+    h, aux, cache = transformer.forward(params["stack"], cfg, x, positions,
+                                        x_src=x_src, collect=collect)
+    h = layers.rmsnorm(params["final_norm"], h, eps=cfg.rms_eps,
+                       unit_offset=cfg.rms_unit_offset)
+    return _head(params, cfg, h), aux, cache
+
+
+def forward_hidden(params, cfg: ModelConfig, batch: dict):
+    """Forward to the final-norm hidden states (no head)."""
+    x, x_src, positions = embed_inputs(params, cfg, batch)
+    h, aux, _ = transformer.forward(params["stack"], cfg, x, positions,
+                                    x_src=x_src)
+    h = layers.rmsnorm(params["final_norm"], h, eps=cfg.rms_eps,
+                       unit_offset=cfg.rms_unit_offset)
+    return h, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict):
+    """Next-token cross entropy (+ z-loss + MoE aux).
+
+    Fused-head formulation: the (B, S, V) logits tensor is never
+    materialized — the head matmul + log-softmax run per seq CHUNK
+    inside a rematerialized scan, so peak loss memory is
+    (B, loss_chunk, V/model) regardless of sequence length (the
+    production trick for 256k vocabularies)."""
+    h, aux = forward_hidden(params, cfg, batch)
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":
+        # prefix patches occupy the first vlm_prefix positions; only
+        # text positions produce next-token targets
+        pad = jnp.full((tokens.shape[0], cfg.vlm_prefix), -1,
+                       tokens.dtype)
+        full = jnp.concatenate([pad, tokens], axis=1)
+    else:
+        full = tokens
+    targets = full[:, 1:]
+    h_in = h[:, :-1]
+    b, sm1, d = h_in.shape
+    c = min(cfg.loss_chunk, sm1)
+    pad_s = (-sm1) % c
+    if pad_s:
+        h_in = jnp.pad(h_in, ((0, 0), (0, pad_s), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad_s)),
+                          constant_values=-1)
+    nc = h_in.shape[1] // c
+    h_c = jnp.moveaxis(h_in.reshape(b, nc, c, d), 1, 0)
+    t_c = jnp.moveaxis(targets.reshape(b, nc, c), 1, 0)
+
+    @jax.checkpoint
+    def chunk_stats(hc, tc):
+        logits = _head(params, cfg, hc)          # (B, C, Vp)
+        mask = (tc >= 0).astype(jnp.float32)
+        tgt = jnp.maximum(tc, 0)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logits, tgt[..., None],
+                                 axis=-1)[..., 0].astype(jnp.float32)
+        xent = jnp.sum((lse - ll) * mask)
+        z = jnp.sum((lse * mask) ** 2)
+        return xent, z, jnp.sum(mask)
+
+    def body(carry, xs):
+        xe, z, n = carry
+        hc, tc = xs
+        xe2, z2, n2 = chunk_stats(hc, tc)
+        return (xe + xe2, z + z2, n + n2), None
+
+    (xe, z, n), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), (h_c, t_c))
+    denom = jnp.maximum(n, 1.0)
+    loss = xe / denom
+    z_loss = 1e-4 * z / denom
+    total = loss + z_loss + cfg.router_aux_coef * aux
+    return total, {"xent": loss, "z_loss": z_loss, "aux": aux,
+                   "tokens": denom}
+
+
+def prefill(params, cfg: ModelConfig, batch: dict):
+    """Process the full prompt; returns (cache, last_logits, pos)."""
+    logits, _, cache = forward_logits(params, cfg, batch, collect=True)
+    pos = jnp.asarray(batch["tokens"].shape[1]
+                      + (cfg.vlm_prefix if cfg.family == "vlm" else 0),
+                      jnp.int32)
+    return cache, logits[:, -1], pos
+
+
+def expand_cache(cfg: ModelConfig, cache: dict, max_len: int,
+                 prompt_len: int) -> dict:
+    """Prefill -> decode handoff: re-lay the prefill cache into decode
+    buffers of ``max_len`` slots.
+
+    Full-attention caches are zero-padded on the seq axis.  Rolling
+    (all-layers-SWA) caches are rebuilt into the circular layout: token
+    p lives in slot p % window, keeping the last ``window`` tokens.
+    SSM states and cross K/V pass through unchanged.
+    """
+    rolling = (cfg.sliding_window is not None
+               and cfg.local_global_period == 0)
+    out = dict(cache)
+
+    def pad_seq(x, target):
+        p = target - x.shape[-2]
+        if p <= 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[-2] = (0, p)
+        return jnp.pad(x, widths)
+
+    def to_rolling(x, window):
+        # x: (..., P, D) -> (..., window, D) circular
+        p_len = x.shape[-2]
+        w = min(window, max_len)
+        buf = jnp.zeros((*x.shape[:-2], w, x.shape[-1]), x.dtype)
+        start = max(0, p_len - w)
+        pos = jnp.arange(start, p_len)
+        return buf.at[..., pos % w, :].set(x[..., start:p_len, :])
+
+    for key in ("k", "v", "first_k", "first_v", "shared_k", "shared_v"):
+        if key in out:
+            if rolling and key in ("k", "v", "first_k", "first_v"):
+                out[key] = to_rolling(out[key], cfg.sliding_window)
+            else:
+                out[key] = pad_seq(out[key], max_len)
+    return out
+
+
+def decode_step(params, cfg: ModelConfig, token, cache: dict, pos):
+    """token: (B, 1) i32; pos: scalar i32.  Returns (logits, new_cache).
+
+    NOTE on prefill->decode handoff for full-attention archs: the
+    prefill cache holds S entries; decode writes at slot ``pos``.  The
+    serve driver allocates the cache at max_len >= prompt + new tokens
+    and copies the prefill K/V in (see launch/serve.py); the dry-run
+    lowers decode_step directly against a full cache.
+    """
+    x = _embed_tokens(params, cfg, token)
+    h, new_cache = transformer.decode(params["stack"], cfg, x, cache, pos)
+    h = layers.rmsnorm(params["final_norm"], h, eps=cfg.rms_eps,
+                       unit_offset=cfg.rms_unit_offset)
+    return _head(params, cfg, h), new_cache

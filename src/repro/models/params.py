@@ -1,0 +1,112 @@
+"""Declarative parameter schemas.
+
+A model config produces a *schema*: a nested dict whose leaves are ``P``
+entries (shape + logical axes + init).  Parameter trees, logical-axis
+trees and sharding-spec trees are all derived from the one schema, so
+they can never drift apart.  Scan-stacked (per-layer) parameters carry a
+leading "layers" axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import current_ctx, resolve
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]            # logical axis names, len == ndim
+    init: str = "normal"             # normal | zeros | ones | embed
+    scale: float | None = None       # stddev; default 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # convention: the last axis is the output axis of a weight
+    return max(1, int(jnp.prod(jnp.asarray(shape[:-1]))) or 1)
+
+
+def _init_leaf(key: jax.Array, p: P, dtype) -> jnp.ndarray:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "embed":
+        std = p.scale if p.scale is not None else 1.0
+        return (std * jax.random.normal(key, p.shape)).astype(dtype)
+    std = p.scale if p.scale is not None else _fan_in(p.shape) ** -0.5
+    return (std * jax.random.normal(key, p.shape)).astype(dtype)
+
+
+def _walk(schema: Mapping, fn: Callable[[str, P], Any], prefix="") -> dict:
+    out = {}
+    for k, v in schema.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, P):
+            out[k] = fn(path, v)
+        else:
+            out[k] = _walk(v, fn, path)
+    return out
+
+
+def init_params(schema: Mapping, key: jax.Array, dtype=jnp.float32) -> dict:
+    """Deterministic init: each leaf keyed by fold_in(hash(path))."""
+
+    def leaf(path: str, p: P):
+        k = jax.random.fold_in(key, hash(path) & 0x7FFFFFFF)
+        return _init_leaf(k, p, dtype)
+
+    return _walk(schema, leaf)
+
+
+def abstract_params(schema: Mapping, dtype=jnp.float32) -> dict:
+    """ShapeDtypeStruct tree (for AOT lowering without allocation)."""
+    return _walk(schema, lambda _, p: jax.ShapeDtypeStruct(p.shape, dtype))
+
+
+def logical_axes(schema: Mapping) -> dict:
+    return _walk(schema, lambda _, p: p.axes)
+
+
+def param_specs(schema: Mapping) -> dict:
+    """PartitionSpec tree under the installed sharding context."""
+    ctx = current_ctx()
+    assert ctx is not None
+
+    def leaf(_, p: P):
+        return resolve(ctx.rules.params, p.axes, p.shape, ctx.mesh)
+
+    return _walk(schema, leaf)
+
+
+def count_params(schema: Mapping) -> int:
+    total = 0
+
+    def leaf(_, p: P):
+        nonlocal total
+        n = 1
+        for s in p.shape:
+            n *= s
+        total += n
+        return None
+
+    _walk(schema, leaf)
+    return total
+
+
+def stack_layers(n: int, sub: Mapping) -> dict:
+    """Prefix every leaf of a per-layer schema with a 'layers' axis."""
+
+    def leaf(_, p: P):
+        return P(shape=(n, *p.shape), axes=("layers", *p.axes),
+                 init=p.init, scale=p.scale)
+
+    return _walk(sub, leaf)

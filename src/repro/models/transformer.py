@@ -1,0 +1,586 @@
+"""Layer stacks for every assigned family, with scan-over-layers.
+
+One compiled block body per stack (lax.scan over stacked params) keeps
+HLO size and compile time O(1) in depth — an 81-layer hybrid compiles
+like one layer, which is what makes the 40-cell x 2-mesh dry-run matrix
+tractable.  Remat policy is a config knob applied to the block body.
+
+Families:
+  dense / vlm   uniform [attn + gated MLP] blocks (+ alternating
+                local/global windows, post-norms, softcaps for gemma2)
+  moe           [attn + MoE] blocks; optional leading dense-MLP layer
+                (moonshot/deepseek first_k_dense_replace=1)
+  ssm           uniform Mamba2 blocks
+  hybrid        groups of ``hybrid_period`` Mamba2 blocks, a SHARED
+                full-attention transformer block applied between groups
+                (zamba2: one parameter set, G applications, per-
+                application KV caches)
+  encdec        encoder stack (full mask) + decoder stack with fused
+                cross-attention (seamless)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention, layers, mlp, ssm
+from repro.models.params import P, stack_layers
+
+
+# ---------------------------------------------------------------------------
+# Specs from config
+
+def attn_spec(cfg: ModelConfig, mask: str = "causal") -> attention.AttnSpec:
+    return attention.AttnSpec(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        kv_eff=cfg.kv_eff, head_dim=cfg.head_dim_,
+        rope_theta=cfg.rope_theta, qkv_bias=cfg.qkv_bias,
+        query_scale=cfg.query_scale_, softcap=cfg.attn_softcap,
+        window=cfg.sliding_window, mask=mask,
+        prefix_len=cfg.vlm_prefix, chunk=cfg.attn_chunk)
+
+
+def moe_spec(cfg: ModelConfig) -> mlp.MoESpec:
+    return mlp.MoESpec(
+        d_model=cfg.d_model, d_ff=cfg.d_ff, n_experts=cfg.n_experts,
+        top_k=cfg.top_k, n_shared=cfg.n_shared_experts,
+        capacity_factor=cfg.capacity_factor, act=cfg.mlp_act,
+        impl=cfg.moe_impl)
+
+
+def ssm_spec(cfg: ModelConfig) -> ssm.SSMSpec:
+    return ssm.SSMSpec(
+        d_model=cfg.d_model, d_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+        conv=cfg.ssm_conv, chunk=cfg.ssm_chunk,
+        intra_bf16=cfg.ssm_intra_bf16)
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "nothing":
+        return fn
+    pol = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+           else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=pol)
+
+
+# ---------------------------------------------------------------------------
+# Block schemas
+
+def dense_block_schema(cfg: ModelConfig, use_moe: bool = False,
+                       cross: bool = False) -> dict:
+    s = attn_spec(cfg)
+    out: dict = {"ln_attn": layers.rmsnorm_schema(cfg.d_model),
+                 "attn": attention.schema(s)}
+    if cross:
+        out["ln_cross"] = layers.rmsnorm_schema(cfg.d_model)
+        out["cross"] = attention.schema(s, cross=True)
+    out["ln_mlp"] = layers.rmsnorm_schema(cfg.d_model)
+    if use_moe:
+        out["moe"] = mlp.moe_schema(moe_spec(cfg))
+    else:
+        out["mlp"] = mlp.mlp_schema(cfg.d_model, cfg.d_ff)
+    if cfg.post_norms:
+        out["ln_attn_post"] = layers.rmsnorm_schema(cfg.d_model)
+        out["ln_mlp_post"] = layers.rmsnorm_schema(cfg.d_model)
+    return out
+
+
+def ssm_block_schema(cfg: ModelConfig) -> dict:
+    return {"ln": layers.rmsnorm_schema(cfg.d_model),
+            "ssm": ssm.schema(ssm_spec(cfg))}
+
+
+def shared_block_schema(cfg: ModelConfig) -> dict:
+    """zamba2 shared transformer block (full attention, own d_ff)."""
+    return dense_block_schema(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Block applies (full sequence)
+
+def _norm(cfg, p, x):
+    return layers.rmsnorm(p, x, eps=cfg.rms_eps,
+                          unit_offset=cfg.rms_unit_offset)
+
+
+def dense_block(cfg: ModelConfig, p, x, positions, is_local=None,
+                use_moe=False, mask="causal", collect_kv=False,
+                cross_kv=None):
+    """Returns (x, aux, kv)."""
+    s = attn_spec(cfg, mask)
+    h = _norm(cfg, p["ln_attn"], x)
+    if collect_kv:
+        a, kv = attention.full_layer(p["attn"], h, s, positions,
+                                     is_local=is_local, return_kv=True)
+    else:
+        a = attention.full_layer(p["attn"], h, s, positions,
+                                 is_local=is_local)
+        kv = None
+    if cfg.post_norms:
+        a = _norm(cfg, p["ln_attn_post"], a)
+    x = constrain(x + a, "batch", "res_seq", "act_embed")
+    if cross_kv is not None:
+        c = attention.cross_layer(p["cross"],
+                                  _norm(cfg, p["ln_cross"], x),
+                                  cross_kv, s)
+        x = constrain(x + c, "batch", "res_seq", "act_embed")
+    h = _norm(cfg, p["ln_mlp"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if use_moe:
+        m, aux = mlp.moe(p["moe"], h, moe_spec(cfg))
+    else:
+        m = mlp.mlp(p["mlp"], h, act=cfg.mlp_act)
+    if cfg.post_norms:
+        m = _norm(cfg, p["ln_mlp_post"], m)
+    x = constrain(x + m, "batch", "res_seq", "act_embed")
+    return x, aux, kv
+
+
+def ssm_block(cfg: ModelConfig, p, x, collect_state=False):
+    h = _norm(cfg, p["ln"], x)
+    if collect_state:
+        y, st = ssm.full_layer_with_state(p["ssm"], h, ssm_spec(cfg),
+                                          rms_eps=cfg.rms_eps)
+    else:
+        y = ssm.full_layer(p["ssm"], h, ssm_spec(cfg), rms_eps=cfg.rms_eps)
+        st = None
+    return constrain(x + y, "batch", "res_seq", "act_embed"), st
+
+
+# ---------------------------------------------------------------------------
+# Stack schema
+
+def stack_schema(cfg: ModelConfig) -> dict:
+    f = cfg.family
+    if f in ("dense", "vlm"):
+        return {"blocks": stack_layers(cfg.n_layers,
+                                       dense_block_schema(cfg))}
+    if f == "moe":
+        first = cfg.first_dense
+        out = {"blocks": stack_layers(cfg.n_layers - first,
+                                      dense_block_schema(cfg, use_moe=True))}
+        if first:
+            # deepseek-style: layer 0 keeps attention but uses a dense MLP
+            assert first == 1
+            out["first"] = dense_block_schema(
+                cfg.replace(d_ff=cfg.first_dense_ff or cfg.d_ff),
+                use_moe=False)
+        return out
+    if f == "ssm":
+        return {"blocks": stack_layers(cfg.n_layers, ssm_block_schema(cfg))}
+    if f == "hybrid":
+        g = cfg.n_layers // cfg.hybrid_period
+        tail = cfg.n_layers - g * cfg.hybrid_period
+        out = {
+            "groups": stack_layers(
+                g, stack_layers(cfg.hybrid_period, ssm_block_schema(cfg))),
+            "shared": shared_block_schema(cfg),
+        }
+        if tail:
+            out["tail"] = stack_layers(tail, ssm_block_schema(cfg))
+        return out
+    if f == "encdec":
+        return {
+            "enc_blocks": stack_layers(cfg.n_enc_layers,
+                                       dense_block_schema(cfg)),
+            "enc_norm": layers.rmsnorm_schema(cfg.d_model),
+            "dec_blocks": stack_layers(
+                cfg.n_layers, dense_block_schema(cfg, cross=True)),
+        }
+    raise ValueError(f"unknown family {f}")
+
+
+def _is_local_flags(cfg: ModelConfig, n: int) -> jnp.ndarray | None:
+    """gemma2 alternating stack: even layers local (SWA), odd global."""
+    if cfg.local_global_period:
+        return (jnp.arange(n) % cfg.local_global_period) == 0
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+
+def forward(params, cfg: ModelConfig, x, positions, x_src=None,
+            collect: bool = False):
+    """x: (B, S, d) embedded inputs.  Returns (hidden, aux, cache).
+
+    collect=True additionally returns the serve cache (KV / SSM states),
+    turning this forward into the prefill step.
+    """
+    f = cfg.family
+    mask = "prefix" if f == "vlm" else "causal"
+    aux_total = jnp.zeros((), jnp.float32)
+    cache: dict = {}
+
+    if f in ("dense", "vlm", "moe"):
+        use_moe = f == "moe"
+        if "first" in params:
+            x, _, kv = dense_block(cfg, params["first"], x, positions,
+                                   use_moe=False, mask=mask,
+                                   collect_kv=collect)
+            if collect:
+                cache["first_k"], cache["first_v"] = kv
+        flags = _is_local_flags(
+            cfg, params["blocks"]["ln_attn"]["scale"].shape[0])
+
+        def body(carry, xs):
+            xc, aux = carry
+            lp = xs[0]
+            loc = xs[1] if flags is not None else None
+            xc, a, kv = _remat(cfg, functools.partial(
+                dense_block, cfg, use_moe=use_moe, mask=mask,
+                collect_kv=collect))(lp, xc, positions, is_local=loc)
+            return (xc, aux + a), kv
+
+        xs = (params["blocks"],) + ((flags,) if flags is not None else ())
+        (x, aux_total), kvs = jax.lax.scan(body, (x, aux_total), xs)
+        if collect:
+            cache["k"], cache["v"] = kvs
+
+    elif f == "ssm":
+        def body(xc, lp):
+            xc, st = _remat(cfg, functools.partial(
+                ssm_block, cfg, collect_state=collect))(lp, xc)
+            return xc, st
+
+        x, states = jax.lax.scan(body, x, params["blocks"])
+        if collect:
+            cache["ssm"] = states
+
+    elif f == "hybrid":
+        def inner(xc, lp):
+            xc, st = _remat(cfg, functools.partial(
+                ssm_block, cfg, collect_state=collect))(lp, xc)
+            return xc, st
+
+        def group(xc, gp):
+            xc, states = jax.lax.scan(inner, xc, gp)
+            xc, _, kv = dense_block(cfg, params["shared"], xc, positions,
+                                    collect_kv=collect)
+            return xc, (states, kv)
+
+        x, (g_states, g_kv) = jax.lax.scan(group, x, params["groups"])
+        if collect:
+            cache["groups"] = g_states
+            cache["shared_k"], cache["shared_v"] = g_kv
+        if "tail" in params:
+            x, t_states = jax.lax.scan(inner, x, params["tail"])
+            if collect:
+                cache["tail"] = t_states
+
+    elif f == "encdec":
+        assert x_src is not None
+        enc_pos = jnp.broadcast_to(jnp.arange(x_src.shape[1]),
+                                   x_src.shape[:2])
+
+        # encoder (full mask, no cache needed beyond cross K/V)
+        def enc_body(xc, lp):
+            xc, _, _ = _remat(cfg, functools.partial(
+                dense_block, cfg, mask="full"))(lp, xc, enc_pos)
+            return xc, None
+
+        src, _ = jax.lax.scan(enc_body, x_src, params["enc_blocks"])
+        src = _norm(cfg, params["enc_norm"], src)
+        s = attn_spec(cfg)
+
+        def cross_kv_of(lp):
+            return attention.encode_kv(lp["cross"], src, s)
+
+        def dec_body(carry, lp):
+            xc, aux = carry
+            ckv = cross_kv_of(lp)
+            xc, a, kv = _remat(cfg, functools.partial(
+                dense_block, cfg, collect_kv=collect))(
+                    lp, xc, positions, cross_kv=ckv)
+            return (xc, aux), (kv, ckv if collect else None)
+
+        (x, aux_total), (kvs, ckvs) = jax.lax.scan(
+            dec_body, (x, aux_total), params["dec_blocks"])
+        if collect:
+            cache["k"], cache["v"] = kvs
+            cache["cross_k"] = ckvs[0]
+            cache["cross_v"] = ckvs[1]
+    else:
+        raise ValueError(f)
+
+    return x, aux_total, (cache if collect else None)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against a cache)
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Empty serve cache for ``decode`` (shapes only — dry-run safe).
+
+    Sliding-window archs get a ROLLING buffer of min(window, max_len)
+    slots; gemma2's alternating stack keeps full-length buffers for all
+    layers (global layers need them; the local-layer overallocation is a
+    documented hillclimb target)."""
+    f = cfg.family
+    s = attn_spec(cfg)
+    kv_len = max_len
+    if cfg.sliding_window is not None and cfg.local_global_period == 0:
+        kv_len = min(cfg.sliding_window, max_len)
+
+    def kv(n, length):
+        shape = (n, batch, cfg.kv_eff, length, cfg.head_dim_)
+        return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+    if f in ("dense", "vlm", "moe"):
+        n = cfg.n_layers - cfg.first_dense
+        c = {}
+        c["k"], c["v"] = kv(n, kv_len)
+        if cfg.first_dense:
+            fk, fv = kv(1, kv_len)
+            c["first_k"], c["first_v"] = fk[0], fv[0]
+        return c
+    if f == "ssm":
+        spec = ssm_spec(cfg)
+        st = ssm.init_state(batch, spec)
+        return {"ssm": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), st)}
+    if f == "hybrid":
+        spec = ssm_spec(cfg)
+        g = cfg.n_layers // cfg.hybrid_period
+        tail = cfg.n_layers - g * cfg.hybrid_period
+        st = ssm.init_state(batch, spec)
+        c = {"groups": jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (g, cfg.hybrid_period, *a.shape)), st)}
+        c["shared_k"], c["shared_v"] = kv(g, max_len)
+        if tail:
+            c["tail"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (tail, *a.shape)), st)
+        return c
+    if f == "encdec":
+        c = {}
+        c["k"], c["v"] = kv(cfg.n_layers, kv_len)
+        src_len = max_len  # caller overrides by slicing if needed
+        c["cross_k"], c["cross_v"] = kv(cfg.n_layers, src_len)
+        return c
+    raise ValueError(f)
+
+
+def _dense_decode_block(cfg: ModelConfig, p, x_tok, ck, cv, pos, q=None,
+                        is_local=None, rolling=False, use_moe=False,
+                        cross_kv=None):
+    """One decode block against ALREADY-UPDATED cache slices ck/cv
+    (B, kv_eff, Smax, D).  ``q`` may be precomputed by the caller (the
+    same projection that produced the cache write).  Returns the new
+    hidden state."""
+    s = attn_spec(cfg)
+    if q is None:
+        h = _norm(cfg, p["ln_attn"], x_tok)
+        q, _, _ = attention.decode_qkv(p["attn"], h, pos, s)
+    a = attention.decode_attend(p["attn"], q, ck, cv, pos, s,
+                                is_local=is_local, rolling=rolling)
+    if cfg.post_norms:
+        a = _norm(cfg, p["ln_attn_post"], a)
+    x_tok = x_tok + a
+    if cross_kv is not None:
+        c = attention.cross_layer(p["cross"],
+                                  _norm(cfg, p["ln_cross"], x_tok),
+                                  cross_kv, s)
+        x_tok = x_tok + c
+    h = _norm(cfg, p["ln_mlp"], x_tok)
+    if use_moe:
+        m, _ = mlp.moe(p["moe"], h, moe_spec(cfg))
+    else:
+        m = mlp.mlp(p["mlp"], h, act=cfg.mlp_act)
+    if cfg.post_norms:
+        m = _norm(cfg, p["ln_mlp_post"], m)
+    return x_tok + m
+
+
+def _write_layer_slot(cache, tok, li, slot):
+    """cache: (L, B, H, Smax, D); tok: (B, H, 1, D) — in-place single-
+    slot write at (layer li, position slot).  The cache is a scan CARRY
+    (not xs->ys), so XLA aliases the donated input buffer; when the seq
+    dim is sharded, attention.write_slot routes through a shard_map so
+    no shard rewrites its whole buffer."""
+    return attention.write_slot(cache, tok, slot, li=li)
+
+
+def decode(params, cfg: ModelConfig, x_tok, cache: dict, pos):
+    """One-token decode.  x_tok: (B, 1, d) embedded; pos: scalar int32.
+    Returns (hidden (B, 1, d), new_cache).  Caches ride the layer scan
+    as carries with single-slot in-place writes (donation-friendly)."""
+    f = cfg.family
+    new_cache = dict(cache)
+    rolling = (cfg.sliding_window is not None
+               and cfg.local_global_period == 0)
+    s = attn_spec(cfg) if cfg.n_heads else None
+
+    def slot_of(smax):
+        return pos % smax if rolling else pos
+
+    def qkv_write(p, xc, ck_all, cv_all, li):
+        h = _norm(cfg, p["ln_attn"], xc)
+        q, kt, vt = attention.decode_qkv(p["attn"], h, pos, s)
+        sl = slot_of(ck_all.shape[-2])
+        ck_all = _write_layer_slot(ck_all, kt, li, sl)
+        cv_all = _write_layer_slot(cv_all, vt, li, sl)
+        return q, ck_all, cv_all
+
+    if f in ("dense", "vlm", "moe"):
+        if cfg.first_dense:
+            fk, fv = cache["first_k"], cache["first_v"]
+            h = _norm(cfg, params["first"]["ln_attn"], x_tok)
+            q, kt, vt = attention.decode_qkv(params["first"]["attn"], h,
+                                             pos, s)
+            sl = slot_of(fk.shape[-2])
+            fk = attention.write_slot(fk, kt, sl)
+            fv = attention.write_slot(fv, vt, sl)
+            x_tok = _dense_decode_block(
+                cfg, params["first"], x_tok, fk, fv, pos, q=q,
+                rolling=rolling)
+            new_cache["first_k"], new_cache["first_v"] = fk, fv
+        n_blocks = params["blocks"]["ln_attn"]["scale"].shape[0]
+        flags = _is_local_flags(cfg, n_blocks)
+
+        def body(carry, xs):
+            xc, ck_all, cv_all = carry
+            lp, li = xs[0], xs[1]
+            loc = xs[2] if flags is not None else None
+            q, ck_all, cv_all = qkv_write(lp, xc, ck_all, cv_all, li)
+            ck = jax.lax.dynamic_index_in_dim(ck_all, li, 0,
+                                              keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_all, li, 0,
+                                              keepdims=False)
+            xc = _dense_decode_block(
+                cfg, lp, xc, ck, cv, pos, q=q, is_local=loc,
+                rolling=rolling, use_moe=(f == "moe"))
+            return (xc, ck_all, cv_all), None
+
+        xs = (params["blocks"], jnp.arange(n_blocks))
+        if flags is not None:
+            xs = xs + (flags,)
+        (x_tok, nk, nv), _ = jax.lax.scan(
+            body, (x_tok, cache["k"], cache["v"]), xs)
+        new_cache["k"], new_cache["v"] = nk, nv
+
+    elif f == "ssm":
+        spec = ssm_spec(cfg)
+
+        def body(carry, xs):
+            xc, states = carry
+            lp, li = xs
+            st = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, li, 0, keepdims=False), states)
+            h = _norm(cfg, lp["ln"], xc)
+            y, st2 = ssm.decode_layer(lp["ssm"], h, st, spec,
+                                      rms_eps=cfg.rms_eps)
+            states = jax.tree.map(
+                lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                    a, u.astype(a.dtype), li, 0), states, st2)
+            return (xc + y, states), None
+
+        n = cfg.n_layers
+        (x_tok, states), _ = jax.lax.scan(
+            body, (x_tok, cache["ssm"]),
+            (params["blocks"], jnp.arange(n)))
+        new_cache["ssm"] = states
+
+    elif f == "hybrid":
+        spec = ssm_spec(cfg)
+
+        def ssm_step(xc, lp, st):
+            h = _norm(cfg, lp["ln"], xc)
+            y, st2 = ssm.decode_layer(lp["ssm"], h, st, spec,
+                                      rms_eps=cfg.rms_eps)
+            return xc + y, st2
+
+        def group(carry, xs):
+            xc, gstates, sk_all, sv_all = carry
+            gp, gi = xs
+
+            def inner(c2, xs2):
+                x2, gst = c2                  # gst = full carried states
+                lp, li = xs2
+                st = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        jax.lax.dynamic_index_in_dim(
+                            a, gi, 0, keepdims=False),
+                        li, 0, keepdims=False), gst)
+                x2, st2 = ssm_step(x2, lp, st)
+                gst = jax.tree.map(
+                    lambda a, u: jax.lax.dynamic_update_slice(
+                        a, u[None, None].astype(a.dtype),
+                        (gi, li) + (0,) * u.ndim), gst, st2)
+                return (x2, gst), None
+
+            (xc, gstates), _ = jax.lax.scan(
+                inner, (xc, gstates),
+                (gp, jnp.arange(cfg.hybrid_period)))
+            # shared attention block, per-application cache row gi
+            h = _norm(cfg, params["shared"]["ln_attn"], xc)
+            q, kt, vt = attention.decode_qkv(params["shared"]["attn"],
+                                             h, pos, s)
+            sk_all = _write_layer_slot(sk_all, kt, gi, pos)
+            sv_all = _write_layer_slot(sv_all, vt, gi, pos)
+            ck = jax.lax.dynamic_index_in_dim(sk_all, gi, 0,
+                                              keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(sv_all, gi, 0,
+                                              keepdims=False)
+            xc = _dense_decode_block(cfg, params["shared"], xc, ck, cv,
+                                     pos, q=q)
+            return (xc, gstates, sk_all, sv_all), None
+
+        g = cfg.n_layers // cfg.hybrid_period
+        (x_tok, gst, sk, sv), _ = jax.lax.scan(
+            group,
+            (x_tok, cache["groups"], cache["shared_k"],
+             cache["shared_v"]),
+            (params["groups"], jnp.arange(g)))
+        new_cache["groups"] = gst
+        new_cache["shared_k"], new_cache["shared_v"] = sk, sv
+        if "tail" in params:
+            def tail_body(carry, xs):
+                xc, states = carry
+                lp, li = xs
+                st = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, li, 0, keepdims=False), states)
+                xc, st2 = ssm_step(xc, lp, st)
+                states = jax.tree.map(
+                    lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                        a, u.astype(a.dtype), li, 0), states, st2)
+                return (xc, states), None
+
+            tail_n = cfg.n_layers - g * cfg.hybrid_period
+            (x_tok, tst), _ = jax.lax.scan(
+                tail_body, (x_tok, cache["tail"]),
+                (params["tail"], jnp.arange(tail_n)))
+            new_cache["tail"] = tst
+
+    elif f == "encdec":
+        def body(carry, xs):
+            xc, ck_all, cv_all = carry
+            lp, li, xk, xv = xs
+            q, ck_all, cv_all = qkv_write(lp, xc, ck_all, cv_all, li)
+            ck = jax.lax.dynamic_index_in_dim(ck_all, li, 0,
+                                              keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_all, li, 0,
+                                              keepdims=False)
+            xc = _dense_decode_block(cfg, lp, xc, ck, cv, pos, q=q,
+                                     cross_kv=(xk, xv))
+            return (xc, ck_all, cv_all), None
+
+        (x_tok, nk, nv), _ = jax.lax.scan(
+            body, (x_tok, cache["k"], cache["v"]),
+            (params["dec_blocks"], jnp.arange(cfg.n_layers),
+             cache["cross_k"], cache["cross_v"]))
+        new_cache["k"], new_cache["v"] = nk, nv
+    else:
+        raise ValueError(f)
+
+    return x_tok, new_cache

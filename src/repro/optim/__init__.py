@@ -1,0 +1,10 @@
+"""Optimizer: AdamW + global-norm clip + warmup-cosine schedule.
+
+States mirror the parameter tree, so they inherit the parameter
+sharding (FSDP mode => ZeRO: optimizer state sharded over "data")."""
+
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               global_norm, warmup_cosine)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "warmup_cosine"]

@@ -1,0 +1,81 @@
+"""AdamW with decoupled weight decay, global-norm clipping and a
+warmup-cosine LR schedule — pure pytree functions (no optax dep)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def warmup_cosine(c: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(c.warmup_steps, 1)
+    prog = ((s - c.warmup_steps)
+            / jnp.maximum(c.total_steps - c.warmup_steps, 1))
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = c.min_lr_frac + (1 - c.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return c.lr * jnp.where(s < c.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)  # noqa: E731
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(c: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    lr = warmup_cosine(c, step)
+    b1t = 1.0 - c.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - c.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        m2 = c.b1 * m + (1 - c.b1) * g
+        v2 = c.b2 * v + (1 - c.b2) * g * g
+        mh = m2 / b1t
+        vh = v2 / b2t
+        delta = mh / (jnp.sqrt(vh) + c.eps) + c.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["mu"])
+    flat_v = jax.tree.leaves(state["nu"])
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        p2, m2, v2 = upd(g, m, v, p)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    new_params = jax.tree.unflatten(treedef, new_p)
+    new_state = {"mu": jax.tree.unflatten(treedef, new_m),
+                 "nu": jax.tree.unflatten(treedef, new_v),
+                 "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

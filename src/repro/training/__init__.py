@@ -1,0 +1,7 @@
+"""Training substrate: jit-able train steps (plain + compressed-DP)."""
+
+from repro.training.steps import (TrainState, make_compressed_train_step,
+                                  make_train_step, train_state_init)
+
+__all__ = ["TrainState", "make_compressed_train_step", "make_train_step",
+           "train_state_init"]

@@ -1,0 +1,124 @@
+"""Per-kernel Pallas (interpret mode) vs pure-jnp oracle agreement.
+
+Every kernel is swept over shapes and dtypes; integer datapaths must be
+bit-exact, float paths allclose.  This is the Tab. III accuracy story at
+the kernel level: the word-length-optimized (quantized) path is compared
+against the float oracle separately in test_paper_claims.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref
+
+
+def _img(rng, h, w, dtype):
+    img = rng.randint(0, 256, (h, w)).astype(np.float32)
+    if dtype == "uint8":
+        return jnp.asarray(img.astype(np.uint8))
+    return jnp.asarray(img)
+
+
+SHAPES = [(32, 32), (37, 53), (128, 128), (130, 250), (240, 320)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", ["uint8", "float32"])
+def test_fast_score_map_matches_ref(rng, shape, dtype):
+    img = _img(rng, *shape, dtype)
+    out_ref = ops.fast_score_map(img, 20.0, impl="ref")
+    out_pl = ops.fast_score_map(img, 20.0, impl="pallas")
+    assert out_pl.shape == shape
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(out_pl))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("quantized", [True, False])
+def test_gaussian_blur7_matches_ref(rng, shape, quantized):
+    img = _img(rng, *shape, "float32")
+    out_ref = ops.gaussian_blur7(img, quantized=quantized, impl="ref")
+    out_pl = ops.gaussian_blur7(img, quantized=quantized, impl="pallas")
+    if quantized:
+        np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(out_pl))
+    else:
+        np.testing.assert_allclose(np.asarray(out_ref), np.asarray(out_pl),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def _features(rng, k, h=480, w=640, level_count=2):
+    desc = jnp.asarray(
+        rng.randint(0, 2 ** 32, (k, 8), dtype=np.uint64).astype(np.uint32))
+    x = rng.uniform(0, w, k).astype(np.float32)
+    y = rng.uniform(0, h, k).astype(np.float32)
+    lvl = rng.randint(0, level_count, k).astype(np.float32)
+    valid = (rng.uniform(size=k) > 0.15).astype(np.float32)
+    meta = jnp.asarray(np.stack([x, y, lvl, valid], axis=1))
+    return desc, meta
+
+
+@pytest.mark.parametrize("k,m", [(64, 64), (100, 130), (128, 128),
+                                 (200, 77), (1, 1), (500, 500)])
+def test_hamming_match_matches_ref(rng, k, m):
+    dl, ml = _features(rng, k)
+    dr, mr = _features(rng, m)
+    d_ref, i_ref = ops.hamming_match(dl, ml, dr, mr, row_band=2.0,
+                                     max_disparity=96.0, impl="ref")
+    d_pl, i_pl = ops.hamming_match(dl, ml, dr, mr, row_band=2.0,
+                                   max_disparity=96.0, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(d_ref), np.asarray(d_pl))
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_pl))
+
+
+@pytest.mark.parametrize("k", [1, 32, 128, 300])
+@pytest.mark.parametrize("p,r", [(11, 5), (7, 3), (11, 2)])
+def test_sad_search_matches_ref(rng, k, p, r):
+    lp = jnp.asarray(rng.randint(0, 256, (k, p, p)).astype(np.float32))
+    rs = jnp.asarray(rng.randint(0, 256, (k, p, p + 2 * r)).astype(np.float32))
+    out_ref = ops.sad_search(lp, rs, impl="ref")
+    out_pl = ops.sad_search(lp, rs, impl="pallas")
+    assert out_pl.shape == (k, 2 * r + 1)
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(out_pl))
+
+
+def test_hamming_no_candidate_gives_minus_one(rng):
+    dl, ml = _features(rng, 16)
+    dr, mr = _features(rng, 16)
+    # Push all right features outside any disparity window.
+    mr = mr.at[:, 0].set(ml[:, 0].max() + 500.0)
+    for impl in ("ref", "pallas"):
+        d, i = ops.hamming_match(dl, ml, dr, mr, row_band=2.0,
+                                 max_disparity=96.0, impl=impl)
+        assert bool(jnp.all(i == -1))
+        assert bool(jnp.all(d >= ops.NO_MATCH_DIST))
+
+
+def test_popcount_against_python(rng):
+    x = rng.randint(0, 2 ** 32, 4096, dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(ref._popcount32(jnp.asarray(x)))
+    want = np.array([bin(int(v)).count("1") for v in x], dtype=np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_hamming_distance_identity(rng):
+    d, _ = _features(rng, 32)
+    mat = ref.hamming_distance_matrix(d, d)
+    assert bool(jnp.all(jnp.diag(mat) == 0))
+    assert bool(jnp.all((mat >= 0) & (mat <= 256)))
+    np.testing.assert_array_equal(np.asarray(mat), np.asarray(mat).T)
+
+
+def test_fast_score_constant_image_is_zero():
+    img = jnp.full((64, 64), 128.0)
+    for impl in ("ref", "pallas"):
+        out = ops.fast_score_map(img, 20.0, impl=impl)
+        assert float(jnp.max(out)) == 0.0
+
+
+def test_gaussian_blur_constant_image_is_identity():
+    img = jnp.full((64, 96), 77.0)
+    for impl in ("ref", "pallas"):
+        out = ops.gaussian_blur7(img, quantized=True, impl=impl)
+        np.testing.assert_array_equal(np.asarray(out), 77.0)

@@ -1,0 +1,93 @@
+"""Property-based (hypothesis) tests for kernel invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(h=st.integers(8, 96), w=st.integers(8, 96), seed=st.integers(0, 2**16),
+       thr=st.floats(1.0, 60.0))
+@settings(**_SETTINGS)
+def test_fast_pallas_equals_ref_random_shapes(h, w, seed, thr):
+    rng = np.random.RandomState(seed)
+    img = jnp.asarray(rng.randint(0, 256, (h, w)).astype(np.float32))
+    a = ops.fast_score_map(img, thr, impl="ref")
+    b = ops.fast_score_map(img, thr, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(h=st.integers(8, 96), w=st.integers(8, 96), seed=st.integers(0, 2**16))
+@settings(**_SETTINGS)
+def test_blur_bounds_and_agreement(h, w, seed):
+    """Blur output stays within the input intensity range (a convex
+    combination with one final rounding) and impls agree bit-exact."""
+    rng = np.random.RandomState(seed)
+    img = jnp.asarray(rng.randint(0, 256, (h, w)).astype(np.float32))
+    a = ops.gaussian_blur7(img, quantized=True, impl="ref")
+    b = ops.gaussian_blur7(img, quantized=True, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(jnp.min(a)) >= float(jnp.min(img)) - 1.0
+    assert float(jnp.max(a)) <= float(jnp.max(img)) + 1.0
+
+
+@given(k=st.integers(1, 64), m=st.integers(1, 64), seed=st.integers(0, 2**16),
+       band=st.floats(0.0, 10.0), disp=st.floats(1.0, 200.0))
+@settings(**_SETTINGS)
+def test_hamming_match_invariants(k, m, seed, band, disp):
+    rng = np.random.RandomState(seed)
+
+    def feats(n):
+        desc = jnp.asarray(rng.randint(0, 2**32, (n, 8), dtype=np.uint64)
+                           .astype(np.uint32))
+        meta = jnp.asarray(np.stack([
+            rng.uniform(0, 640, n), rng.uniform(0, 480, n),
+            rng.randint(0, 2, n).astype(float),
+            (rng.uniform(size=n) > 0.2).astype(float)], axis=1)
+            .astype(np.float32))
+        return desc, meta
+
+    dl, ml = feats(k)
+    dr, mr = feats(m)
+    d_ref, i_ref = ops.hamming_match(dl, ml, dr, mr, row_band=band,
+                                     max_disparity=disp, impl="ref")
+    d_pl, i_pl = ops.hamming_match(dl, ml, dr, mr, row_band=band,
+                                   max_disparity=disp, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(d_ref), np.asarray(d_pl))
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_pl))
+    # invariants: matched distances in [0, 256]; indices in range or -1;
+    # matched pairs actually satisfy the search-region constraints.
+    d_np, i_np = np.asarray(d_ref), np.asarray(i_ref)
+    matched = i_np >= 0
+    assert np.all((d_np[matched] >= 0) & (d_np[matched] <= 256))
+    assert np.all(i_np[matched] < m)
+    ml_np, mr_np = np.asarray(ml), np.asarray(mr)
+    for li in np.nonzero(matched)[0]:
+        ri = i_np[li]
+        dx = ml_np[li, 0] - mr_np[ri, 0]
+        dy = abs(ml_np[li, 1] - mr_np[ri, 1])
+        assert dy <= band + 1e-4 and -1e-4 <= dx <= disp + 1e-4
+        assert ml_np[li, 2] == mr_np[ri, 2]
+        assert ml_np[li, 3] > 0.5 and mr_np[ri, 3] > 0.5
+
+
+@given(k=st.integers(1, 48), p=st.sampled_from([7, 11]),
+       r=st.integers(1, 6), seed=st.integers(0, 2**16))
+@settings(**_SETTINGS)
+def test_sad_identity_strip_argmin_at_center(k, p, r, seed):
+    """If the right strip contains the left patch exactly at offset r
+    (the center), the SAD table has an exact zero at column r."""
+    rng = np.random.RandomState(seed)
+    lp = rng.randint(0, 256, (k, p, p)).astype(np.float32)
+    rs = rng.randint(0, 256, (k, p, p + 2 * r)).astype(np.float32)
+    rs[:, :, r:r + p] = lp
+    table = np.asarray(ops.sad_search(jnp.asarray(lp), jnp.asarray(rs),
+                                      impl="pallas"))
+    assert np.all(table[:, r] == 0)
+    assert np.all(table >= 0)
+    np.testing.assert_array_equal(
+        table, np.asarray(ops.sad_search(jnp.asarray(lp), jnp.asarray(rs),
+                                         impl="ref")))

@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch
+instantiates a REDUCED config of the same family and runs one forward /
+train-grad / prefill+decode-chain step on CPU, asserting output shapes,
+no NaNs, and decode-vs-forward consistency (the gold cache test)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, shape_cells
+from repro.models import lm, transformer
+from repro.models.params import count_params, init_params
+
+B, S = 2, 32
+
+
+def _batch(cfg, seed=0, s=S):
+    rng = np.random.RandomState(seed)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (B, s)))}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            0.1 * rng.normal(size=(B, cfg.vlm_prefix, cfg.d_model))
+            .astype(np.float32))
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            0.1 * rng.normal(size=(B, s, cfg.d_model)).astype(np.float32))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def smoke_models():
+    out = {}
+    for aid in ARCH_IDS:
+        cfg = get_smoke_config(aid)
+        params = init_params(lm.model_schema(cfg), jax.random.key(7))
+        out[aid] = (cfg, params)
+    return out
+
+
+@pytest.mark.parametrize("aid", ARCH_IDS)
+def test_forward_shapes_and_finite(smoke_models, aid):
+    cfg, params = smoke_models[aid]
+    batch = _batch(cfg)
+    logits, aux, _ = lm.forward_logits(params, cfg, batch)
+    s_total = S + (cfg.vlm_prefix if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, s_total, cfg.vocab_padded)
+    assert np.all(np.isfinite(np.asarray(logits[..., :cfg.vocab])))
+
+
+@pytest.mark.parametrize("aid", ARCH_IDS)
+def test_train_grad_step_finite(smoke_models, aid):
+    cfg, params = smoke_models[aid]
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: lm.loss_fn(p, cfg, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g))) for g in flat)
+    gnorm = float(jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                               for g in flat)))
+    assert gnorm > 0.0
+
+
+@pytest.mark.parametrize("aid", ARCH_IDS)
+def test_decode_chain_matches_forward(smoke_models, aid):
+    """Teacher-forced decode from a prefill cache must reproduce the
+    full-forward logits token by token (validates KV layout, rolling
+    buffers, SSM state carry, shared-block caches, cross-attention)."""
+    cfg, params = smoke_models[aid]
+    split = S // 2
+    batch = _batch(cfg)
+    full_logits, _, _ = lm.forward_logits(params, cfg, batch)
+
+    prompt = dict(batch)
+    prompt["tokens"] = batch["tokens"][:, :split]
+    cache, last_logits, pos = lm.prefill(params, cfg, prompt)
+    cache = lm.expand_cache(cfg, cache, max_len=S + 8, prompt_len=split)
+
+    prefix = cfg.vlm_prefix if cfg.family == "vlm" else 0
+    np.testing.assert_allclose(
+        np.asarray(last_logits), np.asarray(full_logits[:, prefix + split - 1]),
+        rtol=2e-3, atol=2e-3)
+
+    for t in range(split, min(split + 4, S)):
+        tok = batch["tokens"][:, t:t + 1]
+        logits, cache = lm.decode_step(params, cfg, tok, cache,
+                                       jnp.asarray(prefix + t, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full_logits[:, prefix + t]),
+            rtol=2e-3, atol=2e-3,
+            err_msg=f"{aid} decode diverges at t={t}")
+
+
+@pytest.mark.parametrize("aid", ARCH_IDS)
+def test_full_config_well_formed(aid):
+    """The FULL (production) configs are exercised via the dry-run only;
+    here we sanity-check their derived quantities."""
+    cfg = get_config(aid)
+    assert cfg.vocab_padded % 256 == 0 and cfg.vocab_padded >= cfg.vocab
+    cells = shape_cells(cfg)
+    assert [c.name for c in cells] == [
+        "train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    live = [c for c in cells if c.applicable]
+    if cfg.family in ("ssm", "hybrid") or (
+            cfg.sliding_window and not cfg.local_global_period):
+        assert len(live) == 4
+    else:
+        assert len(live) == 3
+    if cfg.n_heads:
+        assert cfg.n_heads % cfg.n_kv == 0
+        if cfg.kv_eff != cfg.n_kv:
+            assert cfg.kv_eff % cfg.n_kv == 0
+            assert cfg.n_heads % cfg.kv_eff == 0
+    if cfg.family in ("ssm", "hybrid"):
+        assert cfg.d_inner % cfg.ssm_head_dim == 0
+
+
+def test_param_counts_match_public_scale():
+    """Total parameters must land near the public model sizes (the
+    arch names carry the count: 16B, 42B, 7B, 32B, 1.8B, 2B, 3B, 780M,
+    7B, ~1.2B medium)."""
+    expected = {
+        # NOTE: the assigned 48L x 64-expert dims give ~28B total
+        # (the public "16B" name corresponds to fewer layers); we
+        # implement the dims as assigned.
+        "moonshot_v1_16b_a3b": (26e9, 30e9),
+        "phi35_moe_42b_a66b": (39e9, 45e9),
+        "gemma_7b": (7.5e9, 9.5e9),
+        "qwen25_32b": (31e9, 34e9),
+        "h2o_danube_18b": (1.5e9, 2.1e9),
+        "gemma2_2b": (2.2e9, 3.3e9),
+        "paligemma_3b": (2.3e9, 3.2e9),     # backbone only (no SigLIP)
+        "mamba2_780m": (0.7e9, 0.9e9),
+        "zamba2_7b": (6.0e9, 8.5e9),
+        "seamless_m4t_medium": (0.6e9, 1.6e9),  # frontend stubbed
+    }
+    for aid, (lo, hi) in expected.items():
+        cfg = get_config(aid)
+        n = count_params(lm.model_schema(cfg))
+        assert lo <= n <= hi, f"{aid}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
