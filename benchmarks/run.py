@@ -8,14 +8,25 @@
                                   (jnp oracle) + word-length ablation
   table4_throughput      Tab. IV  fps at 640x480 / 1280x720 on this CPU
                                   + modeled TPU-v5e roofline fps
+  table_fused_vs_seed    PR 1     fused batched frontend (one launch per
+                                  level for all 4 cameras) vs the seed
+                                  per-camera-per-op dispatch: wall clock
+                                  + traced Pallas launch counts
 
-Run: PYTHONPATH=src python -m benchmarks.run [--quick]
-Prints CSV rows ``table,name,value,unit,note``.
+Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--out PATH]
+Prints CSV rows ``table,name,value,unit,note`` and writes them to a
+JSON artifact (default BENCH_frontend.json) for perf-trajectory
+tracking in CI.
+
+Timing discipline: every benchmark output is ``jax.block_until_ready``'d
+— including outputs produced OUTSIDE ``_bench`` that later feed a timed
+function — so no reported ms silently includes an async dependency.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -25,8 +36,9 @@ import numpy as np
 from repro.core import (CameraIntrinsics, ORBConfig, backend,
                         extract_features, match_pair, pipeline_schedule,
                         process_stereo_frame, stereo_match, temporal_match)
-from repro.core import sad_rectify
+from repro.core import pyramid, sad_rectify
 from repro.data import scenes
+from repro.kernels import ops, ref
 
 ROWS = []
 
@@ -65,7 +77,7 @@ def table1_latency_split(quick=False):
 
     fe_fm = jax.jit(lambda l, r: process_stereo_frame(l, r, ocfg, intr))
     t_front, out0 = _bench(fe_fm, frames[0, 0], frames[0, 1])
-    out1 = fe_fm(frames[1, 0], frames[1, 1])
+    out1 = jax.block_until_ready(fe_fm(frames[1, 0], frames[1, 1]))
 
     def make_backend(refine, iters):
         def run(prev_feats, prev_depth, curr_feats, curr_depth):
@@ -102,7 +114,7 @@ def table_fe_fm_ratio(quick=False):
                      max_disparity=96)
     fe = jax.jit(lambda im: extract_features(im, ocfg))
     t_fe, featl = _bench(fe, frames[0, 0])
-    featr = fe(frames[0, 1])
+    featr = jax.block_until_ready(fe(frames[0, 1]))
     fm = jax.jit(lambda l, r, fl, fr: match_pair(l, r, fl, fr, ocfg,
                                                  intr))
     t_fm, _ = _bench(fm, frames[0, 0], frames[0, 1], featl, featr)
@@ -128,8 +140,7 @@ def table2_module_cost(quick=False):
     frames, poses, intr, _ = _scene(h, w)
     ocfg = ORBConfig(height=h, width=w, max_features=512, n_levels=2,
                      max_disparity=96)
-    from repro.core import brief, fast, pyramid
-    from repro.kernels import ops
+    from repro.core import brief, fast
     img = frames[0, 0]
 
     mods = {}
@@ -152,8 +163,8 @@ def table2_module_cost(quick=False):
                   sm, xy, th)
     mods["descriptor"] = t
     fe = jax.jit(lambda i: extract_features(i, ocfg))
-    featl = fe(frames[0, 0])
-    featr = fe(frames[0, 1])
+    featl = jax.block_until_ready(fe(frames[0, 0]))
+    featr = jax.block_until_ready(fe(frames[0, 1]))
     t, m = _bench(jax.jit(lambda a, b: stereo_match(a, b, ocfg)),
                   featl, featr)
     mods["stereo_match"] = t
@@ -251,9 +262,72 @@ def table4_throughput(quick=False):
          "paper Tab. IV")
 
 
+def table_fused_vs_seed(quick=False):
+    """Tentpole regression number: the fused batched frontend (ONE
+    launch per pyramid level for all 4 cameras, blur + FAST + NMS in one
+    VMEM pass) vs the seed dispatch (per camera: separate blur and FAST
+    passes over the same pixels plus eight host-graph NMS slices).
+
+    Wall clock is measured on the jnp fallback (interpret-free CPU
+    path); kernel-launch counts are traced under the Pallas impl and are
+    the deterministic, machine-independent half of the comparison.
+    """
+    resolutions = [(480, 640)] + ([] if quick else [(720, 1280)])
+    for h, w in resolutions:
+        rng = np.random.RandomState(7)
+        imgs = jnp.asarray(rng.randint(0, 256, (4, h, w)).astype(np.float32))
+        ocfg = ORBConfig(height=h, width=w, n_levels=2)
+        thr = float(ocfg.fast_threshold)
+
+        def seed_frontend(images, impl="ref"):
+            """Seed schedule: python-loop over cameras and levels,
+            separate blur / FAST launches, jnp-slice NMS."""
+            outs = []
+            for c in range(images.shape[0]):
+                for lv in pyramid.build_pyramid(images[c], ocfg):
+                    score = ops.fast_score_map(lv, thr, impl=impl)
+                    score = ref.nms3(score)
+                    blur = ops.gaussian_blur7(lv, quantized=True, impl=impl)
+                    outs.append((blur, score))
+            return outs
+
+        def fused_frontend(images, impl="ref"):
+            """Fused schedule: one batched launch per level."""
+            outs = []
+            for lv in pyramid.build_pyramid_batched(images, ocfg):
+                outs.append(ops.fast_blur_nms_batched(
+                    lv, thr, nms=True, quantized=True, impl=impl))
+            return outs
+
+        iters = 3 if (h, w) == (720, 1280) else 5
+        t_seed, _ = _bench(jax.jit(seed_frontend), imgs, iters=iters)
+        t_fused, _ = _bench(jax.jit(fused_frontend), imgs, iters=iters)
+        res = f"{w}x{h}"
+        emit("fused", f"seed_ms_{res}", round(t_seed * 1e3, 2), "ms",
+             "4 cams x 2 levels, per-image dispatch (jnp)")
+        emit("fused", f"fused_ms_{res}", round(t_fused * 1e3, 2), "ms",
+             "4 cams x 2 levels, batched fused (jnp)")
+        emit("fused", f"speedup_{res}", round(t_seed / t_fused, 2), "x",
+             "seed / fused wall clock")
+
+        # Launch counts: trace-only (no kernel execution) under Pallas.
+        ops.reset_launch_count()
+        jax.eval_shape(lambda im: seed_frontend(im, impl="pallas"), imgs)
+        n_seed = ops.launch_count()
+        ops.reset_launch_count()
+        jax.eval_shape(lambda im: fused_frontend(im, impl="pallas"), imgs)
+        n_fused = ops.launch_count()
+        emit("fused", f"launches_seed_{res}", n_seed, "kernels",
+             "4 cams x 2 levels x (blur + fast)")
+        emit("fused", f"launches_fused_{res}", n_fused, "kernels",
+             "1 fused launch per level")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_frontend.json",
+                    help="JSON artifact path ('' to disable)")
     args = ap.parse_args()
     print("table,name,value,unit,note")
     t0 = time.time()
@@ -262,7 +336,14 @@ def main() -> None:
     table2_module_cost(args.quick)
     table3_accuracy(args.quick)
     table4_throughput(args.quick)
+    table_fused_vs_seed(args.quick)
     print(f"# done in {time.time() - t0:.1f}s ({len(ROWS)} rows)")
+    if args.out:
+        rows = [{"table": t, "name": n, "value": v, "unit": u, "note": note}
+                for t, n, v, u, note in ROWS]
+        with open(args.out, "w") as f:
+            json.dump({"rows": rows, "quick": bool(args.quick)}, f, indent=1)
+        print(f"# wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,18 @@
 """Oriented FAST detection (paper Sec. II-B1, III-C).
 
 Pipeline per pyramid level:
-  score map (Pallas kernel) -> 3x3 NMS -> border mask -> static top-K ->
-  intensity-centroid orientation from 31x31 circular-patch moments.
+  fused score map + 3x3 NMS (Pallas megakernel) -> border mask ->
+  static top-K -> intensity-centroid orientation from 31x31
+  circular-patch moments.
+
+The hot path (``orb.extract_features_batched``) gets the NMS'd score map
+straight from the fused kernel; ``detect`` below is the single-image
+convenience path and shares the same fused dispatch.  The standalone
+3x3 NMS lives in ``kernels.ref.nms3`` (the oracle) and is re-exported
+here for back-compat.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +20,7 @@ import numpy as np
 
 from repro.core.types import ORBConfig
 from repro.kernels import ops
+from repro.kernels.ref import nms3  # noqa: F401  (oracle; back-compat export)
 
 PATCH = 31
 RADIUS = PATCH // 2
@@ -24,21 +30,6 @@ _yy, _xx = np.mgrid[-RADIUS:RADIUS + 1, -RADIUS:RADIUS + 1]
 CIRCLE_MASK = (_xx ** 2 + _yy ** 2 <= RADIUS ** 2).astype(np.float32)
 X_GRID = (_xx * CIRCLE_MASK).astype(np.float32)
 Y_GRID = (_yy * CIRCLE_MASK).astype(np.float32)
-
-
-def nms3(score: jnp.ndarray) -> jnp.ndarray:
-    """3x3 non-max suppression: keep pixels that are the strict max of
-    their neighbourhood (ties keep the top-left via epsilon bias)."""
-    h, w = score.shape
-    pad = jnp.pad(score, 1, mode="constant", constant_values=-1.0)
-    neigh = []
-    for dy in (-1, 0, 1):
-        for dx in (-1, 0, 1):
-            if dy == 0 and dx == 0:
-                continue
-            neigh.append(jax.lax.dynamic_slice(pad, (1 + dy, 1 + dx), (h, w)))
-    nmax = functools.reduce(jnp.maximum, neigh)
-    return jnp.where(score >= nmax, score, 0.0) * (score > 0.0)
 
 
 def select_topk(score: jnp.ndarray, k: int, border: int):
@@ -85,7 +76,14 @@ def orientations(img: jnp.ndarray, xy: jnp.ndarray) -> jnp.ndarray:
 
 def detect(level_img: jnp.ndarray, cfg: ORBConfig, k: int,
            impl: str | None = None):
-    """Run oriented FAST on one pyramid level.
+    """Run oriented FAST on one pyramid level (single-image path).
+
+    Score-only dispatch: the standalone FAST kernel plus the ``nms3``
+    oracle — bit-identical to the fused megakernel's score output (the
+    kernels differ only in min/max association, which is exact) without
+    computing the blur this path would discard (a pallas_call output
+    cannot be dead-code-eliminated).  The frontend hot path uses
+    ``orb.extract_features_batched`` / the fused kernel instead.
 
     Returns (xy (K,2) int32 level coords, score (K,), theta (K,),
     valid (K,))."""

@@ -1,13 +1,22 @@
 """Quad-camera frame-multiplexed visual frontend (paper Sec. III-B).
 
-Mapping of the FPGA schedule (Fig. 4) onto TPU/XLA:
+Mapping of the FPGA schedule (Fig. 4) onto TPU/XLA, after the fused
+batched frontend refactor:
 
-* Frame-multiplexing (two camera channels share one FE): the L/R images
-  are a leading batch axis of ONE feature-extractor invocation — the
-  vector/matrix units are time-multiplexed across the batch exactly as
-  the FPGA FE is time-multiplexed across channels.
-* Two identical module pairs for the two stereo pairs: `vmap` over the
-  pair axis (shardable: data parallelism over pairs).
+* Frame-multiplexing (all camera channels share one FE): ALL cameras of
+  a frame — 4 for the quad rig, 2 for one stereo pair — enter
+  ``orb.extract_features_batched`` as one leading batch axis, and each
+  pyramid level costs exactly ONE fused Pallas launch
+  (``ops.fast_blur_nms_batched``) whose grid walks the camera batch as
+  its leading dimension.  The VPU is time-multiplexed across cameras
+  exactly as the FPGA FE is time-multiplexed across channels, and each
+  pixel makes a single VMEM round-trip that emits both the smoothed
+  image and the NMS'd FAST score map (the seed issued separate blur and
+  FAST passes per camera per level, plus host-graph NMS slices).
+* Two identical module pairs for the two stereo pairs: the FM stage
+  (`match_pair`) is `vmap`'d over the pair axis (shardable: data
+  parallelism over pairs); FE no longer nests vmaps — the camera batch
+  IS the multiplexing axis.
 * FE(N+1) overlapping FM(N): software-pipelined `lax.scan` — the scan
   body computes FE(frame t) and FM(features of frame t-1), which have no
   data dependence, so XLA is free to interleave them; results stream out
@@ -33,12 +42,23 @@ class StereoOutput(NamedTuple):
     depth: DepthSet
 
 
+def _split_cameras(feats, n_pairs: int):
+    """(B, ...) FeatureSet, B = 2 * n_pairs cameras in [L, R, L, R, ...]
+    order -> (feat_l, feat_r), each with leading (n_pairs,) axes (or
+    scalar pair axis dropped when n_pairs == 1 handled by callers)."""
+    paired = jax.tree.map(
+        lambda x: x.reshape(n_pairs, 2, *x.shape[1:]), feats)
+    feat_l = jax.tree.map(lambda x: x[:, 0], paired)
+    feat_r = jax.tree.map(lambda x: x[:, 1], paired)
+    return feat_l, feat_r
+
+
 def extract_pair(img_l: jnp.ndarray, img_r: jnp.ndarray, cfg: ORBConfig,
                  impl: str | None = None):
-    """Frame-multiplexed FE: one extractor invocation over the L/R batch."""
+    """Frame-multiplexed FE: ONE batched extractor call over the L/R
+    camera batch — one fused kernel launch per pyramid level."""
     stacked = jnp.stack([img_l, img_r])          # (2, H, W)
-    feats = jax.vmap(lambda im: orb.extract_features(im, cfg, impl=impl))(
-        stacked)
+    feats = orb.extract_features_batched(stacked, cfg, impl=impl)
     feat_l = jax.tree.map(lambda x: x[0], feats)
     feat_r = jax.tree.map(lambda x: x[1], feats)
     return feat_l, feat_r
@@ -67,13 +87,19 @@ def process_quad_frame(images: jnp.ndarray, cfg: ORBConfig,
                        impl: str | None = None) -> StereoOutput:
     """images: (4, H, W) — [pair0_L, pair0_R, pair1_L, pair1_R].
 
-    The two stereo pairs run through identical module instances in
-    parallel (vmap over the pair axis); outputs have a leading (2,) axis.
+    FE runs ONCE over the whole 4-camera batch (one fused kernel launch
+    per pyramid level for all cameras); the FM stage then runs through
+    identical module instances in parallel (vmap over the pair axis).
+    Outputs have a leading (2,) pair axis.
     """
     pairs = images.reshape(2, 2, *images.shape[1:])
-    return jax.vmap(
-        lambda p: process_stereo_frame(p[0], p[1], cfg, intr, impl=impl)
-    )(pairs)
+    feats = orb.extract_features_batched(images, cfg, impl=impl)  # (4, ...)
+    feat_l, feat_r = _split_cameras(feats, n_pairs=2)
+    matches, depth = jax.vmap(
+        lambda p, fl, fr: match_pair(p[0], p[1], fl, fr, cfg, intr,
+                                     impl=impl)
+    )(pairs, feat_l, feat_r)
+    return StereoOutput(feat_l, feat_r, matches, depth)
 
 
 def run_sequence(frames: jnp.ndarray, cfg: ORBConfig,
@@ -106,8 +132,9 @@ def run_sequence_pipelined(frames: jnp.ndarray, cfg: ORBConfig,
 
     def fe(frame):
         pairs = frame.reshape(2, 2, *frame.shape[1:])
-        return pairs, jax.vmap(
-            lambda p: extract_pair(p[0], p[1], cfg, impl=impl))(pairs)
+        # One batched FE over all 4 cameras (one fused launch per level).
+        feats = orb.extract_features_batched(frame, cfg, impl=impl)
+        return pairs, _split_cameras(feats, n_pairs=2)
 
     def fm(pairs, feats):
         feat_l, feat_r = feats

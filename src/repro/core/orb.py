@@ -1,36 +1,64 @@
 """ORB feature extraction — the paper's Feature Extractor block (Fig. 3d).
 
-Per level: resize -> FAST detect -> orientation -> smoothing -> rBRIEF,
-then merge levels into one static-shape FeatureSet with level-0 coords.
+The hot path is ``extract_features_batched``: all cameras enter as one
+leading batch axis and each pyramid level costs exactly ONE fused kernel
+launch (``ops.fast_blur_nms_batched``) that emits both the smoothed
+image (for rBRIEF) and the NMS'd FAST score map (for top-K) from a
+single VMEM pass — the TPU analog of the paper's frame-multiplexed FE
+streaming each frame once through shared FAST + smoothing hardware.
+The single-image ``extract_features`` is a batch-of-one view of it.
+
+Per level: batched resize -> fused blur+FAST+NMS -> top-K ->
+orientation -> rBRIEF, then merge levels into one static-shape
+FeatureSet with level-0 coords.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import brief, fast, pyramid
 from repro.core.types import FeatureSet, ORBConfig
+from repro.kernels import ops
 
 
-def extract_features(image: jnp.ndarray, cfg: ORBConfig,
-                     impl: str | None = None) -> FeatureSet:
-    """image: (H, W) uint8/float in [0, 255] -> FeatureSet of K features."""
-    levels = pyramid.build_pyramid(image, cfg)
+def extract_features_batched(images: jnp.ndarray, cfg: ORBConfig,
+                             impl: str | None = None) -> FeatureSet:
+    """images: (B, H, W) uint8/float in [0, 255] — B cameras — to a
+    FeatureSet of K features with a leading (B,) axis on every field."""
+    levels = pyramid.build_pyramid_batched(images, cfg)
     ks = cfg.features_per_level()
     parts = []
-    for lvl, (img_l, k_l) in enumerate(zip(levels, ks)):
-        xy, score, theta, valid = fast.detect(img_l, cfg, k_l, impl=impl)
-        smoothed = brief.smooth(img_l, cfg, impl=impl)
-        desc = brief.describe(smoothed, xy, theta)
+    for lvl, (imgs_l, k_l) in enumerate(zip(levels, ks)):
+        b = imgs_l.shape[0]
+        smoothed, score = ops.fast_blur_nms_batched(
+            imgs_l, float(cfg.fast_threshold), nms=cfg.nms,
+            quantized=cfg.quantized, impl=impl)
+        xy, vals, valid = jax.vmap(
+            lambda s: fast.select_topk(s, k_l, cfg.border))(score)
+        theta = jax.vmap(fast.orientations)(imgs_l, xy)
+        desc = jax.vmap(brief.describe)(smoothed, xy, theta)
         scale = cfg.scale_factor ** lvl
         parts.append(FeatureSet(
             xy=xy.astype(jnp.float32) * scale,
-            level=jnp.full((k_l,), lvl, dtype=jnp.int32),
-            score=score,
+            level=jnp.full((b, k_l), lvl, dtype=jnp.int32),
+            score=vals,
             theta=theta,
             desc=desc,
             valid=valid,
         ))
     return FeatureSet(*[jnp.concatenate([getattr(p, f) for p in parts],
-                                        axis=0)
+                                        axis=1)
                         for f in FeatureSet._fields])
+
+
+def extract_features(image: jnp.ndarray, cfg: ORBConfig,
+                     impl: str | None = None) -> FeatureSet:
+    """image: (H, W) uint8/float in [0, 255] -> FeatureSet of K features.
+
+    Batch-of-one view of ``extract_features_batched`` so single-image
+    callers share the fused kernel path bit-for-bit.
+    """
+    feats = extract_features_batched(image[None], cfg, impl=impl)
+    return jax.tree.map(lambda x: x[0], feats)

@@ -30,3 +30,13 @@ def build_pyramid(image: jnp.ndarray, cfg: ORBConfig) -> list[jnp.ndarray]:
             out = jnp.round(jnp.clip(out, 0.0, 255.0))
         levels.append(out)
     return levels
+
+
+def build_pyramid_batched(images: jnp.ndarray,
+                          cfg: ORBConfig) -> list[jnp.ndarray]:
+    """Batched pyramid: (B, H, W) -> list of (B, h_l, w_l) float32.
+
+    B is the flattened camera batch of the fused frontend; each level is
+    one resize over the whole batch, feeding one fused kernel launch.
+    """
+    return jax.vmap(lambda im: build_pyramid(im, cfg))(images)

@@ -32,14 +32,15 @@ def _dequant(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     return q.astype(jnp.float32) * scale
 
 
-def _ring_allreduce_int8(x: jnp.ndarray, axis: str) -> jnp.ndarray:
-    """All-reduce over mesh axis `axis` with int8 wire format.
+def _ring_allreduce_int8(x: jnp.ndarray, axis: str, n: int) -> jnp.ndarray:
+    """All-reduce over mesh axis `axis` (static size ``n`` — the caller
+    reads it off the mesh; jax<0.5 has no ``lax.axis_size``) with int8
+    wire format.
 
     x: per-device f32 vector (flat, length % n == 0; caller pads).
     Classic two-phase ring: n-1 reduce-scatter hops + n-1 all-gather
     hops, each hop sending size/n int8 + one f32 scale.
     """
-    n = jax.lax.axis_size(axis)
     me = jax.lax.axis_index(axis)
     chunks = x.reshape(n, -1)
     perm = [(i, (i + 1) % n) for i in range(n)]
@@ -92,7 +93,7 @@ def compressed_psum(tree, mesh: Mesh, axis: str = "data"):
     @functools.partial(shard_map, mesh=mesh, in_specs=spec,
                        out_specs=spec, check_rep=False)
     def run(v):
-        return _ring_allreduce_int8(v, axis)
+        return _ring_allreduce_int8(v, axis, n)
 
     summed = run(cat)[:cat.size - pad if pad else None]
     if pad:

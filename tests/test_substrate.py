@@ -53,7 +53,9 @@ def test_resolver_maximal_divisible_prefix():
     # batch wants (pod, data): with batch=2 only pod(2) fits on a
     # (2, 2, 1) mesh; with batch=4 both fit.  AbstractMesh lets the
     # resolver be tested without 4 physical devices.
-    mesh = jax.sharding.AbstractMesh((2, 2, 1), ("pod", "data", "model"))
+    # jax 0.4.x AbstractMesh signature: one ((name, size), ...) tuple
+    mesh = jax.sharding.AbstractMesh(
+        (("pod", 2), ("data", 2), ("model", 1)))
     rules = Rules.make()
     s2 = resolve(rules.acts, ("batch",), (2,), mesh)
     s4 = resolve(rules.acts, ("batch",), (4,), mesh)
