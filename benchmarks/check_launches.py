@@ -1,0 +1,58 @@
+"""Launch-count regression gate for CI (ROADMAP open item).
+
+Wall clock on shared CI runners is noisy; traced Pallas launch counts
+are deterministic.  ``benchmarks.run`` records, in the
+``BENCH_frontend.json`` artifact, the number of kernel launches a traced
+quad frame issues (``launch_gate/quad_frame_launches``) next to the
+fused-schedule budget (``launch_gate/quad_frame_budget`` — 2 per pyramid
+level FE, dense + sparse descriptor, plus 2 FM).  This script fails the
+job when the actual count exceeds the budget, i.e. when a change
+silently un-fuses the frontend back toward per-camera-per-op dispatch.
+
+Usage: python -m benchmarks.check_launches [BENCH_frontend.json]
+Exit status: 0 when every gate holds, 1 on regression or missing rows.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def check(path: str) -> int:
+    with open(path) as f:
+        artifact = json.load(f)
+    rows = {(r["table"], r["name"]): r for r in artifact["rows"]}
+
+    gates = [name for (table, name) in rows
+             if table == "launch_gate" and "launches" in name]
+    if not gates:
+        print(f"FAIL: no launch_gate/*launches* rows in {path} — "
+              "did benchmarks.run change row names?")
+        return 1
+
+    status = 0
+    for name in sorted(gates):
+        budget_name = name.replace("launches", "budget")
+        actual_row = rows[("launch_gate", name)]
+        budget_row = rows.get(("launch_gate", budget_name))
+        if budget_row is None:
+            print(f"FAIL: {name} has no matching {budget_name} row")
+            status = 1
+            continue
+        actual, budget = int(actual_row["value"]), int(budget_row["value"])
+        verdict = "ok" if actual <= budget else "REGRESSION"
+        print(f"{verdict}: launch_gate/{name} = {actual} "
+              f"(budget {budget}; {actual_row['note']})")
+        if actual > budget:
+            status = 1
+    return status
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_frontend.json"
+    sys.exit(check(path))
+
+
+if __name__ == "__main__":
+    main()

@@ -8,10 +8,18 @@
                                   (jnp oracle) + word-length ablation
   table4_throughput      Tab. IV  fps at 640x480 / 1280x720 on this CPU
                                   + modeled TPU-v5e roofline fps
-  table_fused_vs_seed    PR 1     fused batched frontend (one launch per
-                                  level for all 4 cameras) vs the seed
-                                  per-camera-per-op dispatch: wall clock
-                                  + traced Pallas launch counts
+  table_fused_vs_seed    PR 1     fused batched frontend (one dense
+                                  launch per level for all 4 cameras) vs
+                                  the seed per-camera-per-op dispatch:
+                                  wall clock + traced launch counts
+  table_describe_fused_vs_gather
+                         PR 2     fused sparse descriptor stage (one
+                                  orientation+rBRIEF launch per level,
+                                  LUT-binned steering) vs the seed
+                                  host-graph per-keypoint gathers; also
+                                  emits the launch_gate rows the CI
+                                  regression gate (check_launches.py)
+                                  enforces
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--out PATH]
 Prints CSV rows ``table,name,value,unit,note`` and writes them to a
@@ -323,6 +331,90 @@ def table_fused_vs_seed(quick=False):
              "1 fused launch per level")
 
 
+def table_describe_fused_vs_gather(quick=False):
+    """Tentpole regression number for the sparse stage: the fused
+    orientation + rBRIEF dispatch (ONE launch per level for all 4
+    cameras, LUT-binned steering, gather-free taps) vs the seed schedule
+    (vmapped per-keypoint 31x31 dynamic_slice gathers + per-keypoint
+    cos/sin exact steering on the host graph).
+
+    Wall clock is measured on the jnp paths (interpret-free CPU);
+    launch counts are traced under the Pallas impl — the deterministic
+    half, enforced in CI by ``benchmarks.check_launches``.
+    """
+    from repro.core import fast, process_quad_frame
+    from repro.core.types import CameraIntrinsics
+    resolutions = [(480, 640)] + ([] if quick else [(720, 1280)])
+    for h, w in resolutions:
+        rng = np.random.RandomState(7)
+        imgs = jnp.asarray(rng.randint(0, 256, (4, h, w)).astype(np.float32))
+        ocfg = ORBConfig(height=h, width=w, n_levels=2, max_features=1000)
+        res = f"{w}x{h}"
+
+        # Dense stage + top-K once, outside the timed region: both
+        # contenders consume identical (raw, smoothed, xy) level inputs.
+        levels = pyramid.build_pyramid_batched(imgs, ocfg)
+        ks = ocfg.features_per_level()
+        staged = []
+        for imgs_l, k_l in zip(levels, ks):
+            smoothed, score = ops.fast_blur_nms_batched(
+                imgs_l, float(ocfg.fast_threshold), impl="ref")
+            xy, _, _ = jax.vmap(
+                lambda s, k=k_l: fast.select_topk(s, k, ocfg.border))(score)
+            staged.append((jax.block_until_ready(imgs_l),
+                           jax.block_until_ready(smoothed),
+                           jax.block_until_ready(xy)))
+
+        def gather_stage(staged_levels):
+            """Seed schedule: host-graph patch gathers, exact steering."""
+            outs = []
+            for raw_l, sm_l, xy_l in staged_levels:
+                theta = jax.vmap(lambda im, p: ref.patch_theta(
+                    ref.extract_patches(im, p))[0])(raw_l, xy_l)
+                desc = jax.vmap(ref.describe_steered)(sm_l, xy_l, theta)
+                outs.append((theta, desc))
+            return outs
+
+        def fused_stage(staged_levels, impl="ref"):
+            """Fused schedule: one sparse dispatch per level."""
+            return [ops.orient_describe_batched(raw_l, sm_l, xy_l, impl=impl)
+                    for raw_l, sm_l, xy_l in staged_levels]
+
+        iters = 3 if (h, w) == (720, 1280) else 5
+        t_gather, _ = _bench(jax.jit(gather_stage), staged, iters=iters)
+        t_fused, _ = _bench(jax.jit(fused_stage), staged, iters=iters)
+        emit("describe", f"gather_ms_{res}", round(t_gather * 1e3, 2), "ms",
+             "4 cams x 2 levels, vmapped 31x31 gathers + exact steering")
+        emit("describe", f"fused_ms_{res}", round(t_fused * 1e3, 2), "ms",
+             "4 cams x 2 levels, batched LUT dispatch (jnp)")
+        emit("describe", f"speedup_{res}", round(t_gather / t_fused, 2), "x",
+             "gather / fused wall clock")
+
+        # Launch counts: trace-only (no kernel execution) under Pallas.
+        ops.reset_launch_count()
+        jax.eval_shape(lambda s: fused_stage(s, impl="pallas"), staged)
+        emit("describe", f"launches_fused_{res}", ops.launch_count(),
+             "kernels", "1 sparse launch per level (gather path: 0 "
+             "kernels, all host graph)")
+
+    # Launch-count regression gate rows: the CI step
+    # (benchmarks.check_launches) fails when actual > budget.
+    h, w = (240, 320) if quick else (480, 640)
+    gcfg = ORBConfig(height=h, width=w, n_levels=2, max_features=512,
+                     max_disparity=64)
+    intr = CameraIntrinsics(cx=w / 2.0, cy=h / 2.0)
+    gimgs = jnp.zeros((4, h, w), jnp.float32)
+    ops.reset_launch_count()
+    jax.eval_shape(
+        lambda f: process_quad_frame(f, gcfg, intr, impl="pallas"), gimgs)
+    actual = ops.launch_count()
+    budget = 2 * gcfg.n_levels + 2
+    emit("launch_gate", "quad_frame_launches", actual, "kernels",
+         f"traced, 4 cams {w}x{h} x {gcfg.n_levels} levels")
+    emit("launch_gate", "quad_frame_budget", budget, "kernels",
+         "2 per level FE (dense + sparse) + 2 FM")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -337,6 +429,7 @@ def main() -> None:
     table3_accuracy(args.quick)
     table4_throughput(args.quick)
     table_fused_vs_seed(args.quick)
+    table_describe_fused_vs_gather(args.quick)
     print(f"# done in {time.time() - t0:.1f}s ({len(ROWS)} rows)")
     if args.out:
         rows = [{"table": t, "name": n, "value": v, "unit": u, "note": note}

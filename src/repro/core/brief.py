@@ -1,69 +1,43 @@
-"""Rotated BRIEF descriptors (paper Sec. II-B2, III-C).
+"""Rotated BRIEF descriptors (paper Sec. II-B2, III-C) — thin wrappers
+over the two-stage kernel pipeline.
 
 Descriptors are computed on the Gaussian-smoothed level image.  The
-steering follows the paper: only the n sampling pairs are rotated
-(S_theta = R_theta S), never the patch.  256 binary tests packed into
-8 x uint32 (the paper's 32 x 8-bit descriptor RAM layout).
+steering follows the paper's FPGA: only the n sampling pairs are rotated
+(S_theta = R_theta S), never the patch, and the rotation is ANGLE-BINNED
+— theta is quantized to 12 bins of 30 degrees and the rotated pattern
+comes from the precomputed ``pattern.STEER_LUT`` ROM (Sec. III-C),
+not from per-keypoint cos/sin + round.  256 binary tests are packed
+into 8 x uint32 (the paper's 32 x 8-bit descriptor RAM layout).
+
+The frontend hot path computes descriptors inside the fused sparse
+kernel (``ops.orient_describe_batched`` — one launch per level for all
+cameras); ``describe`` below is the software view of that stage for
+callers that already hold theta: it quantizes theta with the same
+``ref.theta_to_bin`` and reads the same LUT, so given the same theta it
+reproduces the kernel output bit-for-bit.  The exact (unbinned) steering
+survives as ``kernels.ref.describe_steered`` for quantization-error
+measurement.
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import pattern
-from repro.core.fast import PATCH, RADIUS
 from repro.core.types import ORBConfig
 from repro.kernels import ops
-
-_N = pattern.N_PAIRS
-_WORDS = _N // 32
-# Bit weights per pair within its word: bit i of word i // 32.
-_BIT_WEIGHT = (jnp.uint32(1) << jnp.arange(_N, dtype=jnp.uint32) % 32)
-_WORD_ID = jnp.arange(_N) // 32
-
-
-def steered_offsets(theta: jnp.ndarray):
-    """Rotate the pattern by theta (paper Eq. 3).  theta: scalar.
-    Returns int32 (N, 2) offsets for A and B points."""
-    c, s = jnp.cos(theta), jnp.sin(theta)
-    pa = jnp.asarray(pattern.PATTERN_A, dtype=jnp.float32)
-    pb = jnp.asarray(pattern.PATTERN_B, dtype=jnp.float32)
-
-    def rot(p):
-        x = c * p[:, 0] - s * p[:, 1]
-        y = s * p[:, 0] + c * p[:, 1]
-        return jnp.stack([jnp.round(x), jnp.round(y)], axis=-1).astype(
-            jnp.int32)
-
-    return rot(pa), rot(pb)
-
-
-def _pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
-    """(N,) bool -> (8,) uint32."""
-    weighted = bits.astype(jnp.uint32) * _BIT_WEIGHT
-    return jax.ops.segment_sum(weighted, _WORD_ID, num_segments=_WORDS)
+from repro.kernels import ref as _ref
 
 
 def describe(smoothed: jnp.ndarray, xy: jnp.ndarray,
              theta: jnp.ndarray) -> jnp.ndarray:
-    """Compute rBRIEF descriptors.
+    """Compute LUT-steered rBRIEF descriptors for one image.
 
     smoothed: (H, W) float32 smoothed level image; xy: (K, 2) int32 level
-    coords (>= border from edges); theta: (K,) float32.
+    coords; theta: (K,) float32.
     Returns (K, 8) uint32.
     """
-    padded = jnp.pad(smoothed.astype(jnp.float32), RADIUS, mode="edge")
-
-    def one(pt, th):
-        patch = jax.lax.dynamic_slice(padded, (pt[1], pt[0]), (PATCH, PATCH))
-        a, b = steered_offsets(th)
-        pa = patch[a[:, 1] + RADIUS, a[:, 0] + RADIUS]
-        pb = patch[b[:, 1] + RADIUS, b[:, 0] + RADIUS]
-        # paper Eq. 2: tau = 1 iff p(A) < p(B)
-        return _pack_bits(pa < pb)
-
-    return jax.vmap(one)(xy, theta)
+    return _ref.lut_descriptor(_ref.extract_patches(smoothed, xy),
+                               _ref.theta_to_bin(theta))
 
 
 def smooth(level_img: jnp.ndarray, cfg: ORBConfig,

@@ -1,35 +1,29 @@
-"""Oriented FAST detection (paper Sec. II-B1, III-C).
+"""Oriented FAST detection (paper Sec. II-B1, III-C) — thin wrappers
+over the two-stage kernel pipeline.
 
-Pipeline per pyramid level:
-  fused score map + 3x3 NMS (Pallas megakernel) -> border mask ->
-  static top-K -> intensity-centroid orientation from 31x31
-  circular-patch moments.
+The frontend splits per pyramid level into a DENSE stage (fused
+blur + FAST + NMS megakernel over every pixel) and a SPARSE stage (one
+``ops.orient_describe_batched`` launch over the top-K keypoints).  This
+module owns the pieces between them: static top-K selection, plus
+single-image convenience wrappers that route through the SAME sparse
+dispatch as the batched hot path, so single-image and batched results
+are bit-identical.
 
-The hot path (``orb.extract_features_batched``) gets the NMS'd score map
-straight from the fused kernel; ``detect`` below is the single-image
-convenience path and shares the same fused dispatch.  The standalone
-3x3 NMS lives in ``kernels.ref.nms3`` (the oracle) and is re-exported
-here for back-compat.
+The 31x31 patch geometry, circular-patch moment grids and the
+orientation oracle live in ``kernels.ref`` (shared with the Pallas
+kernel); the standalone 3x3 NMS oracle is re-exported here for
+back-compat.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.types import ORBConfig
 from repro.kernels import ops
 from repro.kernels.ref import nms3  # noqa: F401  (oracle; back-compat export)
-
-PATCH = 31
-RADIUS = PATCH // 2
-
-# Circular patch mask and coordinate grids (paper Eq. 1: r = patch radius).
-_yy, _xx = np.mgrid[-RADIUS:RADIUS + 1, -RADIUS:RADIUS + 1]
-CIRCLE_MASK = (_xx ** 2 + _yy ** 2 <= RADIUS ** 2).astype(np.float32)
-X_GRID = (_xx * CIRCLE_MASK).astype(np.float32)
-Y_GRID = (_yy * CIRCLE_MASK).astype(np.float32)
+from repro.kernels.ref import PATCH, RADIUS  # noqa: F401
 
 
 def select_topk(score: jnp.ndarray, k: int, border: int):
@@ -48,30 +42,19 @@ def select_topk(score: jnp.ndarray, k: int, border: int):
     return jnp.stack([xs, ys], axis=-1), vals, valid
 
 
-def _patch31(padded_img: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray):
-    """31x31 patch centered at (x, y); padded_img is edge-padded by RADIUS."""
-    return jax.lax.dynamic_slice(padded_img, (y, x), (PATCH, PATCH))
+def orientations(img: jnp.ndarray, xy: jnp.ndarray,
+                 impl: str | None = None) -> jnp.ndarray:
+    """Intensity-centroid orientation theta = atan2(m01, m10) (paper
+    Eq. 1) for a single image — batch-of-one view of the fused sparse
+    dispatch (orientation-only kernel), so it shares every bit with
+    ``orb.extract_features_batched``.
 
-
-def orientations(img: jnp.ndarray, xy: jnp.ndarray) -> jnp.ndarray:
-    """Intensity-centroid orientation theta = atan2(m01, m10) (paper Eq. 1).
-
-    img: (H, W) float32 level image; xy: (K, 2) int32.  Assumes xy at
-    least ``border`` >= RADIUS from the edge (guaranteed by select_topk),
-    so no padding is needed beyond edge replication.
+    img: (H, W) float32 level image; xy: (K, 2) int32.  Coordinates are
+    clamped into the image by the dispatch.
     """
-    padded = jnp.pad(img.astype(jnp.float32), RADIUS, mode="edge")
-    xg = jnp.asarray(X_GRID)
-    yg = jnp.asarray(Y_GRID)
-    mask = jnp.asarray(CIRCLE_MASK)
-
-    def one(pt):
-        patch = _patch31(padded, pt[0], pt[1]) * mask
-        m10 = jnp.sum(xg * patch)
-        m01 = jnp.sum(yg * patch)
-        return jnp.arctan2(m01, m10)
-
-    return jax.vmap(one)(xy)
+    theta, _, _ = ops.orient_describe_batched(img[None], None, xy[None],
+                                              impl=impl)
+    return theta[0]
 
 
 def detect(level_img: jnp.ndarray, cfg: ORBConfig, k: int,
@@ -82,8 +65,12 @@ def detect(level_img: jnp.ndarray, cfg: ORBConfig, k: int,
     oracle — bit-identical to the fused megakernel's score output (the
     kernels differ only in min/max association, which is exact) without
     computing the blur this path would discard (a pallas_call output
-    cannot be dead-code-eliminated).  The frontend hot path uses
-    ``orb.extract_features_batched`` / the fused kernel instead.
+    cannot be dead-code-eliminated).  Orientation then routes through
+    the SAME ``ops.orient_describe_batched`` dispatch as the batched hot
+    path (orientation-only kernel: no smoothed image, no descriptor), so
+    ``detect`` and ``orb.extract_features_batched`` can never diverge on
+    theta.  The frontend hot path uses ``orb.extract_features_batched``
+    instead.
 
     Returns (xy (K,2) int32 level coords, score (K,), theta (K,),
     valid (K,))."""
@@ -92,5 +79,5 @@ def detect(level_img: jnp.ndarray, cfg: ORBConfig, k: int,
     if cfg.nms:
         score = nms3(score)
     xy, vals, valid = select_topk(score, k, cfg.border)
-    theta = orientations(level_img, xy)
+    theta = orientations(level_img, xy, impl=impl)
     return xy, vals, theta, valid

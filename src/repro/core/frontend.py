@@ -6,13 +6,15 @@ batched frontend refactor:
 * Frame-multiplexing (all camera channels share one FE): ALL cameras of
   a frame — 4 for the quad rig, 2 for one stereo pair — enter
   ``orb.extract_features_batched`` as one leading batch axis, and each
-  pyramid level costs exactly ONE fused Pallas launch
-  (``ops.fast_blur_nms_batched``) whose grid walks the camera batch as
-  its leading dimension.  The VPU is time-multiplexed across cameras
-  exactly as the FPGA FE is time-multiplexed across channels, and each
-  pixel makes a single VMEM round-trip that emits both the smoothed
-  image and the NMS'd FAST score map (the seed issued separate blur and
-  FAST passes per camera per level, plus host-graph NMS slices).
+  pyramid level costs exactly TWO fused Pallas launches whose grids walk
+  the camera batch as their leading dimension: the DENSE stage
+  (``ops.fast_blur_nms_batched`` — blur + FAST + NMS in one VMEM pass
+  per pixel) and the SPARSE stage (``ops.orient_describe_batched`` —
+  orientation + moments + LUT-steered rBRIEF in one VMEM pass per
+  keypoint patch).  The VPU is time-multiplexed across cameras exactly
+  as the FPGA FE is time-multiplexed across channels; the seed issued
+  separate blur and FAST passes per camera per level, host-graph NMS
+  slices, and vmapped per-keypoint 31x31 gathers for the sparse half.
 * Two identical module pairs for the two stereo pairs: the FM stage
   (`match_pair`) is `vmap`'d over the pair axis (shardable: data
   parallelism over pairs); FE no longer nests vmaps — the camera batch
@@ -56,7 +58,7 @@ def _split_cameras(feats, n_pairs: int):
 def extract_pair(img_l: jnp.ndarray, img_r: jnp.ndarray, cfg: ORBConfig,
                  impl: str | None = None):
     """Frame-multiplexed FE: ONE batched extractor call over the L/R
-    camera batch — one fused kernel launch per pyramid level."""
+    camera batch — two fused launches (dense + sparse) per level."""
     stacked = jnp.stack([img_l, img_r])          # (2, H, W)
     feats = orb.extract_features_batched(stacked, cfg, impl=impl)
     feat_l = jax.tree.map(lambda x: x[0], feats)
@@ -87,8 +89,9 @@ def process_quad_frame(images: jnp.ndarray, cfg: ORBConfig,
                        impl: str | None = None) -> StereoOutput:
     """images: (4, H, W) — [pair0_L, pair0_R, pair1_L, pair1_R].
 
-    FE runs ONCE over the whole 4-camera batch (one fused kernel launch
-    per pyramid level for all cameras); the FM stage then runs through
+    FE runs ONCE over the whole 4-camera batch (two fused launches —
+    dense + sparse — per pyramid level for all cameras); the FM stage
+    then runs through
     identical module instances in parallel (vmap over the pair axis).
     Outputs have a leading (2,) pair axis.
     """
@@ -132,7 +135,7 @@ def run_sequence_pipelined(frames: jnp.ndarray, cfg: ORBConfig,
 
     def fe(frame):
         pairs = frame.reshape(2, 2, *frame.shape[1:])
-        # One batched FE over all 4 cameras (one fused launch per level).
+        # One batched FE over all 4 cameras (2 fused launches per level).
         feats = orb.extract_features_batched(frame, cfg, impl=impl)
         return pairs, _split_cameras(feats, n_pairs=2)
 

@@ -1,16 +1,29 @@
-"""ORB feature extraction — the paper's Feature Extractor block (Fig. 3d).
+"""ORB feature extraction — the paper's Feature Extractor block (Fig. 3d)
+as an explicit two-stage dense/sparse pipeline.
 
 The hot path is ``extract_features_batched``: all cameras enter as one
-leading batch axis and each pyramid level costs exactly ONE fused kernel
-launch (``ops.fast_blur_nms_batched``) that emits both the smoothed
-image (for rBRIEF) and the NMS'd FAST score map (for top-K) from a
-single VMEM pass — the TPU analog of the paper's frame-multiplexed FE
-streaming each frame once through shared FAST + smoothing hardware.
-The single-image ``extract_features`` is a batch-of-one view of it.
+leading batch axis and each pyramid level costs exactly TWO fused kernel
+launches —
 
-Per level: batched resize -> fused blur+FAST+NMS -> top-K ->
-orientation -> rBRIEF, then merge levels into one static-shape
-FeatureSet with level-0 coords.
+  1. DENSE stage (``ops.fast_blur_nms_batched``): one VMEM pass over
+     every pixel emits both the smoothed image (rBRIEF input) and the
+     NMS'd FAST score map (top-K input) for the whole camera batch.
+  2. SPARSE stage (``ops.orient_describe_batched``): after the static
+     top-K, one launch over the (B, K) keypoint block loads each 31x31
+     patch into VMEM once and emits orientation theta, the circular-
+     patch moments, and the packed 8 x uint32 rBRIEF descriptor, with
+     steering resolved through the 30-degree-binned LUT ROM.
+
+This is the TPU analog of the paper's frame-multiplexed FE (Sec. III-B/
+III-C): the FPGA streams each frame once through shared FAST + smoothing
+hardware, then feeds rotation and description from a shared patch
+buffer.  The seed instead ran the sparse half as vmapped 31x31
+``dynamic_slice`` gathers on the host graph — the last serialized
+per-frame cost this refactor removes.  The single-image
+``extract_features`` is a batch-of-one view of the same pipeline.
+
+Per level: batched resize -> dense launch -> top-K -> sparse launch,
+then merge levels into one static-shape FeatureSet with level-0 coords.
 """
 
 from __future__ import annotations
@@ -18,7 +31,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import brief, fast, pyramid
+from repro.core import fast, pyramid
 from repro.core.types import FeatureSet, ORBConfig
 from repro.kernels import ops
 
@@ -26,7 +39,11 @@ from repro.kernels import ops
 def extract_features_batched(images: jnp.ndarray, cfg: ORBConfig,
                              impl: str | None = None) -> FeatureSet:
     """images: (B, H, W) uint8/float in [0, 255] — B cameras — to a
-    FeatureSet of K features with a leading (B,) axis on every field."""
+    FeatureSet of K features with a leading (B,) axis on every field.
+
+    Exactly 2 kernel launches per pyramid level (1 dense + 1 sparse)
+    for ALL cameras — asserted by the traced launch counter in tests.
+    """
     levels = pyramid.build_pyramid_batched(images, cfg)
     ks = cfg.features_per_level()
     parts = []
@@ -37,8 +54,8 @@ def extract_features_batched(images: jnp.ndarray, cfg: ORBConfig,
             quantized=cfg.quantized, impl=impl)
         xy, vals, valid = jax.vmap(
             lambda s: fast.select_topk(s, k_l, cfg.border))(score)
-        theta = jax.vmap(fast.orientations)(imgs_l, xy)
-        desc = jax.vmap(brief.describe)(smoothed, xy, theta)
+        theta, _moments, desc = ops.orient_describe_batched(
+            imgs_l, smoothed, xy, impl=impl)
         scale = cfg.scale_factor ** lvl
         parts.append(FeatureSet(
             xy=xy.astype(jnp.float32) * scale,

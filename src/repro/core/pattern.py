@@ -1,57 +1,14 @@
-"""BRIEF sampling pattern (paper Sec. II-B2).
+"""Back-compat re-export of the BRIEF sampling pattern.
 
-The paper selects ``n`` point pairs from the circular patch "based on
-Gaussian distribution" (ORB's original construction).  We generate a
-deterministic pattern once at import time with a fixed seed so that the
-descriptor is reproducible across the pure-jnp oracle, the Pallas kernel
-and checkpoints.
-
-The pattern radius is capped at ``PATTERN_RADIUS`` so that after an
-arbitrary rotation (norm-preserving) and rounding, every sampled point
-stays strictly inside the 31x31 patch (radius 15) used by the hardware.
+The pattern and its angle-binned steering LUT moved to
+``repro.kernels.pattern`` (numpy-only) so the kernel layer — which may
+not import ``repro.core`` — owns the single definition shared by the
+Pallas descriptor kernel, the jnp fallback and the ref oracle.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-N_PAIRS = 256          # descriptor length in bits (32 x 8 bits, Sec. III-C)
-PATCH_RADIUS = 15      # 31 x 31 patch, matching the FPGA register bank
-PATTERN_RADIUS = 13    # max |offset| so rotate+round stays within radius 15
-PATTERN_SIGMA = PATCH_RADIUS / 2.0
-_SEED = 20210606       # AICAS'21 conference date; fixed for reproducibility
-
-
-def _generate(seed: int = _SEED) -> np.ndarray:
-    """Return int32 array (N_PAIRS, 4) of (ax, ay, bx, by) offsets."""
-    rng = np.random.RandomState(seed)
-    pts = []
-    while len(pts) < N_PAIRS:
-        cand = rng.normal(0.0, PATTERN_SIGMA, size=(4 * N_PAIRS, 4))
-        cand = np.round(cand).astype(np.int32)
-        ok = (
-            (np.abs(cand[:, 0::2]).max(axis=1) ** 2
-             + np.abs(cand[:, 1::2]).max(axis=1) ** 2)
-            <= PATTERN_RADIUS ** 2
-        )
-        # Also require A != B so every binary test is informative.
-        ok &= np.any(cand[:, :2] != cand[:, 2:], axis=1)
-        pts.extend(cand[ok].tolist())
-    return np.asarray(pts[:N_PAIRS], dtype=np.int32)
-
-
-# (N_PAIRS, 4): columns are (ax, ay, bx, by), y down / x right image coords.
-PATTERN: np.ndarray = _generate()
-
-# Split views used by descriptor code: (N_PAIRS, 2) each.
-PATTERN_A: np.ndarray = PATTERN[:, 0:2]
-PATTERN_B: np.ndarray = PATTERN[:, 2:4]
-
-
-def rotated_pattern(theta: float) -> np.ndarray:
-    """Reference (numpy) steered pattern for a single angle — test helper."""
-    c, s = np.cos(theta), np.sin(theta)
-    rot = np.array([[c, -s], [s, c]])
-    a = np.round(PATTERN_A @ rot.T).astype(np.int32)
-    b = np.round(PATTERN_B @ rot.T).astype(np.int32)
-    return np.concatenate([a, b], axis=1)
+from repro.kernels.pattern import (ANGLE_BIN_STEP, N_ANGLE_BINS,  # noqa: F401
+                                   N_PAIRS, PATCH_RADIUS, PATTERN,
+                                   PATTERN_A, PATTERN_B, PATTERN_RADIUS,
+                                   PATTERN_SIGMA, STEER_LUT, rotated_pattern)

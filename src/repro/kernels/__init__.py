@@ -1,15 +1,21 @@
 """Pallas TPU kernels for the paper's compute hot-spots (FE + FM).
 
 frontend_fused — batched blur + FAST + NMS megakernel (one VMEM pass
-                 per tile for all cameras x levels — the frontend hot
-                 path, paper's frame-multiplexed FE analog)
+                 per tile for all cameras x levels — the DENSE stage,
+                 paper's frame-multiplexed FE analog)
+describe_fused — batched orientation + moments + LUT-steered rBRIEF per
+                 keypoint block (the SPARSE stage; gather-free taps via
+                 selection matmul, 30-degree-binned steering ROM)
+pattern        — BRIEF sampling pattern + STEER_LUT ROM (numpy-only)
 fast_detect    — FAST-9/16 corner score map (standalone, halo'd tiles)
 gaussian_blur  — fused separable 7x7 Gaussian (line-buffer analog)
 hamming_match  — fused search-region + Hamming argmin (FM front half)
 sad_rectify    — 11x11 SAD sweep (FM rectifier)
 
 ops.py dispatches kernels vs. the pure-jnp oracles in ref.py and owns
-all padding; the batch-first entry point is ``ops.fast_blur_nms_batched``.
+all padding; the batch-first entry points are ``ops.fast_blur_nms_batched``
+(dense) and ``ops.orient_describe_batched`` (sparse) — together exactly
+two launches per pyramid level for the whole camera batch.
 """
 
 from repro.kernels import ops, ref  # noqa: F401

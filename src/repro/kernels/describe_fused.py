@@ -1,0 +1,193 @@
+"""Pallas TPU kernel: batched sparse ORB descriptor stage (orientation +
+rBRIEF) — the gather-free half of the two-stage frontend.
+
+The dense stage (``frontend_fused.py``) emits per-pixel products (blur +
+NMS'd FAST score); after top-K the frontend needs three per-KEYPOINT
+products, which the seed computed as vmapped 31x31 ``dynamic_slice``
+gathers over the host graph — the last serialized host-graph work per
+frame.  This kernel computes all three in ONE launch per pyramid level
+for the whole camera batch:
+
+  * intensity-centroid orientation theta (paper Eq. 1),
+  * the circular-patch moments (m10, m01), and
+  * the packed 8 x uint32 rBRIEF descriptor (paper Eqs. 2-3).
+
+Grid = (B, K / KP_BLOCK): each step loads KP_BLOCK 31x31 patches from
+the raw and smoothed level images (both resident in VMEM; the block
+index map pins them per camera so the pipeline fetches each image once,
+not once per K-block) and keeps every per-keypoint product on-chip.
+This mirrors the paper's FPGA datapath (Sec. III-C), where a shared
+patch register bank feeds the rotation and descriptor pipelines and the
+31x31 window is read from BRAM exactly once per feature.
+
+Steering is LUT-binned as in the paper: theta is quantized to 12 bins
+of 30 degrees and the rotated pattern comes from the precomputed
+``pattern.STEER_LUT`` ROM — no per-keypoint cos/sin + round.  Taps are
+resolved GATHER-FREE: the LUT row is expanded to a +-1 selection matrix
+with a 2D iota compare and contracted against the flattened patch on
+the MXU, so ``tau = p(A) < p(B)`` becomes the sign of a matmul.  The
+sign of a correctly-rounded f32 difference equals the sign of the exact
+difference, so this is BIT-exact against the gather oracle
+(``ref.lut_descriptor``) — tests assert it.
+
+Boundary semantics: keypoint coords are clamped into the true image
+(top-K padding rows carry arbitrary coords) and the images are
+edge-padded by RADIUS, exactly like ``ref.extract_patches``; the
+tile-alignment zero pad that ``ops.py`` adds is never read.
+
+TPU-validation note (see ROADMAP): in-kernel ``arctan2`` and the
+VMEM-sourced dynamic patch starts are exercised in interpret mode; on a
+real Mosaic build the keypoint block may need to move to SMEM /
+scalar prefetch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import pattern
+from repro.kernels.ref import (PATCH, RADIUS, pack_bits, patch_theta,
+                               theta_to_bin)
+
+KP_BLOCK = 8            # keypoints per grid step (unrolled in-kernel)
+
+_N_PAIRS = pattern.N_PAIRS
+_N_BINS = pattern.N_ANGLE_BINS
+_FLAT = PATCH * PATCH
+
+
+def _load_patches(img_ref, xy_ref, kb: int, true_h: int, true_w: int):
+    """Load kb 31x31 patches from a (1, Hp, Wp) VMEM image slab at the
+    (clamped) keypoint centers of the current K-block."""
+    pats = []
+    for kk in range(kb):
+        x = jnp.clip(xy_ref[0, kk, 0], 0, true_w - 1)
+        y = jnp.clip(xy_ref[0, kk, 1], 0, true_h - 1)
+        pats.append(img_ref[0, pl.ds(y, PATCH), pl.ds(x, PATCH)])
+    return pats
+
+
+def _lut_rows(lut_ref, bin_k):
+    """Resolve one bin's LUT row without a gather: one-hot over bins,
+    contracted against the (12, 256) index planes."""
+    binoh = (jax.lax.broadcasted_iota(jnp.int32, (_N_BINS, 1), 0)
+             == bin_k).astype(jnp.int32)
+    a_idx = jnp.sum(lut_ref[:, :, 0] * binoh, axis=0)       # (256,)
+    b_idx = jnp.sum(lut_ref[:, :, 1] * binoh, axis=0)
+    return a_idx, b_idx
+
+
+def _tap_sign_bits(sm_flat_row, a_idx, b_idx):
+    """(1, 961) patch row + LUT index rows -> (256,) bool tau bits via
+    the +-1 selection matmul (MXU gather)."""
+    pos = jax.lax.broadcasted_iota(jnp.int32, (_FLAT, _N_PAIRS), 0)
+    sel = ((pos == b_idx[None, :]).astype(jnp.float32)
+           - (pos == a_idx[None, :]).astype(jnp.float32))
+    # HIGHEST precision: the default TPU dot precision multiplies via
+    # bf16 passes, which could flip a tau bit when |p(B) - p(A)| is
+    # below bf16 resolution — the sign-exactness argument needs true
+    # f32 products.
+    diff = jnp.dot(sm_flat_row, sel,
+                   preferred_element_type=jnp.float32,
+                   precision=jax.lax.Precision.HIGHEST)     # (1, 256)
+    return diff[0] > 0.0
+
+
+def _describe_kernel(lut_ref, raw_ref, sm_ref, xy_ref,
+                     theta_ref, mom_ref, desc_ref, *,
+                     true_h: int, true_w: int, kb: int):
+    raw = jnp.stack(_load_patches(raw_ref, xy_ref, kb, true_h, true_w))
+    sm = _load_patches(sm_ref, xy_ref, kb, true_h, true_w)
+    theta, mom = patch_theta(raw)                           # (kb,), (kb, 2)
+    bins = theta_to_bin(theta)
+    theta_ref[0] = theta
+    mom_ref[0] = mom
+    rows = []
+    for kk in range(kb):
+        a_idx, b_idx = _lut_rows(lut_ref, bins[kk])
+        rows.append(_tap_sign_bits(sm[kk].reshape(1, _FLAT), a_idx, b_idx))
+    desc_ref[0] = pack_bits(jnp.stack(rows))                # (kb, 8)
+
+
+def _orient_kernel(raw_ref, xy_ref, theta_ref, mom_ref, *,
+                   true_h: int, true_w: int, kb: int):
+    raw = jnp.stack(_load_patches(raw_ref, xy_ref, kb, true_h, true_w))
+    theta, mom = patch_theta(raw)
+    theta_ref[0] = theta
+    mom_ref[0] = mom
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "true_h", "true_w", "kb", "interpret"))
+def describe_fused_pallas(lut: jnp.ndarray, raw_padded: jnp.ndarray,
+                          sm_padded: jnp.ndarray, xy: jnp.ndarray, *,
+                          true_h: int, true_w: int, kb: int = KP_BLOCK,
+                          interpret: bool = False):
+    """raw_padded/sm_padded: (B, Hp, Wp) float32, edge-padded by RADIUS
+    and tile-aligned (``ops.py`` guarantees Hp % 8 == Wp % 128 == 0);
+    lut: (12, 256, 2) int32 ``pattern.STEER_LUT``; xy: (B, K, 2) int32
+    with K % kb == 0.  Returns (theta (B, K) f32, moments (B, K, 2) f32,
+    desc (B, K, 8) uint32)."""
+    b, hp, wp = raw_padded.shape
+    k = xy.shape[1]
+    grid = (b, k // kb)
+    kern = functools.partial(_describe_kernel, true_h=int(true_h),
+                             true_w=int(true_w), kb=int(kb))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_N_BINS, _N_PAIRS, 2), lambda bb, kk: (0, 0, 0)),
+            pl.BlockSpec((1, hp, wp), lambda bb, kk: (bb, 0, 0)),
+            pl.BlockSpec((1, hp, wp), lambda bb, kk: (bb, 0, 0)),
+            pl.BlockSpec((1, kb, 2), lambda bb, kk: (bb, kk, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kb), lambda bb, kk: (bb, kk)),
+            pl.BlockSpec((1, kb, 2), lambda bb, kk: (bb, kk, 0)),
+            pl.BlockSpec((1, kb, 8), lambda bb, kk: (bb, kk, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k, 2), jnp.float32),
+            jax.ShapeDtypeStruct((b, k, 8), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(lut, raw_padded.astype(jnp.float32), sm_padded.astype(jnp.float32),
+      xy.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "true_h", "true_w", "kb", "interpret"))
+def orient_fused_pallas(raw_padded: jnp.ndarray, xy: jnp.ndarray, *,
+                        true_h: int, true_w: int, kb: int = KP_BLOCK,
+                        interpret: bool = False):
+    """Orientation-only variant (``fast.detect``'s score-only analog):
+    same patch path, no smoothed image / descriptor work.  Returns
+    (theta (B, K) f32, moments (B, K, 2) f32)."""
+    b, hp, wp = raw_padded.shape
+    k = xy.shape[1]
+    grid = (b, k // kb)
+    kern = functools.partial(_orient_kernel, true_h=int(true_h),
+                             true_w=int(true_w), kb=int(kb))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hp, wp), lambda bb, kk: (bb, 0, 0)),
+            pl.BlockSpec((1, kb, 2), lambda bb, kk: (bb, kk, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kb), lambda bb, kk: (bb, kk)),
+            pl.BlockSpec((1, kb, 2), lambda bb, kk: (bb, kk, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(raw_padded.astype(jnp.float32), xy.astype(jnp.int32))

@@ -19,7 +19,10 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import pattern as _pattern
 from repro.kernels import ref as _ref
+from repro.kernels.describe_fused import (KP_BLOCK, describe_fused_pallas,
+                                          orient_fused_pallas)
 from repro.kernels.fast_detect import (HALO, TILE_H, TILE_W,
                                        fast_score_map_pallas)
 from repro.kernels.frontend_fused import (FUSED_HALO, fast_score_from_taps,
@@ -188,6 +191,68 @@ def fast_blur_nms_batched(imgs: jnp.ndarray, threshold: float, *,
         quantized=bool(quantized), true_h=h, true_w=w,
         interpret=_interpret())
     return blur[:, :h, :w], score[:, :h, :w]
+
+
+def _orient_describe_jnp(raw, smoothed, xy):
+    """jnp fallback of the fused sparse descriptor kernel: the per-image
+    gather oracle vmapped over the camera batch.
+
+    Bit-exact against the Pallas kernel (tests assert it): the moment /
+    theta / bin math is the SAME ``ref.py`` helpers the kernel body
+    calls, and the tap gather equals the kernel's selection-matmul sign
+    exactly (see ``ref.lut_descriptor``).
+    """
+    if smoothed is None:
+        return jax.vmap(
+            lambda im, p: _ref.patch_theta(_ref.extract_patches(im, p))
+        )(raw, xy) + (None,)
+    return jax.vmap(_ref.orient_describe)(raw, smoothed, xy)
+
+
+def _pad_patch_slab(imgs: jnp.ndarray) -> jnp.ndarray:
+    """Edge-pad a (B, H, W) batch by the 31x31 patch RADIUS, plus
+    edge-replicated tile alignment (Hp % 8 == Wp % 128 == 0).  Clamped
+    patch starts never reach the alignment region."""
+    _, h, w = imgs.shape
+    r = _ref.RADIUS
+    hp = (-(h + 2 * r)) % 8
+    wp = (-(w + 2 * r)) % 128
+    return jnp.pad(imgs.astype(jnp.float32),
+                   ((0, 0), (r, r + hp), (r, r + wp)), mode="edge")
+
+
+def orient_describe_batched(raw: jnp.ndarray, smoothed: jnp.ndarray | None,
+                            xy: jnp.ndarray, *, impl: str | None = None):
+    """Fused batched sparse stage: orientation + moments + rBRIEF for a
+    (B, K) block of keypoints in ONE kernel launch.
+
+    raw/smoothed: (B, H, W) level images (smoothed = 7x7 Gaussian blur;
+    None selects the orientation-only kernel — ``fast.detect``'s path);
+    xy: (B, K, 2) int32 level coords (clamped into the image, so top-K
+    padding rows with ``valid=False`` are safe).  Returns (theta (B, K)
+    float32, moments (B, K, 2) float32, desc (B, K, 8) uint32 or None).
+
+    B is the flattened camera batch of a pyramid level: together with
+    ``fast_blur_nms_batched`` this makes the frontend exactly TWO
+    launches per level (dense + sparse) for all cameras.  The wrapper
+    owns K-padding to KP_BLOCK multiples and the patch-halo image pad.
+    """
+    _, h, w = raw.shape
+    k = xy.shape[1]
+    if resolve_impl(impl) == "ref":
+        return _orient_describe_jnp(raw, smoothed, xy)
+    kp = (-k) % KP_BLOCK
+    xy_p = jnp.pad(xy.astype(jnp.int32), ((0, 0), (0, kp), (0, 0)))
+    raw_p = _pad_patch_slab(raw)
+    _count_launches()
+    if smoothed is None:
+        theta, mom = orient_fused_pallas(raw_p, xy_p, true_h=h, true_w=w,
+                                         interpret=_interpret())
+        return theta[:, :k], mom[:, :k], None
+    theta, mom, desc = describe_fused_pallas(
+        jnp.asarray(_pattern.STEER_LUT), raw_p, _pad_patch_slab(smoothed),
+        xy_p, true_h=h, true_w=w, interpret=_interpret())
+    return theta[:, :k], mom[:, :k], desc[:, :k]
 
 
 def _pad_rows(x: jnp.ndarray, mult: int, fill=0):

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import pattern
+
 # Bresenham circle of radius 3 — the 16 FAST taps, in order around the
 # circle, as (dx, dy) with y down.  (paper Sec. II-B1)
 CIRCLE16: tuple[tuple[int, int], ...] = (
@@ -134,6 +136,165 @@ def hamming_distance_matrix(desc_l: jnp.ndarray,
     """(K, 8) x (M, 8) uint32 descriptors -> (K, M) int32 Hamming distances."""
     x = jnp.bitwise_xor(desc_l[:, None, :], desc_r[None, :, :])
     return jnp.sum(_popcount32(x), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# 31x31 patch oracles — the sparse descriptor stage (orientation + rBRIEF).
+#
+# These are the single definition of the edge-pad + patch-slice geometry
+# that used to be copy-pasted between ``fast.orientations`` and
+# ``brief.describe``; both core wrappers and the fused Pallas kernel
+# (``describe_fused.py``) build on them.
+
+PATCH = 2 * pattern.PATCH_RADIUS + 1      # 31
+RADIUS = pattern.PATCH_RADIUS             # 15
+
+
+def pad_patch(img: jnp.ndarray) -> jnp.ndarray:
+    """Edge-pad by RADIUS so a 31x31 slice starting at (y, x) of the
+    padded image is the patch *centered* on pixel (x, y)."""
+    return jnp.pad(img.astype(jnp.float32), RADIUS, mode="edge")
+
+
+def extract_patches(img: jnp.ndarray, xy: jnp.ndarray) -> jnp.ndarray:
+    """(H, W) image + (K, 2) int32 centers -> (K, 31, 31) patches.
+
+    Centers are clamped into the image (top-K padding rows may carry
+    arbitrary coordinates) — identical clamping to the Pallas kernel.
+    This is the host-graph gather the fused kernel replaces; kept as the
+    oracle and the single-image fallback.
+    """
+    padded = pad_patch(img)
+    h, w = img.shape
+
+    def one(pt):
+        x = jnp.clip(pt[0], 0, w - 1)
+        y = jnp.clip(pt[1], 0, h - 1)
+        return jax.lax.dynamic_slice(padded, (y, x), (PATCH, PATCH))
+
+    return jax.vmap(one)(xy)
+
+
+def moment_grids():
+    """The circular-mask moment grids (X_GRID, Y_GRID) built from 2D
+    iota instead of baked numpy constants — bit-identical values (small
+    integers are exact in f32), but legal inside a Pallas kernel body,
+    where captured array constants are rejected."""
+    yy = (jax.lax.broadcasted_iota(jnp.float32, (PATCH, PATCH), 0)
+          - float(RADIUS))
+    xx = (jax.lax.broadcasted_iota(jnp.float32, (PATCH, PATCH), 1)
+          - float(RADIUS))
+    mask = (xx * xx + yy * yy <= float(RADIUS * RADIUS)).astype(jnp.float32)
+    return xx * mask, yy * mask
+
+
+def patch_theta(patches: jnp.ndarray):
+    """(..., 31, 31) raw patches -> (theta (...,), moments (..., 2)).
+
+    Intensity-centroid moments over the circular patch (paper Eq. 1):
+    m10 = sum(x * I), m01 = sum(y * I), theta = atan2(m01, m10).  Shared
+    verbatim by the ref oracle, the jnp fallback and the Pallas kernel
+    body so all three are bit-identical.
+    """
+    xg, yg = moment_grids()
+    m10 = jnp.sum(patches * xg, axis=(-2, -1))
+    m01 = jnp.sum(patches * yg, axis=(-2, -1))
+    return jnp.arctan2(m01, m10), jnp.stack([m10, m01], axis=-1)
+
+
+# theta -> steering bin: nearest bin center, bins at b * ANGLE_BIN_STEP.
+_INV_ANGLE_STEP = float(pattern.N_ANGLE_BINS / (2.0 * np.pi))
+
+
+def theta_to_bin(theta: jnp.ndarray) -> jnp.ndarray:
+    """(...,) float32 theta in (-pi, pi] -> (...,) int32 bin in [0, 12)."""
+    return jnp.mod(jnp.round(theta * _INV_ANGLE_STEP).astype(jnp.int32),
+                   pattern.N_ANGLE_BINS)
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """(..., 256) bool -> (..., 8) uint32, bit i of word i // 32.
+
+    The paper's 32 x 8-bit descriptor RAM layout.  Bitwise-disjoint
+    uint32 adds, so any summation order is exact.
+    """
+    w = bits.astype(jnp.uint32).reshape(*bits.shape[:-1], 8, 32)
+    weights = (jnp.uint32(1)
+               << jax.lax.broadcasted_iota(jnp.uint32, (8, 32), 1))
+    return jnp.sum(w * weights, axis=-1)
+
+
+def lut_descriptor(sm_patches: jnp.ndarray,
+                   bins: jnp.ndarray) -> jnp.ndarray:
+    """(K, 31, 31) smoothed patches + (K,) int32 steering bins ->
+    (K, 8) uint32 rBRIEF descriptors (gather oracle).
+
+    Taps are resolved through ``pattern.STEER_LUT`` — the same ROM the
+    Pallas kernel reads; the kernel differs only in resolving taps with
+    a one-hot matmul instead of this gather, which cannot change any bit
+    (tau = p(A) < p(B) iff fl(p(B) - p(A)) > 0 exactly in f32).
+    """
+    lut = jnp.asarray(pattern.STEER_LUT)                 # (12, 256, 2)
+    idx = lut[bins]                                      # (K, 256, 2)
+    flat = sm_patches.reshape(-1, PATCH * PATCH)
+    pa = jnp.take_along_axis(flat, idx[..., 0], axis=1)
+    pb = jnp.take_along_axis(flat, idx[..., 1], axis=1)
+    return pack_bits(pa < pb)                            # paper Eq. 2
+
+
+def orient_describe(raw: jnp.ndarray, smoothed: jnp.ndarray,
+                    xy: jnp.ndarray):
+    """Single-image oracle for the fused sparse stage.
+
+    raw/smoothed: (H, W) float32 level image and its 7x7-Gaussian blur;
+    xy: (K, 2) int32 level coords.  Returns (theta (K,), moments (K, 2),
+    desc (K, 8) uint32) — exactly the three outputs
+    ``describe_fused_pallas`` emits per (camera, K-block) grid step.
+    """
+    theta, mom = patch_theta(extract_patches(raw, xy))
+    desc = lut_descriptor(extract_patches(smoothed, xy),
+                          theta_to_bin(theta))
+    return theta, mom, desc
+
+
+def steered_offsets(theta: jnp.ndarray):
+    """EXACT pattern steering for one angle (paper Eq. 3): per-angle
+    cos/sin + round.  Returns int32 (N, 2) offsets for A and B points.
+
+    Superseded in the pipeline by the binned ``pattern.STEER_LUT``; kept
+    as the reference the bin quantization is measured against (and the
+    pre-refactor descriptor definition).
+    """
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    pa = jnp.asarray(pattern.PATTERN_A, dtype=jnp.float32)
+    pb = jnp.asarray(pattern.PATTERN_B, dtype=jnp.float32)
+
+    def rot(p):
+        x = c * p[:, 0] - s * p[:, 1]
+        y = s * p[:, 0] + c * p[:, 1]
+        return jnp.stack([jnp.round(x), jnp.round(y)], axis=-1).astype(
+            jnp.int32)
+
+    return rot(pa), rot(pb)
+
+
+def describe_steered(smoothed: jnp.ndarray, xy: jnp.ndarray,
+                     theta: jnp.ndarray) -> jnp.ndarray:
+    """Pre-refactor EXACT-steering rBRIEF oracle: (K, 8) uint32.
+
+    Rotates all 256 pairs by each keypoint's exact theta.  The pipeline
+    now uses the binned LUT instead; descriptor differences between the
+    two are bounded by the 30-degree bin quantization (pinned in tests).
+    """
+    patches = extract_patches(smoothed, xy)
+
+    def one(patch, th):
+        a, b = steered_offsets(th)
+        pa = patch[a[:, 1] + RADIUS, a[:, 0] + RADIUS]
+        pb = patch[b[:, 1] + RADIUS, b[:, 0] + RADIUS]
+        return pack_bits(pa < pb)
+
+    return jax.vmap(one)(patches, theta)
 
 
 def sad_search(left_patches: jnp.ndarray,
