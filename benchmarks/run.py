@@ -16,10 +16,17 @@
                          PR 2     fused sparse descriptor stage (one
                                   orientation+rBRIEF launch per level,
                                   LUT-binned steering) vs the seed
-                                  host-graph per-keypoint gathers; also
-                                  emits the launch_gate rows the CI
-                                  regression gate (check_launches.py)
-                                  enforces
+                                  host-graph per-keypoint gathers
+  table_whole_frame_vs_per_level
+                         PR 3     whole-frame schedule (ONE dense + ONE
+                                  sparse launch per frame for all
+                                  cameras x levels, ragged levels padded
+                                  to a common tile grid) vs the
+                                  per-level schedule (2 launches per
+                                  level): wall clock + traced launch
+                                  counts; also emits the launch_gate
+                                  rows the CI regression gate
+                                  (check_launches.py) enforces
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--out PATH]
 Prints CSV rows ``table,name,value,unit,note`` and writes them to a
@@ -340,10 +347,9 @@ def table_describe_fused_vs_gather(quick=False):
 
     Wall clock is measured on the jnp paths (interpret-free CPU);
     launch counts are traced under the Pallas impl — the deterministic
-    half, enforced in CI by ``benchmarks.check_launches``.
+    half.
     """
-    from repro.core import fast, process_quad_frame
-    from repro.core.types import CameraIntrinsics
+    from repro.core import fast
     resolutions = [(480, 640)] + ([] if quick else [(720, 1280)])
     for h, w in resolutions:
         rng = np.random.RandomState(7)
@@ -397,6 +403,80 @@ def table_describe_fused_vs_gather(quick=False):
              "kernels", "1 sparse launch per level (gather path: 0 "
              "kernels, all host graph)")
 
+
+def table_whole_frame_vs_per_level(quick=False):
+    """Tentpole regression number for the whole-frame schedule: ONE
+    dense + ONE sparse launch per quad FRAME for all cameras x all
+    pyramid levels (ragged level slabs padded to a common tile grid,
+    masked by true shape) vs the per-level schedule (2 launches per
+    level — ``orb.extract_features_per_level``, the PR-2 pipeline).
+
+    Wall clock is measured on the jnp paths (interpret-free CPU), where
+    both schedules run the same per-level arithmetic — the whole-frame
+    ref fallback deliberately loops per level because the stacked
+    common-canvas pass wastes ~20% CPU compute on ragged-level padding
+    (the stacked row below quantifies that, pinning the decision).  The
+    whole-frame win is the traced launch count — the deterministic half,
+    enforced in CI by ``benchmarks.check_launches`` via the launch_gate
+    rows emitted here.
+    """
+    from repro.core import extract_features_per_level, process_quad_frame
+    from repro.core import orb
+    resolutions = [(480, 640)] + ([] if quick else [(720, 1280)])
+    for h, w in resolutions:
+        rng = np.random.RandomState(7)
+        imgs = jnp.asarray(rng.randint(0, 256, (4, h, w)).astype(np.float32))
+        ocfg = ORBConfig(height=h, width=w, n_levels=2, max_features=1000)
+        res = f"{w}x{h}"
+
+        iters = 3 if (h, w) == (720, 1280) else 5
+        t_per, _ = _bench(
+            jax.jit(lambda im: extract_features_per_level(im, ocfg,
+                                                          impl="ref")),
+            imgs, iters=iters)
+        t_whole, _ = _bench(
+            jax.jit(lambda im: orb.extract_features_batched(im, ocfg,
+                                                            impl="ref")),
+            imgs, iters=iters)
+        emit("whole_frame", f"per_level_ms_{res}", round(t_per * 1e3, 2),
+             "ms", "4 cams x 2 levels, 2 dispatches per level (jnp)")
+        emit("whole_frame", f"whole_frame_ms_{res}",
+             round(t_whole * 1e3, 2), "ms",
+             "4 cams x 2 levels, 1 dense + 1 sparse dispatch (jnp)")
+        emit("whole_frame", f"speedup_{res}", round(t_per / t_whole, 2),
+             "x", "per-level / whole-frame wall clock")
+
+        # The stacked common-canvas dense pass (the kernel's jnp mirror):
+        # quantifies the ragged-padding waste that keeps it out of the
+        # production CPU fallback.
+        levels = [jax.block_until_ready(lv)
+                  for lv in pyramid.build_pyramid_batched(imgs, ocfg)]
+        thr = float(ocfg.fast_threshold)
+        t_loop, _ = _bench(
+            jax.jit(lambda ls: [ops.fast_blur_nms_batched(
+                lv, thr, impl="ref") for lv in ls]), levels, iters=iters)
+        t_stack, _ = _bench(
+            jax.jit(lambda ls: ops.fast_blur_nms_pyramid_stacked_jnp(
+                ls, thr)), levels, iters=iters)
+        emit("whole_frame", f"dense_stacked_overhead_{res}",
+             round(t_stack / t_loop, 2), "x",
+             "stacked common-canvas pass / per-level loop (jnp dense "
+             "stage; padding waste)")
+
+        # Launch counts: trace-only (no kernel execution) under Pallas.
+        ops.reset_launch_count()
+        jax.eval_shape(lambda im: extract_features_per_level(
+            im, ocfg, impl="pallas"), imgs)
+        n_per = ops.launch_count()
+        ops.reset_launch_count()
+        jax.eval_shape(lambda im: orb.extract_features_batched(
+            im, ocfg, impl="pallas"), imgs)
+        n_whole = ops.launch_count()
+        emit("whole_frame", f"launches_per_level_{res}", n_per, "kernels",
+             "2 per pyramid level")
+        emit("whole_frame", f"launches_whole_frame_{res}", n_whole,
+             "kernels", "2 per frame")
+
     # Launch-count regression gate rows: the CI step
     # (benchmarks.check_launches) fails when actual > budget.
     h, w = (240, 320) if quick else (480, 640)
@@ -408,11 +488,11 @@ def table_describe_fused_vs_gather(quick=False):
     jax.eval_shape(
         lambda f: process_quad_frame(f, gcfg, intr, impl="pallas"), gimgs)
     actual = ops.launch_count()
-    budget = 2 * gcfg.n_levels + 2
+    budget = 4
     emit("launch_gate", "quad_frame_launches", actual, "kernels",
          f"traced, 4 cams {w}x{h} x {gcfg.n_levels} levels")
     emit("launch_gate", "quad_frame_budget", budget, "kernels",
-         "2 per level FE (dense + sparse) + 2 FM")
+         "whole-frame FE (1 dense + 1 sparse) + 2 FM")
 
 
 def main() -> None:
@@ -430,6 +510,7 @@ def main() -> None:
     table4_throughput(args.quick)
     table_fused_vs_seed(args.quick)
     table_describe_fused_vs_gather(args.quick)
+    table_whole_frame_vs_per_level(args.quick)
     print(f"# done in {time.time() - t0:.1f}s ({len(ROWS)} rows)")
     if args.out:
         rows = [{"table": t, "name": n, "value": v, "unit": u, "note": note}

@@ -4,9 +4,9 @@ quad-camera sequence -> frame-multiplexed ORB frontend -> stereo depth
 ground truth.
 
 All 4 cameras of a frame go through ONE ``process_quad_frame`` call —
-the two-stage batched frontend: per pyramid level, one dense
-blur+FAST+NMS launch and one sparse orientation+rBRIEF launch for the
-whole camera batch (the traced launch audit is printed at startup).
+the whole-frame batched frontend: per FRAME, one dense blur+FAST+NMS
+launch and one sparse orientation+rBRIEF launch covering every camera
+at every pyramid level (the traced launch audit is printed at startup).
 
     PYTHONPATH=src python examples/localize.py [--frames 6]
 """
@@ -43,7 +43,7 @@ def main() -> None:
         lambda f: process_quad_frame(f, ocfg, intr, impl="pallas"),
         frames[0])
     print(f"traced kernel launches per quad frame: {ops.launch_count()} "
-          f"(2 per level FE dense+sparse for all 4 cams, + 2 FM — "
+          f"(1 dense + 1 sparse FE for all 4 cams x all levels, + 2 FM — "
           f"hamming and SAD trace once under the pair vmap)")
 
     quad = jax.jit(lambda f: process_quad_frame(f, ocfg, intr))

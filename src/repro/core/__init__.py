@@ -2,7 +2,8 @@
 
 from repro.core.types import (CameraIntrinsics, DepthSet, FeatureSet,
                               MatchSet, ORBConfig)
-from repro.core.orb import extract_features, extract_features_batched
+from repro.core.orb import (extract_features, extract_features_batched,
+                            extract_features_per_level)
 from repro.core.matching import sad_rectify, stereo_match, temporal_match
 from repro.core.frontend import (StereoOutput, extract_pair, match_pair,
                                  pipeline_schedule, process_quad_frame,
@@ -13,7 +14,7 @@ from repro.core import backend, sync  # noqa: F401
 __all__ = [
     "CameraIntrinsics", "DepthSet", "FeatureSet", "MatchSet", "ORBConfig",
     "StereoOutput", "extract_features", "extract_features_batched",
-    "stereo_match", "sad_rectify",
+    "extract_features_per_level", "stereo_match", "sad_rectify",
     "temporal_match", "extract_pair", "match_pair", "process_stereo_frame",
     "process_quad_frame", "run_sequence", "run_sequence_pipelined",
     "pipeline_schedule", "backend", "sync",

@@ -5,16 +5,19 @@ batched frontend refactor:
 
 * Frame-multiplexing (all camera channels share one FE): ALL cameras of
   a frame — 4 for the quad rig, 2 for one stereo pair — enter
-  ``orb.extract_features_batched`` as one leading batch axis, and each
-  pyramid level costs exactly TWO fused Pallas launches whose grids walk
-  the camera batch as their leading dimension: the DENSE stage
-  (``ops.fast_blur_nms_batched`` — blur + FAST + NMS in one VMEM pass
-  per pixel) and the SPARSE stage (``ops.orient_describe_batched`` —
-  orientation + moments + LUT-steered rBRIEF in one VMEM pass per
-  keypoint patch).  The VPU is time-multiplexed across cameras exactly
-  as the FPGA FE is time-multiplexed across channels; the seed issued
-  separate blur and FAST passes per camera per level, host-graph NMS
-  slices, and vmapped per-keypoint 31x31 gathers for the sparse half.
+  ``orb.extract_features_batched`` as one leading batch axis, and the
+  WHOLE frame (every camera at every pyramid level) costs exactly TWO
+  fused Pallas launches: the DENSE stage (``ops.fast_blur_nms_pyramid``
+  — blur + FAST + NMS in one VMEM pass per pixel, grid over camera x
+  level slabs padded to a common tile grid) and the SPARSE stage
+  (``ops.orient_describe_pyramid`` — orientation + moments + LUT-steered
+  rBRIEF in one VMEM pass per keypoint patch, level-sorted K-blocks).
+  The VPU is time-multiplexed across cameras and scales exactly as the
+  FPGA FE streams all channels and levels of a frame through one shared
+  datapath; the seed issued separate blur and FAST passes per camera per
+  level, host-graph NMS slices, and vmapped per-keypoint 31x31 gathers
+  for the sparse half, and earlier revisions still re-launched both
+  fused stages once per level (2 x L launches per frame).
 * Two identical module pairs for the two stereo pairs: the FM stage
   (`match_pair`) is `vmap`'d over the pair axis (shardable: data
   parallelism over pairs); FE no longer nests vmaps — the camera batch
@@ -58,7 +61,8 @@ def _split_cameras(feats, n_pairs: int):
 def extract_pair(img_l: jnp.ndarray, img_r: jnp.ndarray, cfg: ORBConfig,
                  impl: str | None = None):
     """Frame-multiplexed FE: ONE batched extractor call over the L/R
-    camera batch — two fused launches (dense + sparse) per level."""
+    camera batch — two fused launches (dense + sparse) for the whole
+    frame, all levels included."""
     stacked = jnp.stack([img_l, img_r])          # (2, H, W)
     feats = orb.extract_features_batched(stacked, cfg, impl=impl)
     feat_l = jax.tree.map(lambda x: x[0], feats)
@@ -89,11 +93,12 @@ def process_quad_frame(images: jnp.ndarray, cfg: ORBConfig,
                        impl: str | None = None) -> StereoOutput:
     """images: (4, H, W) — [pair0_L, pair0_R, pair1_L, pair1_R].
 
-    FE runs ONCE over the whole 4-camera batch (two fused launches —
-    dense + sparse — per pyramid level for all cameras); the FM stage
-    then runs through
-    identical module instances in parallel (vmap over the pair axis).
-    Outputs have a leading (2,) pair axis.
+    FE runs ONCE over the whole 4-camera batch: TWO fused launches —
+    one dense + one sparse — for all cameras x all pyramid levels, so a
+    traced quad frame costs exactly 4 kernel launches (2 FE + 2 FM, the
+    budget ``benchmarks.check_launches`` gates).  The FM stage runs
+    through identical module instances in parallel (vmap over the pair
+    axis).  Outputs have a leading (2,) pair axis.
     """
     pairs = images.reshape(2, 2, *images.shape[1:])
     feats = orb.extract_features_batched(images, cfg, impl=impl)  # (4, ...)
@@ -135,7 +140,7 @@ def run_sequence_pipelined(frames: jnp.ndarray, cfg: ORBConfig,
 
     def fe(frame):
         pairs = frame.reshape(2, 2, *frame.shape[1:])
-        # One batched FE over all 4 cameras (2 fused launches per level).
+        # One batched FE over all 4 cameras (2 fused launches per frame).
         feats = orb.extract_features_batched(frame, cfg, impl=impl)
         return pairs, _split_cameras(feats, n_pairs=2)
 

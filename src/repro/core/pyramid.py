@@ -4,6 +4,12 @@ Two-layer pyramid with bilinear interpolation; 1280x720 -> 1067x600 at
 the paper's 1.2 scale factor.  Works on float32 images in [0, 255]; the
 quantized path rounds back to uint8 levels, matching the FPGA's 8-bit
 datapath.
+
+The batched pyramid feeds the whole-frame fused frontend: every level
+of every camera goes into ONE dense kernel launch
+(``ops.fast_blur_nms_pyramid``), which pads the ragged level shapes
+returned by ``level_shapes`` to a common tile grid and masks by true
+shape.
 """
 
 from __future__ import annotations
@@ -32,11 +38,18 @@ def build_pyramid(image: jnp.ndarray, cfg: ORBConfig) -> list[jnp.ndarray]:
     return levels
 
 
+def level_shapes(cfg: ORBConfig) -> list[tuple[int, int]]:
+    """Static (h, w) of every pyramid level — the ragged shapes the
+    whole-frame launch pads to a common tile grid."""
+    return [cfg.level_shape(lvl) for lvl in range(cfg.n_levels)]
+
+
 def build_pyramid_batched(images: jnp.ndarray,
                           cfg: ORBConfig) -> list[jnp.ndarray]:
     """Batched pyramid: (B, H, W) -> list of (B, h_l, w_l) float32.
 
     B is the flattened camera batch of the fused frontend; each level is
-    one resize over the whole batch, feeding one fused kernel launch.
+    one resize over the whole batch.  All levels together feed ONE
+    whole-frame dense launch (``ops.fast_blur_nms_pyramid``).
     """
     return jax.vmap(lambda im: build_pyramid(im, cfg))(images)

@@ -16,6 +16,11 @@ Grid = (B, K / KP_BLOCK): each step loads KP_BLOCK 31x31 patches from
 the raw and smoothed level images (both resident in VMEM; the block
 index map pins them per camera so the pipeline fetches each image once,
 not once per K-block) and keeps every per-keypoint product on-chip.
+``describe_fused_pyramid_pallas`` extends the same body to the WHOLE
+frame: keypoint blocks are level-sorted, each (camera, K-block) grid
+step resolves its raw/smoothed slab pair through the static block->level
+offsets baked into the index maps, and the clamp bounds come from a
+per-block (true_h, true_w) shape table — one sparse launch per frame.
 This mirrors the paper's FPGA datapath (Sec. III-C), where a shared
 patch register bank feeds the rotation and descriptor pipelines and the
 31x31 window is read from BRAM exactly once per feature.
@@ -97,9 +102,12 @@ def _tap_sign_bits(sm_flat_row, a_idx, b_idx):
     return diff[0] > 0.0
 
 
-def _describe_kernel(lut_ref, raw_ref, sm_ref, xy_ref,
-                     theta_ref, mom_ref, desc_ref, *,
-                     true_h: int, true_w: int, kb: int):
+def _describe_block(lut_ref, raw_ref, sm_ref, xy_ref,
+                    theta_ref, mom_ref, desc_ref, kb, true_h, true_w):
+    """Shared K-block body.  ``true_h``/``true_w`` may be static ints
+    (per-level launch) or traced scalars read from the whole-pyramid
+    shape table — the coordinate clamp broadcasts either way, so both
+    launch schedules run bit-identical math per block."""
     raw = jnp.stack(_load_patches(raw_ref, xy_ref, kb, true_h, true_w))
     sm = _load_patches(sm_ref, xy_ref, kb, true_h, true_w)
     theta, mom = patch_theta(raw)                           # (kb,), (kb, 2)
@@ -111,6 +119,23 @@ def _describe_kernel(lut_ref, raw_ref, sm_ref, xy_ref,
         a_idx, b_idx = _lut_rows(lut_ref, bins[kk])
         rows.append(_tap_sign_bits(sm[kk].reshape(1, _FLAT), a_idx, b_idx))
     desc_ref[0] = pack_bits(jnp.stack(rows))                # (kb, 8)
+
+
+def _describe_kernel(lut_ref, raw_ref, sm_ref, xy_ref,
+                     theta_ref, mom_ref, desc_ref, *,
+                     true_h: int, true_w: int, kb: int):
+    _describe_block(lut_ref, raw_ref, sm_ref, xy_ref,
+                    theta_ref, mom_ref, desc_ref, kb, true_h, true_w)
+
+
+def _describe_kernel_pyramid(lut_ref, raw_ref, sm_ref, xy_ref, hw_ref,
+                             theta_ref, mom_ref, desc_ref, *, kb: int):
+    """Whole-frame variant: each K-block's slab pair was resolved by the
+    level-aware index maps; its true (h, w) comes from the per-block
+    shape table instead of static kwargs."""
+    _describe_block(lut_ref, raw_ref, sm_ref, xy_ref,
+                    theta_ref, mom_ref, desc_ref, kb,
+                    hw_ref[0, 0], hw_ref[0, 1])
 
 
 def _orient_kernel(raw_ref, xy_ref, theta_ref, mom_ref, *,
@@ -191,3 +216,71 @@ def orient_fused_pallas(raw_padded: jnp.ndarray, xy: jnp.ndarray, *,
         ],
         interpret=interpret,
     )(raw_padded.astype(jnp.float32), xy.astype(jnp.int32))
+
+
+def _block_level(kk, level_offsets):
+    """Pyramid level of K-block ``kk``: keypoint blocks are level-sorted,
+    so the level is the number of level start-offsets at or below kk.
+    ``level_offsets`` is a STATIC tuple (offsets[l] = first block of
+    level l) — the sum unrolls to L-1 compares on the traced block id,
+    legal inside a BlockSpec index map."""
+    lvl = 0
+    for off in level_offsets[1:]:
+        lvl = lvl + jnp.where(kk >= off, 1, 0)
+    return lvl
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "level_offsets", "kb", "interpret"))
+def describe_fused_pyramid_pallas(lut: jnp.ndarray, raw_slabs: jnp.ndarray,
+                                  sm_slabs: jnp.ndarray, xy: jnp.ndarray,
+                                  hw: jnp.ndarray, *,
+                                  level_offsets: tuple[int, ...],
+                                  kb: int = KP_BLOCK,
+                                  interpret: bool = False):
+    """Whole-frame sparse launch: ALL cameras x ALL levels in ONE
+    ``pallas_call`` whose grid walks (camera, level-sorted K-block).
+
+    raw_slabs/sm_slabs: (L*B, Hc, Wc) float32 — level-major flattened
+    level slab pairs, each edge-padded by RADIUS and out to the COMMON
+    aligned (Hc, Wc) canvas (``ops.py`` owns that padding; clamped patch
+    starts never reach the common-canvas region).  xy: (B, Ktot, 2)
+    int32, keypoints level-sorted with each level's block padded to a kb
+    multiple.  hw: (Ktot/kb, 2) int32 per-K-block true (h, w) used for
+    the coordinate clamp.  level_offsets: static per-level first-block
+    offsets — each grid step resolves its raw/smoothed slab pair through
+    ``_block_level`` in the index maps, so the pipeline fetches each
+    (camera, level) slab once (blocks of one level are contiguous).
+    Returns (theta (B, Ktot) f32, moments (B, Ktot, 2) f32, desc
+    (B, Ktot, 8) uint32)."""
+    n, hc, wc = raw_slabs.shape
+    b, k = xy.shape[0], xy.shape[1]
+    grid = (b, k // kb)
+    kern = functools.partial(_describe_kernel_pyramid, kb=int(kb))
+
+    def slab_index(bb, kk):
+        return (_block_level(kk, level_offsets) * b + bb, 0, 0)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_N_BINS, _N_PAIRS, 2), lambda bb, kk: (0, 0, 0)),
+            pl.BlockSpec((1, hc, wc), slab_index),
+            pl.BlockSpec((1, hc, wc), slab_index),
+            pl.BlockSpec((1, kb, 2), lambda bb, kk: (bb, kk, 0)),
+            pl.BlockSpec((1, 2), lambda bb, kk: (kk, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kb), lambda bb, kk: (bb, kk)),
+            pl.BlockSpec((1, kb, 2), lambda bb, kk: (bb, kk, 0)),
+            pl.BlockSpec((1, kb, 8), lambda bb, kk: (bb, kk, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k, 2), jnp.float32),
+            jax.ShapeDtypeStruct((b, k, 8), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(lut, raw_slabs.astype(jnp.float32), sm_slabs.astype(jnp.float32),
+      xy.astype(jnp.int32), hw.astype(jnp.int32))

@@ -9,11 +9,18 @@ needs from a level image:
 This is the TPU analog of the paper's frame-multiplexed FE (Sec.
 III-B/III-C): the FPGA streams each frame once through a shared FAST +
 smoothing datapath, multiplexing all four cameras through one module.
-Here the leading grid dimension is a flattened batch of camera images
-(ops.py batches all cameras of a pyramid level into one launch), so the
-VPU is time-multiplexed across cameras exactly as the FPGA FE is
+Here the leading grid dimension is a flattened batch of camera images,
+so the VPU is time-multiplexed across cameras exactly as the FPGA FE is
 time-multiplexed across channels — and each pixel is read from VMEM
-once instead of once per op.
+once instead of once per op.  Two entry points share one tile body:
+
+  * ``frontend_fused_pallas`` — one launch per pyramid level, batch =
+    cameras, true (h, w) static (the PR-1 schedule, kept as the
+    per-level oracle path), and
+  * ``frontend_fused_pyramid_pallas`` — ONE launch per whole frame,
+    batch = cameras x levels with ragged level slabs padded to a common
+    tile grid and masked by a per-slab (true_h, true_w) shape table
+    (the paper's whole-frame streaming FE, Sec. III-B).
 
 Halo arithmetic: blur and FAST both need a 3-pixel stencil halo; fusing
 the 3x3 NMS needs the *raw score* one pixel beyond the tile, and that
@@ -106,11 +113,14 @@ def fast_score_from_taps(taps, threshold: float):
     return jnp.where(score > threshold, score, 0.0)
 
 
-def _kernel(x_ref, blur_ref, score_ref, *, threshold: float, nms: bool,
-            quantized: bool, true_h: int, true_w: int,
-            tile_h: int, tile_w: int):
+def _tile_outputs(x, true_h, true_w, *, threshold: float, nms: bool,
+                  quantized: bool, tile_h: int, tile_w: int):
+    """Shared per-tile body: (tile_h + 8, tile_w + 8) input window ->
+    (blur, score), each (tile_h, tile_w).  ``true_h``/``true_w`` may be
+    static Python ints (per-level launch) or traced scalars read from the
+    whole-pyramid shape table — the NMS boundary mask broadcasts either
+    way, so both launch schedules run the exact same math."""
     fh = FUSED_HALO
-    x = x_ref[0]                           # (tile_h + 8, tile_w + 8) f32
 
     # ---- 7x7 separable Gaussian (needs halo 3: rows/cols 1..tile+7) ----
     w = [float(v) for v in GAUSS7_WEIGHTS_INT]
@@ -127,7 +137,6 @@ def _kernel(x_ref, blur_ref, score_ref, *, threshold: float, nms: bool,
         blur = jnp.floor((vert + norm2 / 2.0) / norm2)
     else:
         blur = vert / float(GAUSS7_NORM * GAUSS7_NORM)
-    blur_ref[...] = blur[None]
 
     # ---- FAST-9/16 raw score on the (tile+2)^2 window (1-px NMS rim) ----
     eh, ew = tile_h + 2, tile_w + 2
@@ -159,6 +168,29 @@ def _kernel(x_ref, blur_ref, score_ref, *, threshold: float, nms: bool,
         out = jnp.where(cs >= nmax, cs, 0.0) * (cs > 0.0)
     else:
         out = jnp.maximum(cs, 0.0)         # strip the -1 boundary sentinel
+    return blur, out
+
+
+def _kernel(x_ref, blur_ref, score_ref, *, threshold: float, nms: bool,
+            quantized: bool, true_h: int, true_w: int,
+            tile_h: int, tile_w: int):
+    blur, out = _tile_outputs(x_ref[0], true_h, true_w, threshold=threshold,
+                              nms=nms, quantized=quantized,
+                              tile_h=tile_h, tile_w=tile_w)
+    blur_ref[...] = blur[None]
+    score_ref[...] = out[None]
+
+
+def _kernel_pyramid(x_ref, hw_ref, blur_ref, score_ref, *, threshold: float,
+                    nms: bool, quantized: bool, tile_h: int, tile_w: int):
+    """Whole-pyramid variant: the slab's true (h, w) comes from the
+    per-slab shape table instead of static kwargs — every other
+    instruction is shared with the per-level kernel."""
+    blur, out = _tile_outputs(x_ref[0], hw_ref[0, 0], hw_ref[0, 1],
+                              threshold=threshold, nms=nms,
+                              quantized=quantized,
+                              tile_h=tile_h, tile_w=tile_w)
+    blur_ref[...] = blur[None]
     score_ref[...] = out[None]
 
 
@@ -198,3 +230,54 @@ def frontend_fused_pallas(padded: jnp.ndarray, *, threshold: float,
         ],
         interpret=interpret,
     )(padded.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "threshold", "nms", "quantized", "interpret"))
+def frontend_fused_pyramid_pallas(padded: jnp.ndarray, hw: jnp.ndarray, *,
+                                  threshold: float, nms: bool = True,
+                                  quantized: bool = True,
+                                  interpret: bool = False):
+    """Whole-pyramid dense launch: ALL cameras x ALL levels in ONE
+    ``pallas_call`` whose grid walks (slab, tile_i, tile_j).
+
+    padded: (N, Hc + 8, Wc + 8) float32 — N = levels x cameras flattened
+    level-major; every ragged level slab is edge-padded by FUSED_HALO and
+    out to the COMMON tile-aligned (Hc, Wc) canvas (``ops.py`` owns that
+    padding).  hw: (N, 2) int32 per-slab (true_h, true_w) — the shape
+    table the kernel masks by, so tiles that fall in a small level's
+    padding region emit only the -1/0 sentinels and never win NMS.
+    Returns (blur, score), each (N, Hc, Wc) float32; callers slice each
+    slab back to its true shape.
+
+    TPU-validation note: the (1, 2) int32 shape-table block rides in the
+    default memory space; on a real Mosaic build it belongs in SMEM
+    (scalar prefetch), like the keypoint blocks of ``describe_fused``.
+    """
+    n = padded.shape[0]
+    h = padded.shape[1] - 2 * FUSED_HALO
+    w = padded.shape[2] - 2 * FUSED_HALO
+    grid = (n, h // TILE_H, w // TILE_W)
+    kern = functools.partial(
+        _kernel_pyramid, threshold=float(threshold), nms=bool(nms),
+        quantized=bool(quantized), tile_h=TILE_H, tile_w=TILE_W)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, TILE_H + 2 * FUSED_HALO, TILE_W + 2 * FUSED_HALO),
+                lambda bb, i, j: (bb, i * TILE_H, j * TILE_W),
+                indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((1, 2), lambda bb, i, j: (bb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE_H, TILE_W), lambda bb, i, j: (bb, i, j)),
+            pl.BlockSpec((1, TILE_H, TILE_W), lambda bb, i, j: (bb, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, h, w), jnp.float32),
+            jax.ShapeDtypeStruct((n, h, w), jnp.float32),
+        ],
+        interpret=interpret,
+    )(padded.astype(jnp.float32), hw.astype(jnp.int32))

@@ -18,15 +18,18 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import pattern as _pattern
 from repro.kernels import ref as _ref
 from repro.kernels.describe_fused import (KP_BLOCK, describe_fused_pallas,
+                                          describe_fused_pyramid_pallas,
                                           orient_fused_pallas)
 from repro.kernels.fast_detect import (HALO, TILE_H, TILE_W,
                                        fast_score_map_pallas)
 from repro.kernels.frontend_fused import (FUSED_HALO, fast_score_from_taps,
-                                          frontend_fused_pallas)
+                                          frontend_fused_pallas,
+                                          frontend_fused_pyramid_pallas)
 from repro.kernels.gaussian_blur import gaussian_blur7_pallas
 from repro.kernels.hamming_match import BIG, BK, hamming_match_pallas
 from repro.kernels.sad_rectify import sad_search_pallas
@@ -113,21 +116,13 @@ def gaussian_blur7(img: jnp.ndarray, quantized: bool = True,
     return out[:h, :w]
 
 
-def _fast_blur_nms_fused_jnp(imgs: jnp.ndarray, threshold: float,
-                             nms: bool, quantized: bool):
-    """Interpret-free jnp fallback of the fused megakernel.
-
-    Bit-exact against the ``ref.py`` oracle chain (tests assert it), but
-    structured like the kernel rather than like the oracle: ONE shared
-    edge-pad feeds both stencils, the FAST arc extrema use the van Herk
-    block prefix/suffix scheme instead of materializing (16, H, W)
-    stacks (min/max reassociation is exact, so results are unchanged),
-    the blur keeps the oracle's tap-summation order (float-exact), and
-    the 3x3 NMS is a separable included-center max.  ~1.7x faster than
-    the per-image oracle chain on CPU — the "fused" contender of the
-    fused-vs-seed benchmark.
-    """
-    x = imgs.astype(jnp.float32)
+def _blur_rawscore_jnp(x: jnp.ndarray, threshold: float, quantized: bool):
+    """Shared jnp stencil body of the fused fallbacks: (B, H, W) float32
+    -> (blur, raw score), each (B, H, W).  ONE shared edge-pad feeds
+    both stencils, the FAST arc extrema use the van Herk block
+    prefix/suffix scheme instead of materializing (16, H, W) stacks
+    (min/max reassociation is exact, so results are unchanged), and the
+    blur keeps the oracle's tap-summation order (float-exact)."""
     _, h, w = x.shape
     pad = jnp.pad(x, ((0, 0), (3, 3), (3, 3)), mode="edge")
 
@@ -148,18 +143,35 @@ def _fast_blur_nms_fused_jnp(imgs: jnp.ndarray, threshold: float,
 
     taps = [pad[:, 3 + dy:3 + dy + h, 3 + dx:3 + dx + w] - x
             for dx, dy in _ref.CIRCLE16]
-    score = fast_score_from_taps(taps, float(threshold))
+    return blur, fast_score_from_taps(taps, float(threshold))
 
+
+def _nms_jnp(score: jnp.ndarray) -> jnp.ndarray:
+    """Separable included-center 3x3 max over (B, H, W); cs >= max(cs,
+    nbrs) iff cs >= max(nbrs), so the decision matches ref.nms3 exactly
+    (the -1 constant pad is the oracle's outside-image sentinel)."""
+    spad = jnp.pad(score, ((0, 0), (1, 1), (1, 1)), constant_values=-1.0)
+    rmax = jnp.maximum(jnp.maximum(spad[:, :-2, :], spad[:, 1:-1, :]),
+                       spad[:, 2:, :])
+    nmax = jnp.maximum(jnp.maximum(rmax[:, :, :-2], rmax[:, :, 1:-1]),
+                       rmax[:, :, 2:])
+    return jnp.where(score >= nmax, score, 0.0) * (score > 0.0)
+
+
+def _fast_blur_nms_fused_jnp(imgs: jnp.ndarray, threshold: float,
+                             nms: bool, quantized: bool):
+    """Interpret-free jnp fallback of the fused megakernel.
+
+    Bit-exact against the ``ref.py`` oracle chain (tests assert it), but
+    structured like the kernel rather than like the oracle — see
+    ``_blur_rawscore_jnp``/``_nms_jnp``.  ~1.7x faster than the
+    per-image oracle chain on CPU — the "fused" contender of the
+    fused-vs-seed benchmark.
+    """
+    blur, score = _blur_rawscore_jnp(imgs.astype(jnp.float32), threshold,
+                                     quantized)
     if nms:
-        # Separable included-center 3x3 max; cs >= max(cs, nbrs) iff
-        # cs >= max(nbrs), so the decision matches ref.nms3 exactly.
-        spad = jnp.pad(score, ((0, 0), (1, 1), (1, 1)),
-                       constant_values=-1.0)
-        rmax = jnp.maximum(jnp.maximum(spad[:, :-2, :], spad[:, 1:-1, :]),
-                           spad[:, 2:, :])
-        nmax = jnp.maximum(jnp.maximum(rmax[:, :, :-2], rmax[:, :, 1:-1]),
-                           rmax[:, :, 2:])
-        score = jnp.where(score >= nmax, score, 0.0) * (score > 0.0)
+        score = _nms_jnp(score)
     return blur, score
 
 
@@ -191,6 +203,90 @@ def fast_blur_nms_batched(imgs: jnp.ndarray, threshold: float, *,
         quantized=bool(quantized), true_h=h, true_w=w,
         interpret=_interpret())
     return blur[:, :h, :w], score[:, :h, :w]
+
+
+def fast_blur_nms_pyramid_stacked_jnp(levels, threshold: float, *,
+                                      nms: bool = True,
+                                      quantized: bool = True):
+    """jnp mirror of the whole-pyramid kernel's ragged-padding
+    semantics: every ragged level slab is edge-padded to the COMMON
+    (max) canvas, the shared stencil body runs ONCE over the
+    (L*B, Hc, Wc) stack, and the per-slab true shape masks outside
+    pixels to the -1 NMS sentinel.
+
+    Bit-exact against running ``_fast_blur_nms_fused_jnp`` per level
+    (tests assert it): blur taps only reach 3 px past the true image —
+    edge-replicated rows/cols in both schedules — and the NMS mask gives
+    true-border pixels the same -1 neighbours the per-level constant pad
+    does.  Kept as an INDEPENDENT oracle of the kernel's padding logic,
+    not as the production fallback: on CPU the common-canvas padding
+    wastes compute at 1.2x scale (measured ~1.1-1.25x the per-level
+    loop's wall clock at 640x480 — the ``dense_stacked_overhead``
+    benchmark row), so ``fast_blur_nms_pyramid``'s ref path loops per
+    level instead — the whole-frame win is launch overhead on the
+    accelerator, not CPU arithmetic.
+    """
+    shapes = [(int(lv.shape[1]), int(lv.shape[2])) for lv in levels]
+    b = levels[0].shape[0]
+    hc = max(h for h, _ in shapes)
+    wc = max(w for _, w in shapes)
+    x = jnp.concatenate([
+        jnp.pad(lv.astype(jnp.float32), ((0, 0), (0, hc - h), (0, wc - w)),
+                mode="edge")
+        for lv, (h, w) in zip(levels, shapes)], axis=0)
+    blur, score = _blur_rawscore_jnp(x, threshold, quantized)
+    th = jnp.asarray(np.repeat([h for h, _ in shapes], b))[:, None, None]
+    tw = jnp.asarray(np.repeat([w for _, w in shapes], b))[:, None, None]
+    inside = ((jnp.arange(hc)[None, :, None] < th)
+              & (jnp.arange(wc)[None, None, :] < tw))
+    score = jnp.where(inside, score, -1.0)
+    score = _nms_jnp(score) if nms else jnp.maximum(score, 0.0)
+    return [(blur[l * b:(l + 1) * b, :h, :w],
+             score[l * b:(l + 1) * b, :h, :w])
+            for l, (h, w) in enumerate(shapes)]
+
+
+def fast_blur_nms_pyramid(levels, threshold: float, *, nms: bool = True,
+                          quantized: bool = True, impl: str | None = None):
+    """Whole-pyramid dense stage: L ragged (B, h_l, w_l) level batches
+    -> [(blur_l, score_l)] per level, ALL cameras x ALL levels in ONE
+    kernel launch.
+
+    This is the whole-frame analog of ``fast_blur_nms_batched`` (which
+    launches once per level): ragged level slabs are edge-padded to a
+    common tile grid, the kernel grid walks (slab, tile_i, tile_j), and
+    a per-slab (true_h, true_w) table masks the padding region so small
+    levels never emit spurious corners.  Together with
+    ``orient_describe_pyramid`` this makes the frontend exactly TWO
+    launches per quad FRAME.  The wrapper owns all padding; callers see
+    exact per-level shapes.
+
+    The ref fallback loops ``_fast_blur_nms_fused_jnp`` per level —
+    bit-identical to the per-level schedule by construction and free of
+    the common-canvas padding waste on CPU; the stacked jnp mirror of
+    the kernel's padding logic is ``fast_blur_nms_pyramid_stacked_jnp``
+    (tests pin all three against each other).
+    """
+    if resolve_impl(impl) == "ref":
+        return [_fast_blur_nms_fused_jnp(lv, threshold, nms, quantized)
+                for lv in levels]
+    shapes = [(int(lv.shape[1]), int(lv.shape[2])) for lv in levels]
+    b = levels[0].shape[0]
+    hc = max(h + (-h) % TILE_H for h, _ in shapes)
+    wc = max(w + (-w) % TILE_W for _, w in shapes)
+    flat = jnp.concatenate([
+        jnp.pad(lv.astype(jnp.float32),
+                ((0, 0), (FUSED_HALO, FUSED_HALO + hc - h),
+                 (FUSED_HALO, FUSED_HALO + wc - w)), mode="edge")
+        for lv, (h, w) in zip(levels, shapes)], axis=0)
+    hw = jnp.asarray(np.repeat(np.asarray(shapes, np.int32), b, axis=0))
+    _count_launches()
+    blur, score = frontend_fused_pyramid_pallas(
+        flat, hw, threshold=float(threshold), nms=bool(nms),
+        quantized=bool(quantized), interpret=_interpret())
+    return [(blur[l * b:(l + 1) * b, :h, :w],
+             score[l * b:(l + 1) * b, :h, :w])
+            for l, (h, w) in enumerate(shapes)]
 
 
 def _orient_describe_jnp(raw, smoothed, xy):
@@ -253,6 +349,68 @@ def orient_describe_batched(raw: jnp.ndarray, smoothed: jnp.ndarray | None,
         jnp.asarray(_pattern.STEER_LUT), raw_p, _pad_patch_slab(smoothed),
         xy_p, true_h=h, true_w=w, interpret=_interpret())
     return theta[:, :k], mom[:, :k], desc[:, :k]
+
+
+def orient_describe_pyramid(raws, smootheds, xys, *,
+                            impl: str | None = None):
+    """Whole-frame sparse stage: per-level raw/smoothed (B, h_l, w_l)
+    slab pairs plus per-level (B, K_l, 2) keypoint blocks -> per-level
+    (theta, moments, desc) tuples, ALL cameras x ALL levels in ONE
+    kernel launch.
+
+    This is the whole-frame analog of ``orient_describe_batched`` (one
+    launch per level): each level's keypoints are padded to a KP_BLOCK
+    multiple and concatenated level-major, so every K-block is
+    level-homogeneous and the kernel's index maps resolve its slab pair
+    from the static block->level offsets; a per-block (true_h, true_w)
+    table drives the coordinate clamp.  The wrapper owns the common-
+    canvas slab padding and the K padding; callers see exact per-level
+    shapes.  The jnp fallback is the per-level gather oracle — the
+    per-level and whole-frame ref paths are bit-identical by
+    construction.
+    """
+    if resolve_impl(impl) == "ref":
+        return [_orient_describe_jnp(r, s, xy)
+                for r, s, xy in zip(raws, smootheds, xys)]
+    shapes = [(int(r_.shape[1]), int(r_.shape[2])) for r_ in raws]
+    b = raws[0].shape[0]
+    rad = _ref.RADIUS
+    hc = max(h for h, _ in shapes) + 2 * rad
+    hc += (-hc) % 8
+    wc = max(w for _, w in shapes) + 2 * rad
+    wc += (-wc) % 128
+
+    def slab(imgs, h, w):
+        # Per-level edge pad by the patch RADIUS, then edge-replicated
+        # out to the common canvas; clamped patch starts stay within the
+        # (h + 2*rad, w + 2*rad) region, so the canvas pad is never read
+        # with values differing from the per-level slab.
+        return jnp.pad(imgs.astype(jnp.float32),
+                       ((0, 0), (rad, hc - h - rad), (rad, wc - w - rad)),
+                       mode="edge")
+
+    raw_all = jnp.concatenate(
+        [slab(im, h, w) for im, (h, w) in zip(raws, shapes)], axis=0)
+    sm_all = jnp.concatenate(
+        [slab(im, h, w) for im, (h, w) in zip(smootheds, shapes)], axis=0)
+    ks = [int(xy.shape[1]) for xy in xys]
+    kps = [(-k) % KP_BLOCK for k in ks]
+    xy_all = jnp.concatenate(
+        [jnp.pad(xy.astype(jnp.int32), ((0, 0), (0, kp), (0, 0)))
+         for xy, kp in zip(xys, kps)], axis=1)
+    nbs = [(k + kp) // KP_BLOCK for k, kp in zip(ks, kps)]
+    offsets = tuple(int(o) for o in np.cumsum([0] + nbs[:-1]))
+    hw = jnp.asarray(np.repeat(np.asarray(shapes, np.int32), nbs, axis=0))
+    _count_launches()
+    theta, mom, desc = describe_fused_pyramid_pallas(
+        jnp.asarray(_pattern.STEER_LUT), raw_all, sm_all, xy_all, hw,
+        level_offsets=offsets, interpret=_interpret())
+    outs, off = [], 0
+    for k, kp in zip(ks, kps):
+        outs.append((theta[:, off:off + k], mom[:, off:off + k],
+                     desc[:, off:off + k]))
+        off += k + kp
+    return outs
 
 
 def _pad_rows(x: jnp.ndarray, mult: int, fill=0):

@@ -297,6 +297,67 @@ def describe_steered(smoothed: jnp.ndarray, xy: jnp.ndarray,
     return jax.vmap(one)(patches, theta)
 
 
+# ---------------------------------------------------------------------------
+# Brute-force NUMPY oracles for the matcher ops — python loops, no jnp,
+# no vectorization tricks.  These are deliberately the dumbest possible
+# implementations: the jnp oracles above and the Pallas kernels are both
+# pinned against them in tests, so a vectorization bug cannot hide in a
+# shared formulation.
+
+MATCH_BIG = 1 << 20       # no-candidate sentinel; == hamming_match.BIG
+
+
+def hamming_match_bruteforce(desc_l, meta_l, desc_r, meta_r,
+                             row_band: float, max_disparity: float):
+    """O(K*M) python-loop reference of the fused search-region + Hamming
+    argmin (``ops.hamming_match``).
+
+    desc_*: (K, 8) uint32; meta_*: (K, 4) float32 (x, y, level, valid).
+    Returns numpy (dist (K,) int32 [MATCH_BIG when no candidate], idx
+    (K,) int32 [-1]).  Ties resolve to the LOWEST right index, matching
+    jnp argmin.
+    """
+    desc_l = np.asarray(desc_l, dtype=np.uint32)
+    desc_r = np.asarray(desc_r, dtype=np.uint32)
+    meta_l = np.asarray(meta_l, dtype=np.float32)
+    meta_r = np.asarray(meta_r, dtype=np.float32)
+    kl, kr = desc_l.shape[0], desc_r.shape[0]
+    dist = np.full(kl, MATCH_BIG, np.int32)
+    idx = np.full(kl, -1, np.int32)
+    for i in range(kl):
+        if meta_l[i, 3] <= 0.5:
+            continue
+        best, best_j = MATCH_BIG, -1
+        for j in range(kr):
+            if meta_r[j, 3] <= 0.5:
+                continue
+            dx = meta_l[i, 0] - meta_r[j, 0]
+            dy = abs(meta_l[i, 1] - meta_r[j, 1])
+            if not (dy <= row_band and 0.0 <= dx <= max_disparity
+                    and meta_l[i, 2] == meta_r[j, 2]):
+                continue
+            d = sum(bin(int(a) ^ int(b)).count("1")
+                    for a, b in zip(desc_l[i], desc_r[j]))
+            if d < best:
+                best, best_j = d, j
+        dist[i], idx[i] = best, best_j
+    return dist, idx
+
+
+def sad_search_bruteforce(left_patches, right_strips):
+    """Python-loop reference of the SAD sweep (``ops.sad_search``):
+    (K, P, P) x (K, P, P+2R) -> (K, 2R+1) int32."""
+    lp = np.asarray(left_patches).astype(np.int64)
+    rs = np.asarray(right_strips).astype(np.int64)
+    k, p, _ = lp.shape
+    sweep = rs.shape[-1] - p + 1
+    table = np.zeros((k, sweep), np.int64)
+    for i in range(k):
+        for s in range(sweep):
+            table[i, s] = np.abs(lp[i] - rs[i, :, s:s + p]).sum()
+    return table.astype(np.int32)
+
+
 def sad_search(left_patches: jnp.ndarray,
                right_strips: jnp.ndarray) -> jnp.ndarray:
     """SAD rectification sweep (paper Sec. II-C2 / III-D).

@@ -5,6 +5,25 @@ placeholder devices (and it does so before importing jax)."""
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:          # hypothesis is a dev-only dep; tests skip
+    pass
+else:
+    # Deterministic property tests for CI: fixed derivation (no random
+    # seed between runs), no wall-clock deadline (Pallas interpret mode
+    # and jit compilation make first examples slow, which is not a bug).
+    settings.register_profile(
+        "repro-ci",
+        derandomize=True,
+        deadline=None,
+        print_blob=True,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large,
+                               HealthCheck.filter_too_much],
+    )
+    settings.load_profile("repro-ci")
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -133,15 +133,21 @@ def test_orientation_only_variant_matches_full(rng):
         np.testing.assert_array_equal(np.asarray(mom_o), np.asarray(mom_f))
 
 
-def test_extractor_two_launches_per_level(rng):
+def test_extractor_two_launches_per_frame(rng):
     """Acceptance: extract_features_batched issues exactly 2 launches
-    per pyramid level (1 dense fused + 1 sparse descriptor) for ALL
-    cameras, via the traced launch counter."""
+    per FRAME (1 dense fused + 1 sparse descriptor) for ALL cameras x
+    ALL pyramid levels, via the traced launch counter; the per-level
+    reference schedule still costs 2 per level."""
+    from repro.core import extract_features_per_level
     imgs = _imgs(rng, 4, 96, 128)
     cfg = ORBConfig(height=96, width=128, max_features=48, n_levels=2)
     ops.reset_launch_count()
     jax.eval_shape(
         lambda im: extract_features_batched(im, cfg, impl="pallas"), imgs)
+    assert ops.launch_count() == 2
+    ops.reset_launch_count()
+    jax.eval_shape(
+        lambda im: extract_features_per_level(im, cfg, impl="pallas"), imgs)
     assert ops.launch_count() == 2 * cfg.n_levels
 
 

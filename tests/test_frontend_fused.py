@@ -126,11 +126,11 @@ def test_extract_features_batched_matches_per_image(rng):
                 np.asarray(getattr(single, f)), err_msg=f"camera {c} {f}")
 
 
-def test_quad_frame_two_fused_launches_per_level(rng):
-    """Acceptance: process_quad_frame issues exactly TWO fused launches
-    per pyramid level for all 4 cameras (1 dense blur+FAST+NMS + 1
-    sparse orientation+rBRIEF) — not per camera per op, and no
-    host-graph descriptor gathers."""
+def test_quad_frame_two_fused_launches_per_frame(rng):
+    """Acceptance: process_quad_frame issues exactly TWO fused FE
+    launches per FRAME for all 4 cameras x all pyramid levels (1 dense
+    blur+FAST+NMS + 1 sparse orientation+rBRIEF) — not per level, not
+    per camera per op, and no host-graph descriptor gathers."""
     from repro.core import CameraIntrinsics, process_quad_frame
     imgs = _imgs(rng, 4, 64, 96)
     cfg = ORBConfig(height=64, width=96, max_features=16, n_levels=2,
@@ -139,10 +139,9 @@ def test_quad_frame_two_fused_launches_per_level(rng):
     ops.reset_launch_count()
     jax.eval_shape(
         lambda f: process_quad_frame(f, cfg, intr, impl="pallas"), imgs)
-    # 2 fused FE launches per level; FM adds hamming + sad (2 per pair,
+    # 2 fused FE launches per frame; FM adds hamming + sad (2 per pair,
     # traced under vmap -> counted once each).
-    fe_launches = 2 * cfg.n_levels
-    assert ops.launch_count() == fe_launches + 2
+    assert ops.launch_count() == 2 + 2
 
 
 def test_build_pyramid_batched_matches_single(rng):

@@ -1,11 +1,18 @@
-"""Stereo matching + SAD rectification behaviour (paper Sec. II-C)."""
+"""Stereo matching + SAD rectification behaviour (paper Sec. II-C),
+plus brute-force numpy oracle pins for the matcher ops: the jnp path
+and the Pallas kernels of ``ops.hamming_match`` / ``ops.sad_search``
+are both pinned against the python-loop references in ``kernels.ref``,
+and ``temporal_match`` / ``sad_rectify`` get dedicated oracle tests."""
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CameraIntrinsics, ORBConfig, extract_features,
-                        process_stereo_frame, sad_rectify, stereo_match)
+from repro.core import (CameraIntrinsics, FeatureSet, ORBConfig,
+                        extract_features, process_stereo_frame,
+                        sad_rectify, stereo_match, temporal_match)
 from repro.data import scenes
+from repro.kernels import ops, ref
+from repro.kernels.hamming_match import BIG
 
 
 def _stereo_pair(disparity=12, h=128, w=192, seed=1):
@@ -78,6 +85,163 @@ def test_matching_on_rendered_scene_has_depth_ground_truth():
     # mismatches on repeated texture may fall outside)
     frac = np.mean((z > lo * 0.5) & (z < hi * 2.0))
     assert frac >= 0.8, (frac, np.sort(z))
+
+
+def _random_features(rng, k, h=480, w=640, n_levels=2):
+    """Random FeatureSet with some invalid rows — matcher-op fodder."""
+    desc = jnp.asarray(rng.randint(0, 2**32, (k, 8), dtype=np.uint64)
+                       .astype(np.uint32))
+    return FeatureSet(
+        xy=jnp.asarray(np.stack([rng.uniform(0, w, k),
+                                 rng.uniform(0, h, k)], 1)
+                       .astype(np.float32)),
+        level=jnp.asarray(rng.randint(0, n_levels, k).astype(np.int32)),
+        score=jnp.asarray(rng.uniform(1, 50, k).astype(np.float32)),
+        theta=jnp.asarray(rng.uniform(-np.pi, np.pi, k)
+                          .astype(np.float32)),
+        desc=desc,
+        valid=jnp.asarray(rng.uniform(size=k) > 0.2),
+    )
+
+
+def _meta(feat):
+    return jnp.stack([feat.xy[:, 0], feat.xy[:, 1],
+                      feat.level.astype(jnp.float32),
+                      feat.valid.astype(jnp.float32)], axis=-1)
+
+
+def test_hamming_match_pinned_to_bruteforce():
+    """Both impls of ops.hamming_match equal the python-loop reference
+    (kernels.ref.hamming_match_bruteforce), sentinels included."""
+    assert ref.MATCH_BIG == BIG
+    rng = np.random.RandomState(17)
+    fl = _random_features(rng, 37)
+    fr = _random_features(rng, 29)
+    want_d, want_i = ref.hamming_match_bruteforce(
+        fl.desc, _meta(fl), fr.desc, _meta(fr),
+        row_band=20.0, max_disparity=320.0)
+    for impl in ("ref", "pallas"):
+        d, i = ops.hamming_match(fl.desc, _meta(fl), fr.desc, _meta(fr),
+                                 row_band=20.0, max_disparity=320.0,
+                                 impl=impl)
+        np.testing.assert_array_equal(np.asarray(d), want_d,
+                                      err_msg=f"dist {impl}")
+        np.testing.assert_array_equal(np.asarray(i), want_i,
+                                      err_msg=f"idx {impl}")
+    assert (want_i == -1).any() and (want_i >= 0).any()
+
+
+def test_sad_search_pinned_to_bruteforce():
+    """Both impls of ops.sad_search equal the python-loop reference."""
+    rng = np.random.RandomState(18)
+    k, p, r = 13, 11, 5
+    lp = rng.randint(0, 256, (k, p, p)).astype(np.float32)
+    rs = rng.randint(0, 256, (k, p, p + 2 * r)).astype(np.float32)
+    want = ref.sad_search_bruteforce(lp, rs)
+    for impl in ("ref", "pallas"):
+        got = ops.sad_search(jnp.asarray(lp), jnp.asarray(rs), impl=impl)
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=impl)
+
+
+def test_temporal_match_pinned_to_bruteforce():
+    """temporal_match is the stereo kernel with a shifted square window:
+    rebuild its MatchSet from the brute-force reference with the same
+    meta shift and acceptance gates.  fb plants near-duplicates of fa's
+    first rows (few-bit descriptor flips, small +-dx drift) so the
+    max_hamming gate actually accepts matches."""
+    rng = np.random.RandomState(19)
+    cfg = ORBConfig(height=480, width=640, max_hamming=80)
+    fa = _random_features(rng, 41)
+    fb = _random_features(rng, 33)
+    n_planted = 16
+    drift = rng.uniform(-30.0, 30.0, (n_planted, 2)).astype(np.float32)
+    desc_b = np.asarray(fb.desc).copy()
+    desc_b[:n_planted] = np.asarray(fa.desc)[:n_planted]
+    desc_b[:n_planted, 0] ^= (1 << rng.randint(0, 32, n_planted)).astype(
+        np.uint32)
+    xy_b = np.asarray(fb.xy).copy()
+    xy_b[:n_planted] = np.asarray(fa.xy)[:n_planted] + drift
+    fb = fb._replace(
+        desc=jnp.asarray(desc_b), xy=jnp.asarray(xy_b),
+        level=fb.level.at[:n_planted].set(fa.level[:n_planted]),
+        valid=fb.valid.at[:n_planted].set(True))
+    radius = 48.0
+    meta_a = np.asarray(_meta(fa)).copy()
+    meta_a[:, 0] += radius
+    want_d, want_i = ref.hamming_match_bruteforce(
+        fa.desc, meta_a, fb.desc, _meta(fb),
+        row_band=radius, max_disparity=2.0 * radius)
+    want_valid = ((want_i >= 0) & (want_d <= cfg.max_hamming)
+                  & np.asarray(fa.valid))
+    for impl in ("ref", "pallas"):
+        tm = temporal_match(fa, fb, cfg, search_radius=radius, impl=impl)
+        np.testing.assert_array_equal(np.asarray(tm.distance), want_d,
+                                      err_msg=impl)
+        np.testing.assert_array_equal(np.asarray(tm.valid), want_valid,
+                                      err_msg=impl)
+        np.testing.assert_array_equal(
+            np.asarray(tm.right_index), np.where(want_valid, want_i, 0),
+            err_msg=impl)
+    # the window is square and two-sided: some accepted matches must sit
+    # at negative dx, which the raw stereo window would reject
+    dx = (np.asarray(fa.xy)[:, 0]
+          - np.asarray(fb.xy)[np.where(want_valid, want_i, 0), 0])
+    assert (dx[want_valid] < 0).any() or want_valid.sum() == 0
+
+
+def test_sad_rectify_pinned_to_bruteforce():
+    """sad_rectify == numpy reconstruction: edge-padded patch gathers,
+    python-loop SAD sweep, argmin re-location, disparity/depth gates."""
+    rng = np.random.RandomState(20)
+    h, w = 96, 144
+    # wide row band + accept-all Hamming gate so random features yield a
+    # healthy mix of matched and unmatched rows
+    cfg = ORBConfig(height=h, width=w, sad_window=11, sad_range=5,
+                    max_hamming=256, row_band=30)
+    intr = CameraIntrinsics(fx=120.0, cx=72.0, cy=48.0, baseline=0.2)
+    img_l = rng.randint(0, 256, (h, w)).astype(np.float32)
+    img_r = rng.randint(0, 256, (h, w)).astype(np.float32)
+    fl = _random_features(rng, 19, h=h, w=w)
+    fr = _random_features(rng, 23, h=h, w=w)
+    matches = stereo_match(fl, fr, cfg)
+
+    p, r = cfg.sad_window, cfg.sad_range
+
+    def gather(img, xy, ph, pw):
+        ry, rx = ph // 2, pw // 2
+        padded = np.pad(img, ((ry, ry), (rx, rx)), mode="edge")
+        out = np.zeros((xy.shape[0], ph, pw), np.float32)
+        for i, (x, y) in enumerate(xy):
+            xi = int(np.clip(np.round(x), 0, img.shape[1] - 1))
+            yi = int(np.clip(np.round(y), 0, img.shape[0] - 1))
+            out[i] = padded[yi:yi + ph, xi:xi + pw]
+        return out
+
+    xy_l = np.asarray(fl.xy)
+    xy_r = np.asarray(fr.xy)[np.asarray(matches.right_index)]
+    table = ref.sad_search_bruteforce(
+        gather(img_l, xy_l, p, p), gather(img_r, xy_r, p, p + 2 * r))
+    best = table.argmin(axis=1).astype(np.float32) - r
+    x_r_rect = xy_r[:, 0] + best
+    disparity = xy_l[:, 0] - x_r_rect
+    valid = np.asarray(matches.valid) & (disparity > 0.5)
+    depth = np.where(valid,
+                     intr.fx * intr.baseline / np.maximum(disparity, 0.5),
+                     0.0)
+    for impl in ("ref", "pallas"):
+        got = sad_rectify(jnp.asarray(img_l), jnp.asarray(img_r),
+                          fl, fr, matches, cfg, intr, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got.valid), valid,
+                                      err_msg=impl)
+        np.testing.assert_array_equal(
+            np.asarray(got.disparity), np.where(valid, disparity, 0.0),
+            err_msg=impl)
+        np.testing.assert_allclose(np.asarray(got.depth), depth,
+                                   rtol=1e-6, err_msg=impl)
+        np.testing.assert_allclose(
+            np.asarray(got.xy_right),
+            np.stack([x_r_rect, xy_r[:, 1]], axis=-1), rtol=1e-6,
+            err_msg=impl)
 
 
 def test_temporal_match_finds_same_features():

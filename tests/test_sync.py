@@ -1,10 +1,18 @@
-"""Hardware-synchronization tests (paper Sec. III-A)."""
+"""Hardware-synchronization tests (paper Sec. III-A): behaviour pins
+plus property tests (hypothesis) of the trigger/sync desync bounds and
+the interface-alignment window over random rates and frame counts."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sync
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # dev-only dep; property tests skip
+    HAVE_HYPOTHESIS = False
 
 
 def test_hardware_trigger_zero_desync():
@@ -53,3 +61,68 @@ def test_no_imu_sample_lost_or_duplicated():
     last_t = float(cams[-1, 0])
     expected = np.sum(np.asarray(imu) <= last_t)
     assert len(flat) == expected
+
+
+if HAVE_HYPOTHESIS:
+
+    _cfg_st = dict(
+        n_cameras=st.integers(1, 8),
+        fps=st.floats(5.0, 120.0),
+        rate=st.floats(50.0, 1000.0),
+        n_frames=st.integers(2, 60),
+    )
+
+    @given(**_cfg_st)
+    @settings(max_examples=40, deadline=None)
+    def test_hardware_trigger_desync_is_exactly_zero(n_cameras, fps, rate,
+                                                     n_frames):
+        """Paper Sec. III-A: one trigger clock stamps every camera, so
+        the inter-camera time-tag spread is 0 by construction — for ANY
+        camera count, frame rate, and IMU rate, not just the defaults."""
+        cfg = sync.TriggerConfig(n_cameras=n_cameras, camera_fps=fps,
+                                 imu_rate_hz=rate)
+        cams, imu = sync.hardware_trigger(cfg, n_frames)
+        assert float(sync.max_desync(cams)) == 0.0
+        # unified tags also cover the whole sequence monotonically
+        assert np.all(np.diff(np.asarray(imu)) > 0)
+        assert np.all(np.diff(np.asarray(cams[:, 0])) > 0)
+
+    @given(seed=st.integers(0, 2**16), **_cfg_st)
+    @settings(max_examples=25, deadline=None)
+    def test_software_sync_bounds(n_cameras, fps, rate, n_frames, seed):
+        """Software sync adds independent per-camera arrival jitter:
+        desync is positive whenever there are >= 2 cameras (the failure
+        mode the trigger generator removes) and never negative."""
+        cfg = sync.TriggerConfig(n_cameras=n_cameras, camera_fps=fps,
+                                 imu_rate_hz=rate, sw_jitter_std=4e-3)
+        cams, _ = sync.software_sync(cfg, n_frames, jax.random.key(seed))
+        desync = float(sync.max_desync(cams))
+        assert desync >= 0.0
+        if n_cameras >= 2:
+            assert desync > 0.0
+        # jitter only delays (abs model): software tags never precede
+        # the hardware trigger tags
+        hw, _ = sync.hardware_trigger(cfg, n_frames)
+        assert np.all(np.asarray(cams) >= np.asarray(hw))
+
+    @given(**_cfg_st)
+    @settings(max_examples=40, deadline=None)
+    def test_align_imu_window_matches_bruteforce(n_cameras, fps, rate,
+                                                 n_frames):
+        """align_imu's static-width window must select EXACTLY the IMU
+        samples with prev_tag < t <= frame_tag — pinned against a
+        python-loop reference over random rate combinations."""
+        cfg = sync.TriggerConfig(n_cameras=n_cameras, camera_fps=fps,
+                                 imu_rate_hz=rate)
+        cams, imu = sync.hardware_trigger(cfg, n_frames)
+        idx, mask = sync.align_imu(cams, imu, cfg)
+        idx, mask = np.asarray(idx), np.asarray(mask)
+        imu_np = np.asarray(imu)
+        frame_t = np.asarray(cams[:, 0])
+        prev_t = np.concatenate([[-np.inf], frame_t[:-1]])
+        assert idx.shape == mask.shape == (n_frames, cfg.imu_per_frame)
+        for t in range(n_frames):
+            want = set(np.nonzero((imu_np > prev_t[t])
+                                  & (imu_np <= frame_t[t]))[0].tolist())
+            got = set(idx[t][mask[t]].tolist())
+            assert got == want, (t, got, want)
