@@ -4,11 +4,13 @@ Wall clock on shared CI runners is noisy; traced Pallas launch counts
 are deterministic.  ``benchmarks.run`` records, in the
 ``BENCH_frontend.json`` artifact, the number of kernel launches a traced
 quad frame issues (``launch_gate/quad_frame_launches``) next to the
-whole-frame-schedule budget (``launch_gate/quad_frame_budget`` — 4: ONE
-dense + ONE sparse FE launch for all cameras x all pyramid levels, plus
-2 FM).  This script fails the job when the actual count exceeds the
-budget, i.e. when a change silently un-fuses the frontend back toward
-per-level or per-camera-per-op dispatch.
+fused-schedule budget (``launch_gate/quad_frame_budget`` — 3: ONE dense
++ ONE sparse FE launch for all cameras x all pyramid levels, plus ONE
+fused FM megakernel launch for both stereo pairs; the FM stage is also
+gated on its own via ``launch_gate/fm_frame_*``).  This script fails the
+job when any actual count exceeds its budget, i.e. when a change
+silently un-fuses the frontend or matcher back toward per-level,
+per-pair or per-op dispatch.
 
 Usage: python -m benchmarks.check_launches [BENCH_frontend.json]
 Exit status: 0 when every gate holds, 1 on regression or missing rows.

@@ -27,6 +27,13 @@
                                   counts; also emits the launch_gate
                                   rows the CI regression gate
                                   (check_launches.py) enforces
+  table_fm_fused_vs_unfused
+                         PR 4     fused FM megakernel (ONE launch per
+                                  frame: Hamming match + in-kernel SAD
+                                  patch reads, pair axis in the grid)
+                                  vs the unfused two-kernel +
+                                  host-graph-gather schedule: wall
+                                  clock + traced launch counts
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--out PATH]
 Prints CSV rows ``table,name,value,unit,note`` and writes them to a
@@ -70,6 +77,16 @@ def _bench(fn, *args, iters=5, warmup=2):
     for _ in range(iters):
         out = jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters, out
+
+
+def _bench_median(fn, *args, iters=5, reps=3):
+    """Median of ``reps`` independent ``_bench`` means.  For contenders
+    whose wall clocks are within scheduler noise of each other (the
+    fused-vs-unfused FM table), a single mean can flip the reported
+    speedup by 2x on a loaded host; the median of repeats keeps the
+    perf-trajectory artifact rows trustworthy."""
+    return sorted(_bench(fn, *args, iters=iters)[0]
+                  for _ in range(reps))[reps // 2]
 
 
 def _scene(h, w, n=300, seed=11):
@@ -488,11 +505,84 @@ def table_whole_frame_vs_per_level(quick=False):
     jax.eval_shape(
         lambda f: process_quad_frame(f, gcfg, intr, impl="pallas"), gimgs)
     actual = ops.launch_count()
-    budget = 4
+    budget = 3
     emit("launch_gate", "quad_frame_launches", actual, "kernels",
          f"traced, 4 cams {w}x{h} x {gcfg.n_levels} levels")
     emit("launch_gate", "quad_frame_budget", budget, "kernels",
-         "whole-frame FE (1 dense + 1 sparse) + 2 FM")
+         "whole-frame FE (1 dense + 1 sparse) + 1 fused FM")
+
+
+def table_fm_fused_vs_unfused(quick=False):
+    """Tentpole regression number for the FM stage: the fused megakernel
+    (ONE launch per frame — masked Hamming running-argmin + in-kernel
+    11x11/strip patch reads + SAD sweep, stereo pairs folded into the
+    grid) vs the unfused schedule (``hamming_match`` kernel + host-graph
+    full-image pad + 2*K ``dynamic_slice`` gathers per pair, twice, +
+    ``sad_search`` kernel, vmapped over pairs).
+
+    Wall clock is measured on the jnp paths (interpret-free CPU);
+    launch counts are traced under the Pallas impl — the deterministic,
+    machine-independent half, gated in CI via the launch_gate rows.
+    """
+    from repro.core import extract_features_batched, match_pair_fused
+    from repro.core import match_pair_unfused
+    from repro.core.frontend import _split_cameras
+    resolutions = [(480, 640)] + ([] if quick else [(720, 1280)])
+    for h, w in resolutions:
+        rng = np.random.RandomState(7)
+        imgs = jnp.asarray(rng.randint(0, 256, (4, h, w))
+                           .astype(np.float32))
+        ocfg = ORBConfig(height=h, width=w, n_levels=2,
+                         max_features=1000, max_disparity=96)
+        intr = CameraIntrinsics(cx=w / 2.0, cy=h / 2.0)
+        res = f"{w}x{h}"
+        # FE once, outside the timed region: both contenders consume
+        # identical (images, features) inputs.
+        feats = jax.block_until_ready(
+            extract_features_batched(imgs, ocfg, impl="ref"))
+        feat_l, feat_r = _split_cameras(feats, n_pairs=2)
+        pairs = imgs.reshape(2, 2, h, w)
+
+        def fm_fused(p, fl, fr, impl="ref"):
+            return match_pair_fused(p[:, 0], p[:, 1], fl, fr, ocfg,
+                                    intr, impl=impl)
+
+        def fm_unfused(p, fl, fr, impl="ref"):
+            return jax.vmap(
+                lambda pp, l_, r_: match_pair_unfused(
+                    pp[0], pp[1], l_, r_, ocfg, intr, impl=impl)
+            )(p, fl, fr)
+
+        iters = 4 if (h, w) == (720, 1280) else 10
+        t_unf = _bench_median(jax.jit(fm_unfused), pairs, feat_l, feat_r,
+                              iters=iters)
+        t_fus = _bench_median(jax.jit(fm_fused), pairs, feat_l, feat_r,
+                              iters=iters)
+        emit("fm_fused", f"unfused_ms_{res}", round(t_unf * 1e3, 2),
+             "ms", "2 pairs, hamming + gather chain + sad (jnp)")
+        emit("fm_fused", f"fused_ms_{res}", round(t_fus * 1e3, 2),
+             "ms", "2 pairs, one fused FM dispatch (jnp)")
+        emit("fm_fused", f"speedup_{res}", round(t_unf / t_fus, 2), "x",
+             "unfused / fused wall clock")
+
+        # Launch counts: trace-only (no kernel execution) under Pallas.
+        ops.reset_launch_count()
+        jax.eval_shape(lambda p, fl, fr: fm_unfused(p, fl, fr, "pallas"),
+                       pairs, feat_l, feat_r)
+        n_unf = ops.launch_count()
+        ops.reset_launch_count()
+        jax.eval_shape(lambda p, fl, fr: fm_fused(p, fl, fr, "pallas"),
+                       pairs, feat_l, feat_r)
+        n_fus = ops.launch_count()
+        emit("fm_fused", f"launches_unfused_{res}", n_unf, "kernels",
+             "hamming + sad per traced pair vmap (+ host-graph gathers)")
+        emit("fm_fused", f"launches_fused_{res}", n_fus, "kernels",
+             "1 megakernel launch, pair axis in the grid")
+    # FM launch gate: one fused launch per frame for both pairs.
+    emit("launch_gate", "fm_frame_launches", n_fus, "kernels",
+         "traced fused FM, 2 stereo pairs")
+    emit("launch_gate", "fm_frame_budget", 1, "kernels",
+         "single FM megakernel launch per frame")
 
 
 def main() -> None:
@@ -511,6 +601,7 @@ def main() -> None:
     table_fused_vs_seed(args.quick)
     table_describe_fused_vs_gather(args.quick)
     table_whole_frame_vs_per_level(args.quick)
+    table_fm_fused_vs_unfused(args.quick)
     print(f"# done in {time.time() - t0:.1f}s ({len(ROWS)} rows)")
     if args.out:
         rows = [{"table": t, "name": n, "value": v, "unit": u, "note": note}

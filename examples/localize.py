@@ -6,7 +6,9 @@ ground truth.
 All 4 cameras of a frame go through ONE ``process_quad_frame`` call —
 the whole-frame batched frontend: per FRAME, one dense blur+FAST+NMS
 launch and one sparse orientation+rBRIEF launch covering every camera
-at every pyramid level (the traced launch audit is printed at startup).
+at every pyramid level, plus ONE fused Feature Matcher launch (Hamming
+match + in-kernel SAD rectification) covering both stereo pairs — 3
+launches total (the traced launch audit is printed at startup).
 
     PYTHONPATH=src python examples/localize.py [--frames 6]
 """
@@ -43,8 +45,8 @@ def main() -> None:
         lambda f: process_quad_frame(f, ocfg, intr, impl="pallas"),
         frames[0])
     print(f"traced kernel launches per quad frame: {ops.launch_count()} "
-          f"(1 dense + 1 sparse FE for all 4 cams x all levels, + 2 FM — "
-          f"hamming and SAD trace once under the pair vmap)")
+          f"(1 dense + 1 sparse FE for all 4 cams x all levels, + 1 fused "
+          f"FM — Hamming + in-kernel SAD for both pairs in one grid)")
 
     quad = jax.jit(lambda f: process_quad_frame(f, ocfg, intr))
     outs = [quad(f) for f in frames]          # leading (2,) pair axis

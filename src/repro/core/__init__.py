@@ -4,7 +4,10 @@ from repro.core.types import (CameraIntrinsics, DepthSet, FeatureSet,
                               MatchSet, ORBConfig)
 from repro.core.orb import (extract_features, extract_features_batched,
                             extract_features_per_level)
-from repro.core.matching import sad_rectify, stereo_match, temporal_match
+from repro.core.matching import (match_pair_fused, match_pair_unfused,
+                                 sad_rectify, sad_rectify_unfused,
+                                 stereo_match, stereo_match_unfused,
+                                 temporal_match)
 from repro.core.frontend import (StereoOutput, extract_pair, match_pair,
                                  pipeline_schedule, process_quad_frame,
                                  process_stereo_frame, run_sequence,
@@ -14,7 +17,9 @@ from repro.core import backend, sync  # noqa: F401
 __all__ = [
     "CameraIntrinsics", "DepthSet", "FeatureSet", "MatchSet", "ORBConfig",
     "StereoOutput", "extract_features", "extract_features_batched",
-    "extract_features_per_level", "stereo_match", "sad_rectify",
+    "extract_features_per_level", "stereo_match", "stereo_match_unfused",
+    "sad_rectify", "sad_rectify_unfused", "match_pair_fused",
+    "match_pair_unfused",
     "temporal_match", "extract_pair", "match_pair", "process_stereo_frame",
     "process_quad_frame", "run_sequence", "run_sequence_pipelined",
     "pipeline_schedule", "backend", "sync",

@@ -18,14 +18,24 @@ batched frontend refactor:
   level, host-graph NMS slices, and vmapped per-keypoint 31x31 gathers
   for the sparse half, and earlier revisions still re-launched both
   fused stages once per level (2 x L launches per frame).
-* Two identical module pairs for the two stereo pairs: the FM stage
-  (`match_pair`) is `vmap`'d over the pair axis (shardable: data
-  parallelism over pairs); FE no longer nests vmaps — the camera batch
-  IS the multiplexing axis.
+* One shared FM datapath for the two stereo pairs: the FM stage is ONE
+  fused Pallas launch per frame (``matching.match_pair_fused`` →
+  ``ops.match_rectify_fused``) whose kernel grid walks (pair, K-block)
+  with an inner sequential M sweep — Search Region Decision + Hamming
+  Compare + SAD Correction and Disparity Computing stream through one
+  kernel exactly as they stream through the paper's single FM block
+  (Sec. III-D), with the 11x11 windows read in-kernel from the VMEM-
+  resident level-0 slabs.  The pair axis is folded into the grid, not
+  ``vmap``'d, and the SAD inputs no longer go through a host-graph
+  gather chain.  The Fig. 4 mapping is therefore 2 FE + 1 FM: a traced
+  quad frame costs exactly THREE kernel launches.
 * FE(N+1) overlapping FM(N): software-pipelined `lax.scan` — the scan
   body computes FE(frame t) and FM(features of frame t-1), which have no
   data dependence, so XLA is free to interleave them; results stream out
-  with one frame of latency, exactly the Fig. 4 timeline.
+  with one frame of latency, exactly the Fig. 4 timeline.  With FM now a
+  single schedulable launch (instead of a gather-laden host graph), the
+  FE(t) ∥ FM(t-1) overlap is one dense kernel against one matcher
+  kernel.
 """
 
 from __future__ import annotations
@@ -73,10 +83,13 @@ def extract_pair(img_l: jnp.ndarray, img_r: jnp.ndarray, cfg: ORBConfig,
 def match_pair(img_l, img_r, feat_l: FeatureSet, feat_r: FeatureSet,
                cfg: ORBConfig, intr: CameraIntrinsics,
                impl: str | None = None):
-    matches = matching.stereo_match(feat_l, feat_r, cfg, impl=impl)
-    depth = matching.sad_rectify(img_l, img_r, feat_l, feat_r, matches,
-                                 cfg, intr, impl=impl)
-    return matches, depth
+    """FM stage for ONE stereo pair: a pair-batch-of-one view of the
+    fused FM megakernel (``matching.match_pair_fused``) — one launch."""
+    matches, depth = matching.match_pair_fused(
+        img_l[None], img_r[None],
+        jax.tree.map(lambda x: x[None], feat_l),
+        jax.tree.map(lambda x: x[None], feat_r), cfg, intr, impl=impl)
+    return jax.tree.map(lambda x: x[0], (matches, depth))
 
 
 def process_stereo_frame(img_l, img_r, cfg: ORBConfig,
@@ -93,20 +106,19 @@ def process_quad_frame(images: jnp.ndarray, cfg: ORBConfig,
                        impl: str | None = None) -> StereoOutput:
     """images: (4, H, W) — [pair0_L, pair0_R, pair1_L, pair1_R].
 
-    FE runs ONCE over the whole 4-camera batch: TWO fused launches —
-    one dense + one sparse — for all cameras x all pyramid levels, so a
-    traced quad frame costs exactly 4 kernel launches (2 FE + 2 FM, the
-    budget ``benchmarks.check_launches`` gates).  The FM stage runs
-    through identical module instances in parallel (vmap over the pair
-    axis).  Outputs have a leading (2,) pair axis.
+    FE runs ONCE over the whole 4-camera batch (TWO fused launches —
+    one dense + one sparse — for all cameras x all pyramid levels) and
+    the FM stage runs ONCE over both stereo pairs (ONE fused matcher
+    launch whose grid folds the pair axis), so a traced quad frame
+    costs exactly 3 kernel launches (2 FE + 1 FM, the budget
+    ``benchmarks.check_launches`` gates).  Outputs have a leading (2,)
+    pair axis.
     """
     pairs = images.reshape(2, 2, *images.shape[1:])
     feats = orb.extract_features_batched(images, cfg, impl=impl)  # (4, ...)
     feat_l, feat_r = _split_cameras(feats, n_pairs=2)
-    matches, depth = jax.vmap(
-        lambda p, fl, fr: match_pair(p[0], p[1], fl, fr, cfg, intr,
-                                     impl=impl)
-    )(pairs, feat_l, feat_r)
+    matches, depth = matching.match_pair_fused(
+        pairs[:, 0], pairs[:, 1], feat_l, feat_r, cfg, intr, impl=impl)
     return StereoOutput(feat_l, feat_r, matches, depth)
 
 
@@ -146,10 +158,11 @@ def run_sequence_pipelined(frames: jnp.ndarray, cfg: ORBConfig,
 
     def fm(pairs, feats):
         feat_l, feat_r = feats
-        return jax.vmap(
-            lambda pl_, fl, fr: match_pair(pl_[0], pl_[1], fl, fr, cfg,
-                                           intr, impl=impl)
-        )(pairs, feat_l, feat_r)
+        # ONE fused matcher launch for both pairs — schedulable against
+        # the dense FE launch of the next frame inside the scan body.
+        return matching.match_pair_fused(pairs[:, 0], pairs[:, 1],
+                                         feat_l, feat_r, cfg, intr,
+                                         impl=impl)
 
     # Pipeline prologue: FE of frame 0.
     pairs0, feats0 = fe(frames[0])

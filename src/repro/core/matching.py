@@ -1,8 +1,21 @@
 """Feature matching — the paper's Feature Matcher block (Fig. 3e).
 
-Stereo matcher (fused search-region decision + Hamming argmin, Pallas
-kernel) followed by SAD rectification (11x11 window, +-range sweep,
-Pallas kernel) and disparity/depth computation.
+The FM stage mirrors the paper's ONE hardware block (Sec. III-D): the
+hot path is ``match_pair_fused`` — Search Region Decision + Hamming
+Compare + SAD Correction and Disparity Computing in a SINGLE fused
+Pallas launch per frame, batched over stereo pairs
+(``ops.match_rectify_fused``).  The standalone entry points route
+through the same dispatch: ``stereo_match`` / ``temporal_match`` use its
+match-only mode (one launch, no SAD) and ``sad_rectify`` uses the
+in-kernel SAD sweep (``ops.sad_patch_search``), so none of them runs the
+old host-graph patch-gather chain.
+
+The pre-fusion schedule — separate ``hamming_match`` kernel, host-graph
+``_gather_patches`` (full-image pad + 2*K vmapped ``dynamic_slice`` per
+pair, twice) and ``sad_search`` kernel — survives as
+``match_pair_unfused`` (+ ``stereo_match_unfused`` /
+``sad_rectify_unfused``): the oracle the fused path is pinned against
+bit-for-bit in ``tests/test_matcher_fused.py``.
 """
 
 from __future__ import annotations
@@ -13,42 +26,114 @@ import jax.numpy as jnp
 from repro.core.types import (CameraIntrinsics, DepthSet, FeatureSet,
                               MatchSet, ORBConfig)
 from repro.kernels import ops
+from repro.kernels import ref as _ref
 
 
 def _meta(feat: FeatureSet) -> jnp.ndarray:
-    return jnp.stack([feat.xy[:, 0], feat.xy[:, 1],
+    """(..., K) FeatureSet -> (..., K, 4) float32 matcher meta rows of
+    (x, y, level, valid); works for unbatched and pair-batched sets."""
+    return jnp.stack([feat.xy[..., 0], feat.xy[..., 1],
                       feat.level.astype(jnp.float32),
                       feat.valid.astype(jnp.float32)], axis=-1)
 
 
-def stereo_match(feat_l: FeatureSet, feat_r: FeatureSet,
-                 cfg: ORBConfig, impl: str | None = None) -> MatchSet:
-    """Best Hamming match in the strip-like search region (Sec. II-C1)."""
-    dist, idx = ops.hamming_match(
-        feat_l.desc, _meta(feat_l), feat_r.desc, _meta(feat_r),
-        row_band=float(cfg.row_band),
-        max_disparity=float(cfg.max_disparity), impl=impl)
+def _match_set(dist, idx, feat_l: FeatureSet, cfg: ORBConfig) -> MatchSet:
+    """Acceptance gates + the index-resolution rule shared by every
+    matcher entry point: a match is valid iff a candidate exists, it
+    passes ``max_hamming`` and the left feature is real; invalid rows
+    resolve to right index 0 (the fused kernel bakes the same rule into
+    its SAD stage)."""
     valid = (idx >= 0) & (dist <= cfg.max_hamming) & feat_l.valid
     return MatchSet(right_index=jnp.where(valid, idx, 0),
                     distance=dist, valid=valid)
 
 
+def _depth_set(x_l, rxy, best, matches: MatchSet, cfg: ORBConfig,
+               intr: CameraIntrinsics) -> DepthSet:
+    """Disparity/depth computation shared by the fused and unfused
+    paths: ``best`` is the SAD-argmin offset (already minus sad_range),
+    ``rxy`` the effective right feature coords."""
+    x_r_rect = rxy[..., 0] + best
+    disparity = x_l - x_r_rect
+    valid = matches.valid & (disparity > 0.5)
+    depth = jnp.where(valid, intr.fx * intr.baseline
+                      / jnp.maximum(disparity, 0.5), 0.0)
+    xy_right = jnp.stack([x_r_rect, rxy[..., 1]], axis=-1)
+    return DepthSet(disparity=jnp.where(valid, disparity, 0.0),
+                    depth=depth, xy_right=xy_right, valid=valid)
+
+
+def match_pair_fused(imgs_l: jnp.ndarray, imgs_r: jnp.ndarray,
+                     feat_l: FeatureSet, feat_r: FeatureSet,
+                     cfg: ORBConfig, intr: CameraIntrinsics,
+                     impl: str | None = None):
+    """The whole FM stage of a frame in ONE fused launch.
+
+    All arguments carry a leading (P,) stereo-pair axis (images
+    (P, H, W), FeatureSet fields (P, K, ...)); the pair axis is folded
+    into the kernel grid instead of ``vmap``.  Returns (MatchSet,
+    DepthSet) with leading (P,) axes — bit-exact against
+    ``match_pair_unfused`` per pair (tests pin it)."""
+    dist, idx, rxy, sad = ops.match_rectify_fused(
+        feat_l.desc, _meta(feat_l), feat_r.desc, _meta(feat_r),
+        imgs_l, imgs_r,
+        row_band=float(cfg.row_band),
+        max_disparity=float(cfg.max_disparity),
+        max_hamming=int(cfg.max_hamming),
+        sad_window=cfg.sad_window, sad_range=cfg.sad_range, impl=impl)
+    matches = _match_set(dist, idx, feat_l, cfg)
+    best = sad.astype(jnp.float32) - float(cfg.sad_range)
+    depth = _depth_set(feat_l.xy[..., 0], rxy, best, matches, cfg, intr)
+    return matches, depth
+
+
+def match_pair_unfused(img_l: jnp.ndarray, img_r: jnp.ndarray,
+                       feat_l: FeatureSet, feat_r: FeatureSet,
+                       cfg: ORBConfig, intr: CameraIntrinsics,
+                       impl: str | None = None):
+    """Pre-fusion FM schedule for ONE stereo pair: the two-kernel +
+    host-graph-gather path (``hamming_match`` kernel, pad/dynamic_slice
+    patch gathers, ``sad_search`` kernel).  Kept as the oracle
+    ``match_pair_fused`` is pinned against bit-for-bit."""
+    matches = stereo_match_unfused(feat_l, feat_r, cfg, impl=impl)
+    depth = sad_rectify_unfused(img_l, img_r, feat_l, feat_r, matches,
+                                cfg, intr, impl=impl)
+    return matches, depth
+
+
+def stereo_match(feat_l: FeatureSet, feat_r: FeatureSet,
+                 cfg: ORBConfig, impl: str | None = None) -> MatchSet:
+    """Best Hamming match in the strip-like search region (Sec. II-C1),
+    via the fused dispatch's match-only mode (one launch)."""
+    dist, idx = ops.match_rectify_fused(
+        feat_l.desc[None], _meta(feat_l)[None],
+        feat_r.desc[None], _meta(feat_r)[None],
+        row_band=float(cfg.row_band),
+        max_disparity=float(cfg.max_disparity), impl=impl)
+    return _match_set(dist[0], idx[0], feat_l, cfg)
+
+
+def stereo_match_unfused(feat_l: FeatureSet, feat_r: FeatureSet,
+                         cfg: ORBConfig,
+                         impl: str | None = None) -> MatchSet:
+    """Pre-fusion stereo matcher: the standalone ``hamming_match``
+    kernel — the oracle half of ``match_pair_unfused``."""
+    dist, idx = ops.hamming_match(
+        feat_l.desc, _meta(feat_l), feat_r.desc, _meta(feat_r),
+        row_band=float(cfg.row_band),
+        max_disparity=float(cfg.max_disparity), impl=impl)
+    return _match_set(dist, idx, feat_l, cfg)
+
+
 def _gather_patches(img: jnp.ndarray, xy: jnp.ndarray, ph: int, pw: int):
     """Gather (ph, pw) patches centered at integer xy from an image.
 
-    Patches are clamped inside via edge padding; xy: (K, 2) float32."""
-    ry, rx = ph // 2, pw // 2
-    padded = jnp.pad(img.astype(jnp.float32), ((ry, ry), (rx, rx)),
-                     mode="edge")
-    xs = jnp.clip(jnp.round(xy[:, 0]).astype(jnp.int32), 0,
-                  img.shape[1] - 1)
-    ys = jnp.clip(jnp.round(xy[:, 1]).astype(jnp.int32), 0,
-                  img.shape[0] - 1)
-
-    def one(x, y):
-        return jax.lax.dynamic_slice(padded, (y, x), (ph, pw))
-
-    return jax.vmap(one)(xs, ys)
+    Patches are clamped inside via edge padding; xy: (K, 2) float32.
+    Thin alias of ``ref.gather_patches`` — the single definition of the
+    FM patch-read clamp, audited against
+    ``ref.gather_patches_bruteforce`` and reproduced in-kernel by
+    ``matcher_fused``."""
+    return _ref.gather_patches(img, xy, ph, pw)
 
 
 def sad_rectify(img_l: jnp.ndarray, img_r: jnp.ndarray,
@@ -59,8 +144,28 @@ def sad_rectify(img_l: jnp.ndarray, img_r: jnp.ndarray,
 
     Operates on level-0 images with level-0 coordinates (the pyramid-
     multiplexed FM block of the paper processes both levels; our static
-    top-K already merged levels into level-0 coords).
-    """
+    top-K already merged levels into level-0 coords).  Patch windows are
+    read IN-KERNEL from the level-0 slabs (``ops.sad_patch_search``) —
+    one launch, no host-graph gather chain."""
+    xy_l = feat_l.xy
+    xy_r = feat_r.xy[matches.right_index]
+    table = ops.sad_patch_search(
+        img_l[None], img_r[None], xy_l[None], xy_r[None],
+        sad_window=cfg.sad_window, sad_range=cfg.sad_range, impl=impl)[0]
+    best = (jnp.argmin(table, axis=1).astype(jnp.float32)
+            - float(cfg.sad_range))
+    return _depth_set(xy_l[:, 0], xy_r, best, matches, cfg, intr)
+
+
+def sad_rectify_unfused(img_l: jnp.ndarray, img_r: jnp.ndarray,
+                        feat_l: FeatureSet, feat_r: FeatureSet,
+                        matches: MatchSet, cfg: ORBConfig,
+                        intr: CameraIntrinsics,
+                        impl: str | None = None) -> DepthSet:
+    """Pre-fusion SAD rectification: host-graph ``_gather_patches``
+    (full-image pad + 2*K ``dynamic_slice`` per pair, twice) feeding the
+    standalone ``sad_search`` kernel — the oracle half of
+    ``match_pair_unfused``."""
     p = cfg.sad_window
     r = cfg.sad_range
     xy_l = feat_l.xy
@@ -70,31 +175,26 @@ def sad_rectify(img_l: jnp.ndarray, img_r: jnp.ndarray,
     right_strips = _gather_patches(img_r, xy_r, p, p + 2 * r)
     table = ops.sad_search(left_patches, right_strips, impl=impl)
     best = jnp.argmin(table, axis=1).astype(jnp.float32) - float(r)
-
-    x_r_rect = xy_r[:, 0] + best
-    disparity = xy_l[:, 0] - x_r_rect
-    valid = matches.valid & (disparity > 0.5)
-    depth = jnp.where(valid, intr.fx * intr.baseline
-                      / jnp.maximum(disparity, 0.5), 0.0)
-    xy_right = jnp.stack([x_r_rect, xy_r[:, 1]], axis=-1)
-    return DepthSet(disparity=jnp.where(valid, disparity, 0.0),
-                    depth=depth, xy_right=xy_right, valid=valid)
+    return _depth_set(xy_l[:, 0], xy_r, best, matches, cfg, intr)
 
 
 def temporal_match(feat_a: FeatureSet, feat_b: FeatureSet,
                    cfg: ORBConfig, search_radius: float = 48.0,
+                   search_radius_y: float | None = None,
                    impl: str | None = None) -> MatchSet:
-    """Frame-to-frame matching for the VO backend: same kernel, wider
-    square search region (band in y, +-radius in x via shifted meta)."""
+    """Frame-to-frame matching for the VO backend: the fused dispatch's
+    match-only mode (one launch) with a rectangular search region —
+    +-``search_radius`` in x (via shifted meta, reusing the
+    [0, max_disparity] window) and +-``search_radius_y`` in y (defaults
+    to the x radius, i.e. the square window)."""
+    radius_y = search_radius if search_radius_y is None else search_radius_y
     meta_a = _meta(feat_a)
     meta_b = _meta(feat_b)
     # Reuse the [0, max_disparity] window as [-radius, +radius] by
     # shifting the left x coordinate.
     meta_a = meta_a.at[:, 0].add(search_radius)
-    dist, idx = ops.hamming_match(
-        feat_a.desc, meta_a, feat_b.desc, meta_b,
-        row_band=search_radius, max_disparity=2.0 * search_radius,
+    dist, idx = ops.match_rectify_fused(
+        feat_a.desc[None], meta_a[None], feat_b.desc[None], meta_b[None],
+        row_band=float(radius_y), max_disparity=2.0 * search_radius,
         impl=impl)
-    valid = (idx >= 0) & (dist <= cfg.max_hamming) & feat_a.valid
-    return MatchSet(right_index=jnp.where(valid, idx, 0),
-                    distance=dist, valid=valid)
+    return _match_set(dist[0], idx[0], feat_a, cfg)

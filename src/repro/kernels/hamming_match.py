@@ -35,6 +35,28 @@ def _popcount32(x: jnp.ndarray) -> jnp.ndarray:
     return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
 
 
+def masked_hamming(dl, ml, dr, mr, *, row_band: float,
+                   max_disparity: float):
+    """(BK, 8) x (BM, 8) uint32 descriptors + (x, y, level, valid) meta
+    -> (BK, BM) int32 Hamming distances with the Search Region Decision
+    (paper Sec. III-D) fused as a BIG-sentinel mask.  The shared front
+    half of every matcher kernel body — this per-pair kernel and the
+    pair-folded grids of ``matcher_fused.py``."""
+    # Hamming distance, accumulated word-by-word to keep VMEM small.
+    dist = jnp.zeros((dl.shape[0], dr.shape[0]), jnp.int32)
+    for word in range(dl.shape[1]):
+        x = jnp.bitwise_xor(dl[:, word][:, None], dr[:, word][None, :])
+        dist = dist + _popcount32(x)
+
+    dx = ml[:, 0][:, None] - mr[:, 0][None, :]            # x_L - x_R
+    dy = jnp.abs(ml[:, 1][:, None] - mr[:, 1][None, :])
+    same_level = ml[:, 2][:, None] == mr[:, 2][None, :]
+    valid = (ml[:, 3][:, None] > 0.5) & (mr[:, 3][None, :] > 0.5)
+    mask = (dy <= row_band) & (dx >= 0.0) & (dx <= max_disparity) \
+        & same_level & valid
+    return jnp.where(mask, dist, BIG)
+
+
 def _kernel(dl_ref, ml_ref, dr_ref, mr_ref, dist_ref, idx_ref, *,
             row_band: float, max_disparity: float):
     j = pl.program_id(1)
@@ -44,25 +66,9 @@ def _kernel(dl_ref, ml_ref, dr_ref, mr_ref, dist_ref, idx_ref, *,
         dist_ref[...] = jnp.full_like(dist_ref, BIG)
         idx_ref[...] = jnp.full_like(idx_ref, -1)
 
-    dl = dl_ref[...]                       # (BK, 8) uint32
-    dr = dr_ref[...]                       # (BM, 8) uint32
-    ml = ml_ref[...]                       # (BK, 4) f32: x, y, level, valid
-    mr = mr_ref[...]                       # (BM, 4) f32
-
-    # Hamming distance, accumulated word-by-word to keep VMEM small.
-    dist = jnp.zeros((dl.shape[0], dr.shape[0]), jnp.int32)
-    for word in range(dl.shape[1]):
-        x = jnp.bitwise_xor(dl[:, word][:, None], dr[:, word][None, :])
-        dist = dist + _popcount32(x)
-
-    # Search Region Decision (paper Sec. III-D), fused as a mask.
-    dx = ml[:, 0][:, None] - mr[:, 0][None, :]            # x_L - x_R
-    dy = jnp.abs(ml[:, 1][:, None] - mr[:, 1][None, :])
-    same_level = ml[:, 2][:, None] == mr[:, 2][None, :]
-    valid = (ml[:, 3][:, None] > 0.5) & (mr[:, 3][None, :] > 0.5)
-    mask = (dy <= row_band) & (dx >= 0.0) & (dx <= max_disparity) \
-        & same_level & valid
-    dist = jnp.where(mask, dist, BIG)
+    dist = masked_hamming(dl_ref[...], ml_ref[...], dr_ref[...],
+                          mr_ref[...], row_band=row_band,
+                          max_disparity=max_disparity)
 
     # Compare: running argmin against the accumulated best.
     tile_best = jnp.min(dist, axis=1)                      # (BK,)

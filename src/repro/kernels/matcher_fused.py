@@ -1,0 +1,304 @@
+"""Pallas TPU kernels: single-launch Feature Matcher megakernel.
+
+The paper's Feature Matcher is ONE hardware block (Sec. III-D): Search
+Region Decision, Hamming Compare and SAD Correction / Disparity
+Computing stream through a shared datapath.  Before this kernel our FM
+stage was three pieces per stereo pair — the ``hamming_match`` kernel, a
+host-graph gather chain (full-image pad + 2*K vmapped ``dynamic_slice``
+per pair, twice) and the ``sad_search`` kernel.  Here the WHOLE stage is
+one ``pallas_call`` batched over stereo pairs:
+
+  * Grid = (pair, K-block, M-block); the M axis is the inner sequential
+    dimension and accumulates the masked Hamming running-argmin into
+    revisited output blocks exactly as ``hamming_match._kernel`` does
+    (ties resolve to the LOWEST right index — first-occurrence argmin).
+    Alongside (dist, idx) the sweep accumulates the winning right
+    feature's float (x, y), extracted per tile by an exact one-hot
+    masked sum — so no cross-block gather is ever needed.
+  * Once the sweep completes (last M step), the SAME kernel step
+    resolves the effective right feature (index 0 when the match fails
+    the ``max_hamming``/validity gates, mirroring
+    ``MatchSet.right_index``'s ``where(valid, idx, 0)``), reads the
+    P x P left patch and the (P, P + 2R) right strip directly from the
+    level-0 image slabs resident in VMEM (dynamic in-kernel slicing a la
+    ``describe_fused`` — gather-free), runs the SAD sweep in int32 and
+    emits the argmin.  Per traced frame the FM stage is ONE launch.
+
+``match_fused_pallas`` is the match-only variant (no images, no SAD) —
+the same pair-folded grid serving ``stereo_match`` / ``temporal_match``
+in one launch; ``sad_fused_pallas`` is the SAD-only variant serving
+``sad_rectify`` with caller-provided match indices, replacing its
+host-graph patch-gather chain with the same in-kernel reads.
+
+Boundary semantics are pinned to the gather oracle
+(``ref.gather_patches`` / ``ref.gather_patches_bruteforce``): patch
+centers are rounded (round-half-even) and clamped into the true image,
+and the slabs are edge-padded by the patch radii, so window pixels
+replicate the border exactly like the oracle's ``jnp.pad(mode="edge")``.
+All SAD arithmetic is int32 (associative), so any summation order is
+bit-exact against the oracle.
+
+TPU-validation note (see ROADMAP): in-kernel scalar extraction of the
+clamped starts, the VMEM-resident level-0 slabs (~3.8 MB each at
+1280x720 f32 — left + right ~7.6 MB per grid step) and the per-row
+``jnp.argmin`` over the (2R+1,) SAD table are exercised in interpret
+mode; a Mosaic build may want the meta block in SMEM / scalar prefetch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.hamming_match import BIG, masked_hamming
+
+FM_BK = 8         # left-feature tile of the fused/SAD kernels (unrolled)
+FM_BM = 128       # right-feature tile (inner sequential sweep)
+MO_BK = 128       # left-feature tile of the match-only kernel
+
+
+def _clamped_start(coord, limit: int):
+    """Float center coordinate -> int32 patch start in the edge-padded
+    slab: round-half-even then clamp into the true image, exactly
+    ``ref.gather_patches``'s center clamp."""
+    return jnp.clip(jnp.round(coord).astype(jnp.int32), 0, limit - 1)
+
+
+def _sad_row(il_ref, ir_ref, xl, yl, xr, yr, *, patch: int, sweep: int):
+    """One feature's SAD table row: read the (patch, patch) left window
+    and the (patch, patch + sweep - 1) right strip from the VMEM slabs
+    at the given clamped starts and sweep the window.  int32 throughout
+    — bit-exact against ``ref.sad_search`` for any summation order."""
+    lp = il_ref[0, pl.ds(yl, patch), pl.ds(xl, patch)].astype(jnp.int32)
+    rs = ir_ref[0, pl.ds(yr, patch),
+                pl.ds(xr, patch + sweep - 1)].astype(jnp.int32)
+    return jnp.stack([jnp.sum(jnp.abs(lp - rs[:, s:s + patch]))
+                      for s in range(sweep)])              # (sweep,) int32
+
+
+def _match_rectify_kernel(dl_ref, ml_ref, dr_ref, mr_ref, xy0_ref,
+                          il_ref, ir_ref,
+                          dist_ref, idx_ref, rxy_ref, sad_ref, *,
+                          row_band: float, max_disparity: float,
+                          max_hamming: int, patch: int, sweep: int,
+                          n_m: int, true_h: int, true_w: int, bk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        dist_ref[...] = jnp.full_like(dist_ref, BIG)
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+        rxy_ref[...] = jnp.zeros_like(rxy_ref)
+        sad_ref[...] = jnp.zeros_like(sad_ref)
+
+    dl = dl_ref[0]                         # (bk, 8) uint32
+    dr = dr_ref[0]                         # (BM, 8) uint32
+    ml = ml_ref[0]                         # (bk, 4) f32: x, y, level, valid
+    mr = mr_ref[0]                         # (BM, 4) f32
+    dist = masked_hamming(dl, ml, dr, mr, row_band=row_band,
+                          max_disparity=max_disparity)
+
+    # Compare: running argmin, plus the winner's float (x, y) extracted
+    # by an exact one-hot masked sum (one nonzero term -> a bit-exact
+    # f32 copy of the winning meta row, no cross-block gather).
+    tile_best = jnp.min(dist, axis=1)                      # (bk,)
+    am = jnp.argmin(dist, axis=1).astype(jnp.int32)        # (bk,) in-tile
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+              == am[:, None])
+    xw = jnp.sum(jnp.where(onehot, mr[:, 0][None, :], 0.0), axis=1)
+    yw = jnp.sum(jnp.where(onehot, mr[:, 1][None, :], 0.0), axis=1)
+    improved = tile_best < dist_ref[0]
+    idx_ref[0] = jnp.where(improved, am + j * dr.shape[0], idx_ref[0])
+    rxy_ref[0, :, 0] = jnp.where(improved, xw, rxy_ref[0, :, 0])
+    rxy_ref[0, :, 1] = jnp.where(improved, yw, rxy_ref[0, :, 1])
+    dist_ref[0] = jnp.where(improved, tile_best, dist_ref[0])
+
+    @pl.when(j == n_m - 1)
+    def _sad():
+        # Resolve the effective right feature: the accumulated winner
+        # when the match passes the acceptance gates, else right
+        # feature 0 — mirroring MatchSet.right_index's where(valid,
+        # idx, 0) so downstream reads are bit-identical to the oracle.
+        d = dist_ref[0]
+        ix = idx_ref[0]
+        ok = (ix >= 0) & (d <= max_hamming) & (ml[:, 3] > 0.5)
+        rxy_ref[0, :, 0] = jnp.where(ok, rxy_ref[0, :, 0], xy0_ref[0, 0])
+        rxy_ref[0, :, 1] = jnp.where(ok, rxy_ref[0, :, 1], xy0_ref[0, 1])
+        for kk in range(bk):
+            xl = _clamped_start(ml_ref[0, kk, 0], true_w)
+            yl = _clamped_start(ml_ref[0, kk, 1], true_h)
+            xr = _clamped_start(rxy_ref[0, kk, 0], true_w)
+            yr = _clamped_start(rxy_ref[0, kk, 1], true_h)
+            table = _sad_row(il_ref, ir_ref, xl, yl, xr, yr,
+                             patch=patch, sweep=sweep)
+            sad_ref[0, kk] = jnp.argmin(table).astype(jnp.int32)
+
+
+def _match_only_kernel(dl_ref, ml_ref, dr_ref, mr_ref,
+                       dist_ref, idx_ref, *,
+                       row_band: float, max_disparity: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        dist_ref[...] = jnp.full_like(dist_ref, BIG)
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    dist = masked_hamming(dl_ref[0], ml_ref[0], dr_ref[0], mr_ref[0],
+                          row_band=row_band,
+                          max_disparity=max_disparity)
+    tile_best = jnp.min(dist, axis=1)
+    tile_arg = (jnp.argmin(dist, axis=1).astype(jnp.int32)
+                + j * dr_ref.shape[1])
+    improved = tile_best < dist_ref[0]
+    idx_ref[0] = jnp.where(improved, tile_arg, idx_ref[0])
+    dist_ref[0] = jnp.where(improved, tile_best, dist_ref[0])
+
+
+def _sad_only_kernel(xyl_ref, xyr_ref, il_ref, ir_ref, tab_ref, *,
+                     patch: int, sweep: int, true_h: int, true_w: int,
+                     bk: int):
+    for kk in range(bk):
+        xl = _clamped_start(xyl_ref[0, kk, 0], true_w)
+        yl = _clamped_start(xyl_ref[0, kk, 1], true_h)
+        xr = _clamped_start(xyr_ref[0, kk, 0], true_w)
+        yr = _clamped_start(xyr_ref[0, kk, 1], true_h)
+        tab_ref[0, kk] = _sad_row(il_ref, ir_ref, xl, yl, xr, yr,
+                                  patch=patch, sweep=sweep)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "row_band", "max_disparity", "max_hamming", "patch", "sad_range",
+    "true_h", "true_w", "interpret"))
+def match_rectify_fused_pallas(desc_l, meta_l, desc_r, meta_r, xy0,
+                               img_l_padded, img_r_padded, *,
+                               row_band: float, max_disparity: float,
+                               max_hamming: int, patch: int,
+                               sad_range: int, true_h: int, true_w: int,
+                               interpret: bool = False):
+    """The FM megakernel: ONE launch for Hamming match + SAD sweep of a
+    whole frame, batched over stereo pairs.
+
+    desc_*: (P, K, 8)/(P, M, 8) uint32 (K % FM_BK == M % FM_BM == 0 —
+    ``ops.py`` pads); meta_*: (P, K, 4)/(P, M, 4) float32 rows of
+    (x, y, level, valid); xy0: (P, 2) float32 — right feature 0's (x, y)
+    per pair, the oracle's fallback read when a match fails the gates;
+    img_*_padded: (P, Hp, Wp) float32 level-0 slabs edge-padded by the
+    patch radii (left: P//2 each side; right: P//2 + sad_range in x) and
+    tile-aligned (alignment region never read).  Returns (dist (P, K)
+    int32 [BIG when no candidate], idx (P, K) int32 [-1], rxy (P, K, 2)
+    float32 — the effective right feature's float coords, sad (P, K)
+    int32 — SAD-sweep argmin in [0, 2*sad_range]).
+    """
+    n_pairs, k = desc_l.shape[0], desc_l.shape[1]
+    m = desc_r.shape[1]
+    _, hlp, wlp = img_l_padded.shape
+    _, hrp, wrp = img_r_padded.shape
+    sweep = 2 * sad_range + 1
+    grid = (n_pairs, k // FM_BK, m // FM_BM)
+    kern = functools.partial(
+        _match_rectify_kernel, row_band=float(row_band),
+        max_disparity=float(max_disparity), max_hamming=int(max_hamming),
+        patch=int(patch), sweep=int(sweep), n_m=m // FM_BM,
+        true_h=int(true_h), true_w=int(true_w), bk=FM_BK)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, FM_BK, 8), lambda p, i, j: (p, i, 0)),
+            pl.BlockSpec((1, FM_BK, 4), lambda p, i, j: (p, i, 0)),
+            pl.BlockSpec((1, FM_BM, 8), lambda p, i, j: (p, j, 0)),
+            pl.BlockSpec((1, FM_BM, 4), lambda p, i, j: (p, j, 0)),
+            pl.BlockSpec((1, 2), lambda p, i, j: (p, 0)),
+            pl.BlockSpec((1, hlp, wlp), lambda p, i, j: (p, 0, 0)),
+            pl.BlockSpec((1, hrp, wrp), lambda p, i, j: (p, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, FM_BK), lambda p, i, j: (p, i)),
+            pl.BlockSpec((1, FM_BK), lambda p, i, j: (p, i)),
+            pl.BlockSpec((1, FM_BK, 2), lambda p, i, j: (p, i, 0)),
+            pl.BlockSpec((1, FM_BK), lambda p, i, j: (p, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pairs, k), jnp.int32),
+            jax.ShapeDtypeStruct((n_pairs, k), jnp.int32),
+            jax.ShapeDtypeStruct((n_pairs, k, 2), jnp.float32),
+            jax.ShapeDtypeStruct((n_pairs, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(desc_l, meta_l, desc_r, meta_r, xy0.astype(jnp.float32),
+      img_l_padded.astype(jnp.float32), img_r_padded.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "row_band", "max_disparity", "interpret"))
+def match_fused_pallas(desc_l, meta_l, desc_r, meta_r, *,
+                       row_band: float, max_disparity: float,
+                       interpret: bool = False):
+    """Match-only variant: the same pair-folded (pair, K-block, M-block)
+    grid without images or SAD — ``stereo_match`` / ``temporal_match``
+    in ONE launch for all pairs.  desc_*: (P, K, 8)/(P, M, 8) uint32
+    (K % MO_BK == M % FM_BM == 0); returns (dist (P, K) int32, idx
+    (P, K) int32 [-1 when no candidate])."""
+    n_pairs, k = desc_l.shape[0], desc_l.shape[1]
+    m = desc_r.shape[1]
+    grid = (n_pairs, k // MO_BK, m // FM_BM)
+    kern = functools.partial(_match_only_kernel, row_band=float(row_band),
+                             max_disparity=float(max_disparity))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, MO_BK, 8), lambda p, i, j: (p, i, 0)),
+            pl.BlockSpec((1, MO_BK, 4), lambda p, i, j: (p, i, 0)),
+            pl.BlockSpec((1, FM_BM, 8), lambda p, i, j: (p, j, 0)),
+            pl.BlockSpec((1, FM_BM, 4), lambda p, i, j: (p, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, MO_BK), lambda p, i, j: (p, i)),
+            pl.BlockSpec((1, MO_BK), lambda p, i, j: (p, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pairs, k), jnp.int32),
+            jax.ShapeDtypeStruct((n_pairs, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(desc_l, meta_l, desc_r, meta_r)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "patch", "sad_range", "true_h", "true_w", "interpret"))
+def sad_fused_pallas(xy_l, xy_r, img_l_padded, img_r_padded, *,
+                     patch: int, sad_range: int, true_h: int,
+                     true_w: int, interpret: bool = False):
+    """SAD-only variant for caller-provided match targets
+    (``sad_rectify``'s path): in-kernel patch reads replace the
+    host-graph pad + 2*K ``dynamic_slice`` gather chain.  xy_*:
+    (P, K, 2) float32 centers (K % FM_BK == 0); returns the full
+    (P, K, 2*sad_range + 1) int32 SAD table (argmin taken by the
+    caller, exactly like ``ops.sad_search``)."""
+    n_pairs, k = xy_l.shape[0], xy_l.shape[1]
+    _, hlp, wlp = img_l_padded.shape
+    _, hrp, wrp = img_r_padded.shape
+    sweep = 2 * sad_range + 1
+    grid = (n_pairs, k // FM_BK)
+    kern = functools.partial(_sad_only_kernel, patch=int(patch),
+                             sweep=int(sweep), true_h=int(true_h),
+                             true_w=int(true_w), bk=FM_BK)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, FM_BK, 2), lambda p, i: (p, i, 0)),
+            pl.BlockSpec((1, FM_BK, 2), lambda p, i: (p, i, 0)),
+            pl.BlockSpec((1, hlp, wlp), lambda p, i: (p, 0, 0)),
+            pl.BlockSpec((1, hrp, wrp), lambda p, i: (p, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, FM_BK, sweep), lambda p, i: (p, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pairs, k, sweep), jnp.int32),
+        interpret=interpret,
+    )(xy_l.astype(jnp.float32), xy_r.astype(jnp.float32),
+      img_l_padded.astype(jnp.float32), img_r_padded.astype(jnp.float32))

@@ -32,6 +32,10 @@ from repro.kernels.frontend_fused import (FUSED_HALO, fast_score_from_taps,
                                           frontend_fused_pyramid_pallas)
 from repro.kernels.gaussian_blur import gaussian_blur7_pallas
 from repro.kernels.hamming_match import BIG, BK, hamming_match_pallas
+from repro.kernels.matcher_fused import (FM_BK, FM_BM, MO_BK,
+                                         match_fused_pallas,
+                                         match_rectify_fused_pallas,
+                                         sad_fused_pallas)
 from repro.kernels.sad_rectify import sad_search_pallas
 
 _DEFAULT_IMPL: str | None = os.environ.get("REPRO_KERNEL_IMPL") or None
@@ -422,6 +426,25 @@ def _pad_rows(x: jnp.ndarray, mult: int, fill=0):
     return jnp.pad(x, pad_width, constant_values=fill)
 
 
+def _hamming_argmin_jnp(desc_l, meta_l, desc_r, meta_r,
+                        row_band: float, max_disparity: float):
+    """jnp oracle of the fused search-region + Hamming argmin: ONE
+    definition shared by ``hamming_match`` and the fused-matcher ref
+    fallbacks, so all ref paths are bit-identical by construction."""
+    dist = _ref.hamming_distance_matrix(desc_l, desc_r)
+    dx = meta_l[:, 0][:, None] - meta_r[:, 0][None, :]
+    dy = jnp.abs(meta_l[:, 1][:, None] - meta_r[:, 1][None, :])
+    mask = ((dy <= row_band) & (dx >= 0.0) & (dx <= max_disparity)
+            & (meta_l[:, 2][:, None] == meta_r[:, 2][None, :])
+            & (meta_l[:, 3][:, None] > 0.5)
+            & (meta_r[:, 3][None, :] > 0.5))
+    dist = jnp.where(mask, dist, BIG)
+    best = jnp.min(dist, axis=1)
+    idx = jnp.where(best >= BIG, -1,
+                    jnp.argmin(dist, axis=1).astype(jnp.int32))
+    return best.astype(jnp.int32), idx
+
+
 def hamming_match(desc_l: jnp.ndarray, meta_l: jnp.ndarray,
                   desc_r: jnp.ndarray, meta_r: jnp.ndarray, *,
                   row_band: float, max_disparity: float,
@@ -433,18 +456,8 @@ def hamming_match(desc_l: jnp.ndarray, meta_l: jnp.ndarray,
     int32 [-1 when no candidate])."""
     k = desc_l.shape[0]
     if resolve_impl(impl) == "ref":
-        dist = _ref.hamming_distance_matrix(desc_l, desc_r)
-        dx = meta_l[:, 0][:, None] - meta_r[:, 0][None, :]
-        dy = jnp.abs(meta_l[:, 1][:, None] - meta_r[:, 1][None, :])
-        mask = ((dy <= row_band) & (dx >= 0.0) & (dx <= max_disparity)
-                & (meta_l[:, 2][:, None] == meta_r[:, 2][None, :])
-                & (meta_l[:, 3][:, None] > 0.5)
-                & (meta_r[:, 3][None, :] > 0.5))
-        dist = jnp.where(mask, dist, BIG)
-        best = jnp.min(dist, axis=1)
-        idx = jnp.where(best >= BIG, -1,
-                        jnp.argmin(dist, axis=1).astype(jnp.int32))
-        return best.astype(jnp.int32), idx
+        return _hamming_argmin_jnp(desc_l, meta_l, desc_r, meta_r,
+                                   row_band, max_disparity)
     # Pad to BK multiples with invalid rows (valid=0 masks them out).
     dl = _pad_rows(desc_l, BK)
     dr = _pad_rows(desc_r, BK)
@@ -468,6 +481,147 @@ def sad_search(left_patches: jnp.ndarray, right_strips: jnp.ndarray,
     rs = _pad_rows(right_strips, 128)
     _count_launches()
     return sad_search_pallas(lp, rs, interpret=_interpret())[:k]
+
+
+def _pad_axis1(x: jnp.ndarray, mult: int):
+    """Zero-pad axis 1 (the K/M feature axis of pair-batched arrays) up
+    to a multiple of ``mult``; padded meta rows carry valid=0."""
+    p = (-x.shape[1]) % mult
+    if p == 0:
+        return x
+    pad_width = [(0, 0), (0, p)] + [(0, 0)] * (x.ndim - 2)
+    return jnp.pad(x, pad_width)
+
+
+def _pad_fm_slab(imgs: jnp.ndarray, ry: int, rx: int) -> jnp.ndarray:
+    """Edge-pad a (P, H, W) pair batch by the FM patch radii, plus
+    edge-replicated tile alignment (Hp % 8 == Wp % 128 == 0).  Clamped
+    patch starts never reach the alignment region."""
+    _, h, w = imgs.shape
+    hp = (-(h + 2 * ry)) % 8
+    wp = (-(w + 2 * rx)) % 128
+    return jnp.pad(imgs.astype(jnp.float32),
+                   ((0, 0), (ry, ry + hp), (rx, rx + wp)), mode="edge")
+
+
+def _match_rectify_jnp(dl, ml, dr, mr, il, ir, row_band, max_disparity,
+                       max_hamming, patch, sad_range):
+    """Single-pair jnp fallback of the FM megakernel: the hamming
+    oracle, the MatchSet index-resolution rule (``where(valid, idx,
+    0)``), the edge-clamped patch gathers and the int32 SAD sweep —
+    each the SAME helper the unfused path uses, so fused-ref equals
+    unfused-ref by construction (and the Pallas kernel is pinned
+    bit-exact against both in tests)."""
+    dist, idx = _hamming_argmin_jnp(dl, ml, dr, mr, row_band,
+                                    max_disparity)
+    ok = (idx >= 0) & (dist <= max_hamming) & (ml[:, 3] > 0.5)
+    eff = jnp.where(ok, idx, 0)
+    rxy = mr[eff, :2]
+    lp = _ref.gather_patches(il, ml[:, :2], patch, patch)
+    rs = _ref.gather_patches(ir, rxy, patch, patch + 2 * sad_range)
+    table = _ref.sad_search(lp, rs)
+    return dist, idx, rxy, jnp.argmin(table, axis=1).astype(jnp.int32)
+
+
+def match_rectify_fused(desc_l: jnp.ndarray, meta_l: jnp.ndarray,
+                        desc_r: jnp.ndarray, meta_r: jnp.ndarray,
+                        img_l: jnp.ndarray | None = None,
+                        img_r: jnp.ndarray | None = None, *,
+                        row_band: float, max_disparity: float,
+                        max_hamming: int = 0, sad_window: int = 11,
+                        sad_range: int = 5, impl: str | None = None):
+    """Fused Feature Matcher dispatch: the ENTIRE FM stage of a frame —
+    search-region decision + Hamming argmin + SAD rectification sweep —
+    in ONE kernel launch, batched over stereo pairs (the pair axis is
+    folded into the kernel grid, not vmapped).
+
+    desc_*: (P, K, 8)/(P, M, 8) uint32; meta_*: (P, K, 4)/(P, M, 4)
+    float32 rows of (x, y, level, valid); img_*: (P, H, W) level-0
+    images.  Returns (dist (P, K) int32 [BIG when no candidate], idx
+    (P, K) int32 [-1], rxy (P, K, 2) float32 — the effective right
+    feature's coords after the ``where(valid, idx, 0)`` resolution rule,
+    sad (P, K) int32 — SAD argmin in [0, 2*sad_range]; the rectified
+    offset is ``sad - sad_range``).
+
+    MATCH-ONLY mode: with ``img_l``/``img_r`` omitted the SAD half is
+    skipped and only (dist, idx) return — still one launch with the
+    pair-folded grid; ``stereo_match`` / ``temporal_match`` route here
+    so the VO backend's matching also costs a single launch.  The
+    wrapper owns all padding (K/M block alignment with valid=0 rows,
+    edge-replicated image slabs); callers see exact shapes.
+    """
+    match_only = img_l is None
+    k = desc_l.shape[1]
+    if resolve_impl(impl) == "ref":
+        if match_only:
+            dist, idx = jax.vmap(
+                lambda a, b, c, d: _hamming_argmin_jnp(
+                    a, b, c, d, row_band, max_disparity)
+            )(desc_l, meta_l, desc_r, meta_r)
+            return dist, idx
+        return jax.vmap(
+            lambda a, b, c, d, e, f: _match_rectify_jnp(
+                a, b, c, d, e, f, row_band, max_disparity, max_hamming,
+                sad_window, sad_range)
+        )(desc_l, meta_l, desc_r, meta_r, img_l, img_r)
+    bk = MO_BK if match_only else FM_BK
+    dl = _pad_axis1(desc_l, bk)
+    ml = _pad_axis1(meta_l, bk)
+    dr = _pad_axis1(desc_r, FM_BM)
+    mr = _pad_axis1(meta_r, FM_BM)
+    _count_launches()
+    if match_only:
+        dist, idx = match_fused_pallas(
+            dl, ml, dr, mr, row_band=float(row_band),
+            max_disparity=float(max_disparity), interpret=_interpret())
+        dist, idx = dist[:, :k], idx[:, :k]
+        return dist, jnp.where(dist >= BIG, -1, idx)
+    _, h, w = img_l.shape
+    ry = sad_window // 2
+    dist, idx, rxy, sad = match_rectify_fused_pallas(
+        dl, ml, dr, mr, meta_r[:, 0, :2],
+        _pad_fm_slab(img_l, ry, ry),
+        _pad_fm_slab(img_r, ry, ry + sad_range),
+        row_band=float(row_band), max_disparity=float(max_disparity),
+        max_hamming=int(max_hamming), patch=int(sad_window),
+        sad_range=int(sad_range), true_h=h, true_w=w,
+        interpret=_interpret())
+    dist, idx = dist[:, :k], idx[:, :k]
+    return (dist, jnp.where(dist >= BIG, -1, idx), rxy[:, :k],
+            sad[:, :k])
+
+
+def sad_patch_search(img_l: jnp.ndarray, img_r: jnp.ndarray,
+                     xy_l: jnp.ndarray, xy_r: jnp.ndarray, *,
+                     sad_window: int = 11, sad_range: int = 5,
+                     impl: str | None = None) -> jnp.ndarray:
+    """SAD sweep with IN-KERNEL patch reads for caller-provided match
+    targets (``sad_rectify``'s path): one launch replaces the host-graph
+    full-image pad + 2*K ``dynamic_slice`` gather chain per pair.
+
+    img_*: (P, H, W) level-0 images; xy_*: (P, K, 2) float32 window
+    centers (left features / matched right features).  Returns the
+    (P, K, 2*sad_range + 1) int32 SAD table — same contract as
+    ``sad_search``, argmin taken by the caller."""
+    if resolve_impl(impl) == "ref":
+        return jax.vmap(
+            lambda il, ir, xl, xr: _ref.sad_search(
+                _ref.gather_patches(il, xl, sad_window, sad_window),
+                _ref.gather_patches(ir, xr, sad_window,
+                                    sad_window + 2 * sad_range))
+        )(img_l, img_r, xy_l, xy_r)
+    k = xy_l.shape[1]
+    _, h, w = img_l.shape
+    ry = sad_window // 2
+    _count_launches()
+    table = sad_fused_pallas(
+        _pad_axis1(xy_l.astype(jnp.float32), FM_BK),
+        _pad_axis1(xy_r.astype(jnp.float32), FM_BK),
+        _pad_fm_slab(img_l, ry, ry),
+        _pad_fm_slab(img_r, ry, ry + sad_range),
+        patch=int(sad_window), sad_range=int(sad_range), true_h=h,
+        true_w=w, interpret=_interpret())
+    return table[:, :k]
 
 
 NO_MATCH_DIST = BIG

@@ -297,6 +297,31 @@ def describe_steered(smoothed: jnp.ndarray, xy: jnp.ndarray,
     return jax.vmap(one)(patches, theta)
 
 
+def gather_patches(img: jnp.ndarray, xy: jnp.ndarray, ph: int, pw: int):
+    """Gather (ph, pw) patches centered at rounded xy from one image.
+
+    The FM stage's patch-read semantics, in ONE place: centers are
+    rounded (round-half-even) and clamped into the image, and window
+    pixels overhanging the border replicate the edge (``jnp.pad
+    mode="edge")``.  This host-graph gather is the oracle the fused
+    matcher kernels' in-kernel slab reads are pinned against
+    (``matcher_fused.py`` clamps identically), and the jnp fallback of
+    ``ops.sad_patch_search``; ``matching._gather_patches`` is a thin
+    alias.  img: (H, W); xy: (K, 2) float32."""
+    ry, rx = ph // 2, pw // 2
+    padded = jnp.pad(img.astype(jnp.float32), ((ry, ry), (rx, rx)),
+                     mode="edge")
+    xs = jnp.clip(jnp.round(xy[:, 0]).astype(jnp.int32), 0,
+                  img.shape[1] - 1)
+    ys = jnp.clip(jnp.round(xy[:, 1]).astype(jnp.int32), 0,
+                  img.shape[0] - 1)
+
+    def one(x, y):
+        return jax.lax.dynamic_slice(padded, (y, x), (ph, pw))
+
+    return jax.vmap(one)(xs, ys)
+
+
 # ---------------------------------------------------------------------------
 # Brute-force NUMPY oracles for the matcher ops — python loops, no jnp,
 # no vectorization tricks.  These are deliberately the dumbest possible
@@ -305,6 +330,28 @@ def describe_steered(smoothed: jnp.ndarray, xy: jnp.ndarray,
 # shared formulation.
 
 MATCH_BIG = 1 << 20       # no-candidate sentinel; == hamming_match.BIG
+
+
+def gather_patches_bruteforce(img, xy, ph: int, pw: int):
+    """Python-loop reference of ``gather_patches``: per-PIXEL coordinate
+    clamping instead of pad-then-slice, so a border off-by-one in the
+    pad/slice formulation cannot hide.  For a center clamped to (xc, yc)
+    the window pixel (dy, dx) is img[clip(yc + dy - ph//2, 0, H - 1),
+    clip(xc + dx - pw//2, 0, W - 1)] — edge replication IS per-axis
+    clamping.  img: (H, W); xy: (K, 2) float; returns (K, ph, pw) f32."""
+    img = np.asarray(img, dtype=np.float32)
+    xy = np.asarray(xy, dtype=np.float32)
+    h, w = img.shape
+    ry, rx = ph // 2, pw // 2
+    out = np.zeros((xy.shape[0], ph, pw), np.float32)
+    for i, (x, y) in enumerate(xy):
+        xc = int(np.clip(np.round(x), 0, w - 1))
+        yc = int(np.clip(np.round(y), 0, h - 1))
+        for dy in range(ph):
+            for dx in range(pw):
+                out[i, dy, dx] = img[min(max(yc + dy - ry, 0), h - 1),
+                                     min(max(xc + dx - rx, 0), w - 1)]
+    return out
 
 
 def hamming_match_bruteforce(desc_l, meta_l, desc_r, meta_r,

@@ -139,9 +139,9 @@ def test_quad_frame_two_fused_launches_per_frame(rng):
     ops.reset_launch_count()
     jax.eval_shape(
         lambda f: process_quad_frame(f, cfg, intr, impl="pallas"), imgs)
-    # 2 fused FE launches per frame; FM adds hamming + sad (2 per pair,
-    # traced under vmap -> counted once each).
-    assert ops.launch_count() == 2 + 2
+    # 2 fused FE launches per frame; FM adds ONE fused matcher launch
+    # covering both stereo pairs (the pair axis lives in the grid).
+    assert ops.launch_count() == 2 + 1
 
 
 def test_build_pyramid_batched_matches_single(rng):

@@ -6,7 +6,7 @@ per-level pipeline (``orb.extract_features_per_level`` — 2 launches per
 level) on every FeatureSet field, on both the jnp fallback and the
 Pallas interpret path, for ragged/odd level shapes, boundary keypoints
 and all-invalid levels.  A traced launch-count assertion pins the
-2-launch budget (4 for a full quad frame with FM).
+2-launch budget (3 for a full quad frame with the fused FM).
 
 Deterministic parametrized pins run everywhere; the Hypothesis property
 suite (random camera counts, shapes, level counts, thresholds) runs
@@ -251,8 +251,8 @@ def test_whole_frame_all_invalid_levels():
 def test_whole_frame_two_fe_launches():
     """Acceptance: a traced frame costs exactly 2 FE launches (1 dense +
     1 sparse) regardless of camera count and level count, and a traced
-    quad frame costs exactly 4 kernel launches total (+ hamming + SAD,
-    traced once each under the pair vmap)."""
+    quad frame costs exactly 3 kernel launches total (+ the single
+    fused FM launch covering both pairs)."""
     for b, n_levels in ((1, 1), (2, 3), (4, 2)):
         imgs = _imgs(11, b, 64, 96)
         cfg = ORBConfig(height=64, width=96, max_features=16,
@@ -269,7 +269,7 @@ def test_whole_frame_two_fe_launches():
     jax.eval_shape(
         lambda f: process_quad_frame(f, cfg, intr, impl="pallas"),
         _imgs(12, 4, 64, 96))
-    assert ops.launch_count() == 4
+    assert ops.launch_count() == 3
 
 
 # ---------------------------------------------------------------------------
