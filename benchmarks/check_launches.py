@@ -21,6 +21,14 @@ from __future__ import annotations
 import json
 import sys
 
+# Gates that MUST be present in the artifact: a refactor that silently
+# drops a gate row (renames a table, deletes a benchmark) would
+# otherwise pass CI with nothing checked.  quad = one rig frame (3),
+# fm = the fused matcher alone (1), fleet = an N-rig fleet frame (3 —
+# the `VisualSystem.process_fleet` budget).
+REQUIRED_GATES = ("quad_frame_launches", "fm_frame_launches",
+                  "fleet_frame_launches")
+
 
 def check(path: str) -> int:
     with open(path) as f:
@@ -35,6 +43,11 @@ def check(path: str) -> int:
         return 1
 
     status = 0
+    for name in REQUIRED_GATES:
+        if name not in gates:
+            print(f"FAIL: required gate launch_gate/{name} is missing "
+                  f"from {path} — did benchmarks.run drop it?")
+            status = 1
     for name in sorted(gates):
         budget_name = name.replace("launches", "budget")
         actual_row = rows[("launch_gate", name)]

@@ -34,6 +34,13 @@
                                   vs the unfused two-kernel +
                                   host-graph-gather schedule: wall
                                   clock + traced launch counts
+  table_fleet            PR 5     `VisualSystem.process_fleet`: an
+                                  N-rig fleet frame folded into the
+                                  batched kernels (3 launches total,
+                                  same as one rig) vs the per-rig
+                                  python loop; emits the
+                                  launch_gate/fleet_frame_* rows CI
+                                  enforces
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--out PATH]
 Prints CSV rows ``table,name,value,unit,note`` and writes them to a
@@ -55,12 +62,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CameraIntrinsics, ORBConfig, backend,
-                        extract_features, match_pair, pipeline_schedule,
-                        process_stereo_frame, stereo_match, temporal_match)
-from repro.core import pyramid, sad_rectify
+from repro.core import (CameraIntrinsics, ORBConfig, PipelineConfig,
+                        RigConfig, VisualSystem, backend,
+                        extract_features, pipeline_schedule)
+from repro.core import pyramid
 from repro.data import scenes
 from repro.kernels import ops, ref
+
+
+def _stereo_vs(ocfg, intr=None, impl=None):
+    intr = intr if intr is not None else CameraIntrinsics()
+    return VisualSystem(RigConfig.stereo(intr),
+                        PipelineConfig(orb=ocfg, impl=impl))
+
+
+def _stereo_frame(vs, img_l, img_r):
+    out = vs.process_frame(jnp.stack([img_l, img_r]))
+    return jax.tree.map(lambda x: x[0], out)
 
 ROWS = []
 
@@ -107,13 +125,14 @@ def table1_latency_split(quick=False):
     ocfg = ORBConfig(height=h, width=w, max_features=256, n_levels=2,
                      max_disparity=64)
 
-    fe_fm = jax.jit(lambda l, r: process_stereo_frame(l, r, ocfg, intr))
+    vs = _stereo_vs(ocfg, intr)
+    fe_fm = lambda l, r: _stereo_frame(vs, l, r)   # session-jitted
     t_front, out0 = _bench(fe_fm, frames[0, 0], frames[0, 1])
     out1 = jax.block_until_ready(fe_fm(frames[1, 0], frames[1, 1]))
 
     def make_backend(refine, iters):
         def run(prev_feats, prev_depth, curr_feats, curr_depth):
-            tm = temporal_match(prev_feats, curr_feats, ocfg)
+            tm = vs.temporal_match(prev_feats, curr_feats)
             pts_p = backend.triangulate(prev_feats, prev_depth, intr)
             pts_c = backend.triangulate(curr_feats, curr_depth, intr)
             idx = tm.right_index
@@ -147,8 +166,8 @@ def table_fe_fm_ratio(quick=False):
     fe = jax.jit(lambda im: extract_features(im, ocfg))
     t_fe, featl = _bench(fe, frames[0, 0])
     featr = jax.block_until_ready(fe(frames[0, 1]))
-    fm = jax.jit(lambda l, r, fl, fr: match_pair(l, r, fl, fr, ocfg,
-                                                 intr))
+    vs = _stereo_vs(ocfg, intr)
+    fm = lambda l, r, fl, fr: vs.match_pair(l, r, fl, fr)
     t_fm, _ = _bench(fm, frames[0, 0], frames[0, 1], featl, featr)
     emit("fig4", "t_fe_ms", round(t_fe * 1e3, 2), "ms", "one image")
     emit("fig4", "t_fm_ms", round(t_fm * 1e3, 2), "ms", "stereo pair")
@@ -194,15 +213,14 @@ def table2_module_cost(quick=False):
     t, _ = _bench(jax.jit(lambda s, p, a: brief.describe(s, p, a)),
                   sm, xy, th)
     mods["descriptor"] = t
+    vs = _stereo_vs(ocfg, intr)
     fe = jax.jit(lambda i: extract_features(i, ocfg))
     featl = jax.block_until_ready(fe(frames[0, 0]))
     featr = jax.block_until_ready(fe(frames[0, 1]))
-    t, m = _bench(jax.jit(lambda a, b: stereo_match(a, b, ocfg)),
-                  featl, featr)
+    t, m = _bench(vs.stereo_match, featl, featr)
     mods["stereo_match"] = t
-    t, _ = _bench(jax.jit(lambda l, r, fl, fr, mm: sad_rectify(
-        l, r, fl, fr, mm, ocfg, intr)), frames[0, 0], frames[0, 1],
-        featl, featr, m)
+    t, _ = _bench(vs.sad_rectify, frames[0, 0], frames[0, 1],
+                  featl, featr, m)
     mods["sad_rectify"] = t
 
     total = sum(mods.values())
@@ -229,11 +247,11 @@ def table3_accuracy(quick=False):
                      max_disparity=64)
     tot = {"feat": [0, 0], "match": [0, 0], "depth": [0, 0]}
     coord_eq = [0, 0]
+    vs_hw = _stereo_vs(ocfg, intr, impl="pallas")
+    vs_sw = _stereo_vs(ocfg, intr, impl="ref")
     for t in range(n_frames):
-        hw = process_stereo_frame(frames[t, 0], frames[t, 1], ocfg, intr,
-                                  impl="pallas")
-        sw = process_stereo_frame(frames[t, 0], frames[t, 1], ocfg, intr,
-                                  impl="ref")
+        hw = _stereo_frame(vs_hw, frames[t, 0], frames[t, 1])
+        sw = _stereo_frame(vs_sw, frames[t, 0], frames[t, 1])
         tot["feat"][0] += int(hw.features_l.count())
         tot["feat"][1] += int(sw.features_l.count())
         tot["match"][0] += int(hw.matches.count())
@@ -253,8 +271,8 @@ def table3_accuracy(quick=False):
 
     q = ocfg
     f = ORBConfig(**{**q.__dict__, "quantized": False})
-    hwq = process_stereo_frame(frames[0, 0], frames[0, 1], q, intr)
-    hwf = process_stereo_frame(frames[0, 0], frames[0, 1], f, intr)
+    hwq = _stereo_frame(_stereo_vs(q, intr), frames[0, 0], frames[0, 1])
+    hwf = _stereo_frame(_stereo_vs(f, intr), frames[0, 0], frames[0, 1])
     emit("table3", "wordlen_feat_counts",
          f"{int(hwq.features_l.count())}/{int(hwf.features_l.count())}",
          "count", "8-bit vs float datapath (ablation)")
@@ -271,8 +289,8 @@ def table4_throughput(quick=False):
         frames, poses, intr, _ = _scene(h, w, n=400)
         ocfg = ORBConfig(height=h, width=w, max_features=1000,
                          n_levels=2, max_disparity=96)
-        step = jax.jit(lambda l, r: process_stereo_frame(l, r, ocfg,
-                                                         intr))
+        vs = _stereo_vs(ocfg, intr)
+        step = lambda l, r: _stereo_frame(vs, l, r)
         t, _ = _bench(step, frames[0, 0], frames[0, 1], iters=3)
         emit("table4", f"cpu_fps_{w}x{h}", round(1.0 / t, 1), "fps",
              "this host, one stereo pair")
@@ -343,12 +361,12 @@ def table_fused_vs_seed(quick=False):
              "seed / fused wall clock")
 
         # Launch counts: trace-only (no kernel execution) under Pallas.
-        ops.reset_launch_count()
-        jax.eval_shape(lambda im: seed_frontend(im, impl="pallas"), imgs)
-        n_seed = ops.launch_count()
-        ops.reset_launch_count()
-        jax.eval_shape(lambda im: fused_frontend(im, impl="pallas"), imgs)
-        n_fused = ops.launch_count()
+        with ops.launch_audit() as audit:
+            jax.eval_shape(lambda im: seed_frontend(im, impl="pallas"), imgs)
+        n_seed = audit.count
+        with ops.launch_audit() as audit:
+            jax.eval_shape(lambda im: fused_frontend(im, impl="pallas"), imgs)
+        n_fused = audit.count
         emit("fused", f"launches_seed_{res}", n_seed, "kernels",
              "4 cams x 2 levels x (blur + fast)")
         emit("fused", f"launches_fused_{res}", n_fused, "kernels",
@@ -414,9 +432,9 @@ def table_describe_fused_vs_gather(quick=False):
              "gather / fused wall clock")
 
         # Launch counts: trace-only (no kernel execution) under Pallas.
-        ops.reset_launch_count()
-        jax.eval_shape(lambda s: fused_stage(s, impl="pallas"), staged)
-        emit("describe", f"launches_fused_{res}", ops.launch_count(),
+        with ops.launch_audit() as audit:
+            jax.eval_shape(lambda s: fused_stage(s, impl="pallas"), staged)
+        emit("describe", f"launches_fused_{res}", audit.count,
              "kernels", "1 sparse launch per level (gather path: 0 "
              "kernels, all host graph)")
 
@@ -437,7 +455,7 @@ def table_whole_frame_vs_per_level(quick=False):
     enforced in CI by ``benchmarks.check_launches`` via the launch_gate
     rows emitted here.
     """
-    from repro.core import extract_features_per_level, process_quad_frame
+    from repro.core import extract_features_per_level
     from repro.core import orb
     resolutions = [(480, 640)] + ([] if quick else [(720, 1280)])
     for h, w in resolutions:
@@ -481,14 +499,14 @@ def table_whole_frame_vs_per_level(quick=False):
              "stage; padding waste)")
 
         # Launch counts: trace-only (no kernel execution) under Pallas.
-        ops.reset_launch_count()
-        jax.eval_shape(lambda im: extract_features_per_level(
-            im, ocfg, impl="pallas"), imgs)
-        n_per = ops.launch_count()
-        ops.reset_launch_count()
-        jax.eval_shape(lambda im: orb.extract_features_batched(
-            im, ocfg, impl="pallas"), imgs)
-        n_whole = ops.launch_count()
+        with ops.launch_audit() as audit:
+            jax.eval_shape(lambda im: extract_features_per_level(
+                im, ocfg, impl="pallas"), imgs)
+        n_per = audit.count
+        with ops.launch_audit() as audit:
+            jax.eval_shape(lambda im: orb.extract_features_batched(
+                im, ocfg, impl="pallas"), imgs)
+        n_whole = audit.count
         emit("whole_frame", f"launches_per_level_{res}", n_per, "kernels",
              "2 per pyramid level")
         emit("whole_frame", f"launches_whole_frame_{res}", n_whole,
@@ -501,10 +519,8 @@ def table_whole_frame_vs_per_level(quick=False):
                      max_disparity=64)
     intr = CameraIntrinsics(cx=w / 2.0, cy=h / 2.0)
     gimgs = jnp.zeros((4, h, w), jnp.float32)
-    ops.reset_launch_count()
-    jax.eval_shape(
-        lambda f: process_quad_frame(f, gcfg, intr, impl="pallas"), gimgs)
-    actual = ops.launch_count()
+    gvs = VisualSystem(RigConfig.quad(intr), PipelineConfig(orb=gcfg))
+    actual = gvs.traced_launches("process_frame", gimgs)
     budget = 3
     emit("launch_gate", "quad_frame_launches", actual, "kernels",
          f"traced, 4 cams {w}x{h} x {gcfg.n_levels} levels")
@@ -566,14 +582,14 @@ def table_fm_fused_vs_unfused(quick=False):
              "unfused / fused wall clock")
 
         # Launch counts: trace-only (no kernel execution) under Pallas.
-        ops.reset_launch_count()
-        jax.eval_shape(lambda p, fl, fr: fm_unfused(p, fl, fr, "pallas"),
-                       pairs, feat_l, feat_r)
-        n_unf = ops.launch_count()
-        ops.reset_launch_count()
-        jax.eval_shape(lambda p, fl, fr: fm_fused(p, fl, fr, "pallas"),
-                       pairs, feat_l, feat_r)
-        n_fus = ops.launch_count()
+        with ops.launch_audit() as audit:
+            jax.eval_shape(lambda p, fl, fr: fm_unfused(p, fl, fr, "pallas"),
+                           pairs, feat_l, feat_r)
+        n_unf = audit.count
+        with ops.launch_audit() as audit:
+            jax.eval_shape(lambda p, fl, fr: fm_fused(p, fl, fr, "pallas"),
+                           pairs, feat_l, feat_r)
+        n_fus = audit.count
         emit("fm_fused", f"launches_unfused_{res}", n_unf, "kernels",
              "hamming + sad per traced pair vmap (+ host-graph gathers)")
         emit("fm_fused", f"launches_fused_{res}", n_fus, "kernels",
@@ -583,6 +599,47 @@ def table_fm_fused_vs_unfused(quick=False):
          "traced fused FM, 2 stereo pairs")
     emit("launch_gate", "fm_frame_budget", 1, "kernels",
          "single FM megakernel launch per frame")
+
+
+def table_fleet(quick=False):
+    """Fleet batching (PR 5, the `VisualSystem` session API): an N-rig
+    fleet frame folds the leading rig axis into the camera/pair batch
+    axes of the already-batched kernels, so the WHOLE fleet frame costs
+    the same 3 traced launches as one rig (1 dense FE + 1 sparse FE +
+    1 fused FM) — the deterministic half, gated in CI via the
+    ``launch_gate/fleet_frame_*`` rows.  Wall clock compares the fleet
+    dispatch against the per-rig python loop on the jnp path.
+    """
+    h, w = (240, 320) if quick else (480, 640)
+    n_rigs = 4
+    ocfg = ORBConfig(height=h, width=w, n_levels=2, max_features=512,
+                     max_disparity=64)
+    intr = CameraIntrinsics(cx=w / 2.0, cy=h / 2.0)
+    rng = np.random.RandomState(7)
+    fleet = jnp.asarray(
+        rng.randint(0, 256, (n_rigs, 4, h, w)).astype(np.float32))
+    vs = VisualSystem(RigConfig.quad(intr), PipelineConfig(orb=ocfg))
+    res = f"{w}x{h}"
+
+    iters = 3 if (h, w) == (480, 640) else 5
+    t_loop, _ = _bench(
+        lambda f: [vs.process_frame(f[r]) for r in range(n_rigs)],
+        fleet, iters=iters)
+    t_fleet, _ = _bench(vs.process_fleet, fleet, iters=iters)
+    emit("fleet", f"per_rig_loop_ms_{res}", round(t_loop * 1e3, 2), "ms",
+         f"{n_rigs} rigs x 3 dispatches each (jnp)")
+    emit("fleet", f"fleet_ms_{res}", round(t_fleet * 1e3, 2), "ms",
+         f"{n_rigs} rigs, one 3-dispatch fleet frame (jnp)")
+    emit("fleet", f"speedup_{res}", round(t_loop / t_fleet, 2), "x",
+         "per-rig loop / fleet wall clock")
+
+    # Launch gate: trace-only (no kernel execution) under Pallas.
+    actual = vs.traced_launches("process_fleet", fleet)
+    emit("launch_gate", "fleet_frame_launches", actual, "kernels",
+         f"traced, {n_rigs} rigs x 4 cams {res} x {ocfg.n_levels} levels")
+    emit("launch_gate", "fleet_frame_budget", 3, "kernels",
+         "rig axis folded into the batched kernels: fleet == single-rig "
+         "budget")
 
 
 def main() -> None:
@@ -602,6 +659,7 @@ def main() -> None:
     table_describe_fused_vs_gather(args.quick)
     table_whole_frame_vs_per_level(args.quick)
     table_fm_fused_vs_unfused(args.quick)
+    table_fleet(args.quick)
     print(f"# done in {time.time() - t0:.1f}s ({len(ROWS)} rows)")
     if args.out:
         rows = [{"table": t, "name": n, "value": v, "unit": u, "note": note}

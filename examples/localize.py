@@ -1,14 +1,19 @@
-"""End-to-end localization driver (the paper's full system): synthetic
-quad-camera sequence -> frame-multiplexed ORB frontend -> stereo depth
--> temporal matching -> robust pose backend -> trajectory, compared to
-ground truth.
+"""End-to-end localization driver (the paper's full system) on the
+`VisualSystem` session API: synthetic quad-camera sequence ->
+frame-multiplexed ORB frontend -> stereo depth -> temporal matching ->
+robust pose backend -> trajectory, compared to ground truth.
 
-All 4 cameras of a frame go through ONE ``process_quad_frame`` call —
-the whole-frame batched frontend: per FRAME, one dense blur+FAST+NMS
-launch and one sparse orientation+rBRIEF launch covering every camera
-at every pyramid level, plus ONE fused Feature Matcher launch (Hamming
-match + in-kernel SAD rectification) covering both stereo pairs — 3
-launches total (the traced launch audit is printed at startup).
+The session is configured ONCE from a ``RigConfig`` (camera layout +
+intrinsics + sync) and a ``PipelineConfig`` (ORB parameters, impl,
+schedule); every frame then goes through ``vs.process_frame`` — per
+FRAME, one dense blur+FAST+NMS launch and one sparse orientation+rBRIEF
+launch covering every camera at every pyramid level, plus ONE fused
+Feature Matcher launch (Hamming match + in-kernel SAD rectification)
+covering both stereo pairs: 3 launches total.  The same session also
+serves a FLEET of rigs: ``vs.process_fleet`` folds a leading
+``(n_rigs,)`` axis into the batched kernels, so N rigs still cost 3
+launches per fleet frame.  Both traced launch audits are printed at
+startup.
 
     PYTHONPATH=src python examples/localize.py [--frames 6]
 """
@@ -19,10 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ORBConfig, backend, process_quad_frame,
-                        temporal_match)
+from repro.core import (ORBConfig, PipelineConfig, RigConfig, VisualSystem,
+                        backend)
 from repro.data import scenes
-from repro.kernels import ops
 
 FLIP = jnp.asarray([[-1.0, 0, 0], [0, 1.0, 0], [0, 0, -1.0]])
 
@@ -30,6 +34,8 @@ FLIP = jnp.asarray([[-1.0, 0, 0], [0, 1.0, 0], [0, 0, -1.0]])
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--frames", type=int, default=5)
+    ap.add_argument("--fleet", type=int, default=3,
+                    help="rigs in the fleet launch audit")
     args = ap.parse_args()
 
     scene = scenes.SceneConfig(height=160, width=240, n_points=250,
@@ -39,17 +45,22 @@ def main() -> None:
     ocfg = ORBConfig(height=160, width=240, max_features=256,
                      n_levels=1, max_disparity=96)
 
-    # Launch audit: the fused two-stage frontend schedule, traced.
-    ops.reset_launch_count()
-    jax.eval_shape(
-        lambda f: process_quad_frame(f, ocfg, intr, impl="pallas"),
-        frames[0])
-    print(f"traced kernel launches per quad frame: {ops.launch_count()} "
+    # One session = one configured rig + pipeline: jitted entry points
+    # are cached on it, so the python loop below never retraces.
+    vs = VisualSystem(RigConfig.quad(intr), PipelineConfig(orb=ocfg))
+
+    # Launch audit: the fused frontend schedule, traced (single rig and
+    # an N-rig fleet — the fleet folds into the same 3 launches).
+    n_frame = vs.traced_launches("process_frame", frames[0])
+    fleet0 = jnp.broadcast_to(frames[0], (args.fleet,) + frames[0].shape)
+    n_fleet = vs.traced_launches("process_fleet", fleet0)
+    print(f"traced kernel launches per quad frame: {n_frame} "
           f"(1 dense + 1 sparse FE for all 4 cams x all levels, + 1 fused "
           f"FM — Hamming + in-kernel SAD for both pairs in one grid)")
+    print(f"traced kernel launches per {args.fleet}-rig fleet frame: "
+          f"{n_fleet} (rig axis folded into the same batched kernels)")
 
-    quad = jax.jit(lambda f: process_quad_frame(f, ocfg, intr))
-    outs = [quad(f) for f in frames]          # leading (2,) pair axis
+    outs = [vs.process_frame(f) for f in frames]  # leading (2,) pair axis
     outs_f = [jax.tree.map(lambda x: x[0], o) for o in outs]
     outs_b = [jax.tree.map(lambda x: x[1], o) for o in outs]
 
@@ -58,7 +69,7 @@ def main() -> None:
         pts, pts_n, w = [], [], []
         for seq, rot in ((outs_f, jnp.eye(3)), (outs_b, FLIP)):
             prev, curr = seq[t], seq[t + 1]
-            tm = temporal_match(prev.features_l, curr.features_l, ocfg)
+            tm = vs.temporal_match(prev.features_l, curr.features_l)
             idx = tm.right_index
             wk = (tm.valid & prev.depth.valid
                   & curr.depth.valid[idx]).astype(jnp.float32)

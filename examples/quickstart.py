@@ -1,13 +1,14 @@
-"""Quickstart: run the quad-camera ORB visual frontend on a synthetic
-scene and print what it found.
+"""Quickstart: configure a `VisualSystem` session for the quad-camera
+rig, run the ORB visual frontend on a synthetic scene and print what it
+found.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
 import numpy as np
 
-from repro.core import ORBConfig, process_quad_frame, sync
+from repro.core import (ORBConfig, PipelineConfig, RigConfig, VisualSystem,
+                        sync)
 from repro.data import scenes
 
 
@@ -18,18 +19,23 @@ def main() -> None:
     frames, poses, intr = scenes.render_sequence(scene, n_frames=2)
     print(f"rendered {frames.shape} (frames, cameras, H, W)")
 
-    # 2. hardware-synchronized capture (paper Sec. III-A): one trigger
-    #    clock stamps all four cameras + IMU
-    trig = sync.TriggerConfig()
-    cam_tags, imu_tags = sync.hardware_trigger(trig, 2)
-    print(f"max inter-camera desync: {float(sync.max_desync(cam_tags))} s"
-          " (hardware sync is exact by construction)")
-
-    # 3. the frame-multiplexed visual frontend (paper Sec. III-B..D):
-    #    ORB extraction -> stereo Hamming match -> SAD rectify -> depth
+    # 2. one session owns the rig layout, sync spec, ORB parameters and
+    #    the jit caches — configure once, stream frames (paper Sec. III)
     ocfg = ORBConfig(height=240, width=320, max_features=512,
                      n_levels=2, max_disparity=64)
-    out = jax.jit(lambda f: process_quad_frame(f, ocfg, intr))(frames[0])
+    vs = VisualSystem(RigConfig.quad(intr), PipelineConfig(orb=ocfg))
+
+    # 3. hardware-synchronized capture (paper Sec. III-A): one trigger
+    #    clock stamps all four cameras; the session checks each frame's
+    #    tags against the rig's sync policy (hardware => 0 desync)
+    cam_tags, imu_tags = sync.hardware_trigger(vs.rig.sync, 2)
+
+    # 4. the frame-multiplexed visual frontend (paper Sec. III-B..D):
+    #    ORB extraction -> stereo Hamming match -> SAD rectify -> depth,
+    #    3 kernel launches per frame
+    out = vs.process_frame(frames[0], timestamps=cam_tags[0])
+    print(f"max inter-camera desync: {vs.desync_log[-1]} s"
+          " (hardware sync is exact by construction)")
     for pair in (0, 1):
         nf = int(np.asarray(out.features_l.valid[pair]).sum())
         nm = int(np.asarray(out.matches.valid[pair]).sum())

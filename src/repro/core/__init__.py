@@ -1,14 +1,27 @@
-"""Core library: the paper's ORB-based quad-camera visual frontend."""
+"""Core library: the paper's ORB-based quad-camera visual frontend.
+
+The public API is the SESSION layer: build one ``VisualSystem`` from a
+``RigConfig`` + ``PipelineConfig`` and stream frames through its jitted
+cached entry points (``process_frame`` / ``run`` / ``process_fleet`` /
+``run_fleet``).  The legacy free functions (``process_quad_frame``,
+``run_sequence*``, ``stereo_match``, ...) survive as thin deprecation
+shims over the session — see ``repro.core.pipeline`` for the migration
+map.  Below the session sit the engine layers: ``orb`` (whole-frame
+fused extraction), ``matching`` (fused FM megakernel + unfused oracle),
+``pyramid``/``fast``/``brief``, and ``kernels.ops`` dispatch.
+"""
 
 from repro.core.types import (CameraIntrinsics, DepthSet, FeatureSet,
-                              MatchSet, ORBConfig)
+                              MatchSet, ORBConfig, StereoOutput)
+from repro.core.rig import DesyncError, RigConfig
+from repro.core.pipeline import PipelineConfig, VisualSystem
 from repro.core.orb import (extract_features, extract_features_batched,
                             extract_features_per_level)
 from repro.core.matching import (match_pair_fused, match_pair_unfused,
                                  sad_rectify, sad_rectify_unfused,
                                  stereo_match, stereo_match_unfused,
                                  temporal_match)
-from repro.core.frontend import (StereoOutput, extract_pair, match_pair,
+from repro.core.frontend import (extract_pair, match_pair,
                                  pipeline_schedule, process_quad_frame,
                                  process_stereo_frame, run_sequence,
                                  run_sequence_pipelined)
@@ -16,7 +29,9 @@ from repro.core import backend, sync  # noqa: F401
 
 __all__ = [
     "CameraIntrinsics", "DepthSet", "FeatureSet", "MatchSet", "ORBConfig",
-    "StereoOutput", "extract_features", "extract_features_batched",
+    "StereoOutput",
+    "RigConfig", "PipelineConfig", "VisualSystem", "DesyncError",
+    "extract_features", "extract_features_batched",
     "extract_features_per_level", "stereo_match", "stereo_match_unfused",
     "sad_rectify", "sad_rectify_unfused", "match_pair_fused",
     "match_pair_unfused",

@@ -1,66 +1,46 @@
-"""Quad-camera frame-multiplexed visual frontend (paper Sec. III-B).
+"""Legacy free-function frontend API — now thin deprecation shims over
+the ``VisualSystem`` session (``repro.core.pipeline``).
 
-Mapping of the FPGA schedule (Fig. 4) onto TPU/XLA, after the fused
-batched frontend refactor:
+The paper's system is configured once and then streams frames through a
+fixed hardware schedule (Sec. III, Fig. 4).  The session API mirrors
+that: build ONE ``VisualSystem`` from a ``RigConfig`` (camera count,
+pair layout, intrinsics, trigger/sync spec) + ``PipelineConfig`` (ORB
+parameters, kernel impl, schedule), then call its jitted cached entry
+points — ``process_frame`` (3 kernel launches: 1 dense FE + 1 sparse FE
++ 1 fused FM), ``run`` (sequential or Fig.-4-pipelined schedule), and
+``process_fleet`` / ``run_fleet`` (an N-rig fleet frame folds the rig
+axis into the batched kernels and still costs 3 launches).
 
-* Frame-multiplexing (all camera channels share one FE): ALL cameras of
-  a frame — 4 for the quad rig, 2 for one stereo pair — enter
-  ``orb.extract_features_batched`` as one leading batch axis, and the
-  WHOLE frame (every camera at every pyramid level) costs exactly TWO
-  fused Pallas launches: the DENSE stage (``ops.fast_blur_nms_pyramid``
-  — blur + FAST + NMS in one VMEM pass per pixel, grid over camera x
-  level slabs padded to a common tile grid) and the SPARSE stage
-  (``ops.orient_describe_pyramid`` — orientation + moments + LUT-steered
-  rBRIEF in one VMEM pass per keypoint patch, level-sorted K-blocks).
-  The VPU is time-multiplexed across cameras and scales exactly as the
-  FPGA FE streams all channels and levels of a frame through one shared
-  datapath; the seed issued separate blur and FAST passes per camera per
-  level, host-graph NMS slices, and vmapped per-keypoint 31x31 gathers
-  for the sparse half, and earlier revisions still re-launched both
-  fused stages once per level (2 x L launches per frame).
-* One shared FM datapath for the two stereo pairs: the FM stage is ONE
-  fused Pallas launch per frame (``matching.match_pair_fused`` →
-  ``ops.match_rectify_fused``) whose kernel grid walks (pair, K-block)
-  with an inner sequential M sweep — Search Region Decision + Hamming
-  Compare + SAD Correction and Disparity Computing stream through one
-  kernel exactly as they stream through the paper's single FM block
-  (Sec. III-D), with the 11x11 windows read in-kernel from the VMEM-
-  resident level-0 slabs.  The pair axis is folded into the grid, not
-  ``vmap``'d, and the SAD inputs no longer go through a host-graph
-  gather chain.  The Fig. 4 mapping is therefore 2 FE + 1 FM: a traced
-  quad frame costs exactly THREE kernel launches.
-* FE(N+1) overlapping FM(N): software-pipelined `lax.scan` — the scan
-  body computes FE(frame t) and FM(features of frame t-1), which have no
-  data dependence, so XLA is free to interleave them; results stream out
-  with one frame of latency, exactly the Fig. 4 timeline.  With FM now a
-  single schedulable launch (instead of a gather-laden host graph), the
-  FE(t) ∥ FM(t-1) overlap is one dense kernel against one matcher
-  kernel.
+MIGRATION MAP — every function below delegates, bit-exact, to the
+session method on the right (sessions are cached per config, so shim
+calls reuse jit caches), and warns ``DeprecationWarning``:
+
+    process_quad_frame(im, cfg, intr)     -> VisualSystem.process_frame(im)
+    process_stereo_frame(l, r, cfg, intr) -> .process_frame(stack([l, r]))
+    run_sequence(frames, cfg, intr)       -> .run(frames)   # "sequential"
+    run_sequence_pipelined(frames, ...)   -> .run(frames)   # "pipelined"
+    extract_pair(l, r, cfg)               -> .extract(stack([l, r]))
+    match_pair(l, r, fl, fr, cfg, intr)   -> .match_pair(l, r, fl, fr)
+
+``pipeline_schedule`` (the analytic Fig. 4 timeline) and
+``StereoOutput`` (re-exported from ``core.types``) are NOT deprecated.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 
-from repro.core import matching, orb
-from repro.core.types import (CameraIntrinsics, DepthSet, FeatureSet,
-                              MatchSet, ORBConfig)
-
-
-class StereoOutput(NamedTuple):
-    features_l: FeatureSet
-    features_r: FeatureSet
-    matches: MatchSet
-    depth: DepthSet
+# The shim plumbing (warning format + cached-session lookup) is shared
+# with the matching-side shims — one definition, one message format.
+from repro.core.matching import _deprecated, _shim_session as _session
+from repro.core.types import (CameraIntrinsics, ORBConfig,  # noqa: F401
+                              StereoOutput)
 
 
 def _split_cameras(feats, n_pairs: int):
     """(B, ...) FeatureSet, B = 2 * n_pairs cameras in [L, R, L, R, ...]
-    order -> (feat_l, feat_r), each with leading (n_pairs,) axes (or
-    scalar pair axis dropped when n_pairs == 1 handled by callers)."""
+    order -> (feat_l, feat_r), each with leading (n_pairs,) axes."""
     paired = jax.tree.map(
         lambda x: x.reshape(n_pairs, 2, *x.shape[1:]), feats)
     feat_l = jax.tree.map(lambda x: x[:, 0], paired)
@@ -70,120 +50,63 @@ def _split_cameras(feats, n_pairs: int):
 
 def extract_pair(img_l: jnp.ndarray, img_r: jnp.ndarray, cfg: ORBConfig,
                  impl: str | None = None):
-    """Frame-multiplexed FE: ONE batched extractor call over the L/R
-    camera batch — two fused launches (dense + sparse) for the whole
-    frame, all levels included."""
-    stacked = jnp.stack([img_l, img_r])          # (2, H, W)
-    feats = orb.extract_features_batched(stacked, cfg, impl=impl)
+    """DEPRECATED shim for ``VisualSystem.extract`` over the stacked
+    L/R camera batch (two fused launches for the whole frame)."""
+    _deprecated("core.frontend.extract_pair", "extract")
+    feats = _session(cfg, None, impl, 2).extract(
+        jnp.stack([img_l, img_r]))
     feat_l = jax.tree.map(lambda x: x[0], feats)
     feat_r = jax.tree.map(lambda x: x[1], feats)
     return feat_l, feat_r
 
 
-def match_pair(img_l, img_r, feat_l: FeatureSet, feat_r: FeatureSet,
-               cfg: ORBConfig, intr: CameraIntrinsics,
-               impl: str | None = None):
-    """FM stage for ONE stereo pair: a pair-batch-of-one view of the
-    fused FM megakernel (``matching.match_pair_fused``) — one launch."""
-    matches, depth = matching.match_pair_fused(
-        img_l[None], img_r[None],
-        jax.tree.map(lambda x: x[None], feat_l),
-        jax.tree.map(lambda x: x[None], feat_r), cfg, intr, impl=impl)
-    return jax.tree.map(lambda x: x[0], (matches, depth))
+def match_pair(img_l, img_r, feat_l, feat_r, cfg: ORBConfig,
+               intr: CameraIntrinsics, impl: str | None = None):
+    """DEPRECATED shim for ``VisualSystem.match_pair`` (a pair-batch-
+    of-one view of the fused FM megakernel — one launch)."""
+    _deprecated("core.frontend.match_pair", "match_pair")
+    return _session(cfg, intr, impl, 2).match_pair(img_l, img_r, feat_l,
+                                                   feat_r)
 
 
 def process_stereo_frame(img_l, img_r, cfg: ORBConfig,
                          intr: CameraIntrinsics,
                          impl: str | None = None) -> StereoOutput:
-    feat_l, feat_r = extract_pair(img_l, img_r, cfg, impl=impl)
-    matches, depth = match_pair(img_l, img_r, feat_l, feat_r, cfg, intr,
-                                impl=impl)
-    return StereoOutput(feat_l, feat_r, matches, depth)
+    """DEPRECATED shim for ``VisualSystem.process_frame`` on a 2-camera
+    rig (outputs drop the pair-batch axis, as before)."""
+    _deprecated("core.frontend.process_stereo_frame", "process_frame")
+    out = _session(cfg, intr, impl, 2).process_frame(
+        jnp.stack([img_l, img_r]))
+    return jax.tree.map(lambda x: x[0], out)
 
 
 def process_quad_frame(images: jnp.ndarray, cfg: ORBConfig,
                        intr: CameraIntrinsics,
                        impl: str | None = None) -> StereoOutput:
-    """images: (4, H, W) — [pair0_L, pair0_R, pair1_L, pair1_R].
-
-    FE runs ONCE over the whole 4-camera batch (TWO fused launches —
-    one dense + one sparse — for all cameras x all pyramid levels) and
-    the FM stage runs ONCE over both stereo pairs (ONE fused matcher
-    launch whose grid folds the pair axis), so a traced quad frame
-    costs exactly 3 kernel launches (2 FE + 1 FM, the budget
-    ``benchmarks.check_launches`` gates).  Outputs have a leading (2,)
-    pair axis.
-    """
-    pairs = images.reshape(2, 2, *images.shape[1:])
-    feats = orb.extract_features_batched(images, cfg, impl=impl)  # (4, ...)
-    feat_l, feat_r = _split_cameras(feats, n_pairs=2)
-    matches, depth = matching.match_pair_fused(
-        pairs[:, 0], pairs[:, 1], feat_l, feat_r, cfg, intr, impl=impl)
-    return StereoOutput(feat_l, feat_r, matches, depth)
+    """DEPRECATED shim for ``VisualSystem.process_frame`` on the quad
+    rig: images (4, H, W) = [pair0_L, pair0_R, pair1_L, pair1_R] ->
+    StereoOutput with a leading (2,) pair axis, 3 kernel launches."""
+    _deprecated("core.frontend.process_quad_frame", "process_frame")
+    return _session(cfg, intr, impl, 4).process_frame(images)
 
 
 def run_sequence(frames: jnp.ndarray, cfg: ORBConfig,
                  intr: CameraIntrinsics,
                  impl: str | None = None) -> StereoOutput:
-    """Reference (non-pipelined) schedule: FE+FM of each frame in order.
-
-    frames: (T, 4, H, W) -> StereoOutput with leading (T, 2) axes.
-    """
-    def body(_, frame):
-        out = process_quad_frame(frame, cfg, intr, impl=impl)
-        return None, out
-
-    _, outs = jax.lax.scan(body, None, frames)
-    return outs
+    """DEPRECATED shim for ``VisualSystem.run`` under the "sequential"
+    schedule: frames (T, 4, H, W) -> StereoOutput with (T, 2) axes."""
+    _deprecated("core.frontend.run_sequence", "run")
+    return _session(cfg, intr, impl, 4).run(frames)
 
 
 def run_sequence_pipelined(frames: jnp.ndarray, cfg: ORBConfig,
                            intr: CameraIntrinsics,
                            impl: str | None = None) -> StereoOutput:
-    """Fig. 4 schedule: FE(t) overlaps FM(t-1) inside one scan step.
-
-    Output step t holds the *completed* result of frame t-1 (one-frame
-    pipeline latency); step 0 is a zero-filled bubble.  The final frame's
-    FM runs in a drain step, so outputs cover all T frames shifted by 1:
-    returns StereoOutput with leading (T, 2) axes, aligned to frames
-    (i.e. after the shift/drain, out[t] corresponds to frames[t]).
-    """
-    t_total = frames.shape[0]
-
-    def fe(frame):
-        pairs = frame.reshape(2, 2, *frame.shape[1:])
-        # One batched FE over all 4 cameras (2 fused launches per frame).
-        feats = orb.extract_features_batched(frame, cfg, impl=impl)
-        return pairs, _split_cameras(feats, n_pairs=2)
-
-    def fm(pairs, feats):
-        feat_l, feat_r = feats
-        # ONE fused matcher launch for both pairs — schedulable against
-        # the dense FE launch of the next frame inside the scan body.
-        return matching.match_pair_fused(pairs[:, 0], pairs[:, 1],
-                                         feat_l, feat_r, cfg, intr,
-                                         impl=impl)
-
-    # Pipeline prologue: FE of frame 0.
-    pairs0, feats0 = fe(frames[0])
-
-    def body(carry, frame):
-        pairs_prev, feats_prev = carry
-        # FM(t-1) and FE(t): no data dependence -> XLA may overlap.
-        matches, depth = fm(pairs_prev, feats_prev)
-        pairs_t, feats_t = fe(frame)
-        out = StereoOutput(feats_prev[0], feats_prev[1], matches, depth)
-        return (pairs_t, feats_t), out
-
-    (pairs_last, feats_last), outs = jax.lax.scan(
-        body, (pairs0, feats0), frames[1:])
-    # Drain: FM of the final frame.
-    matches, depth = fm(pairs_last, feats_last)
-    last = StereoOutput(feats_last[0], feats_last[1], matches, depth)
-    outs = jax.tree.map(
-        lambda xs, x: jnp.concatenate([xs, x[None]], axis=0), outs, last)
-    assert outs.matches.valid.shape[0] == t_total
-    return outs
+    """DEPRECATED shim for ``VisualSystem.run`` under the "pipelined"
+    schedule (Fig. 4: FE(t) overlaps FM(t-1); outputs aligned to
+    ``frames`` after the drain step; T == 0 raises a clear error)."""
+    _deprecated("core.frontend.run_sequence_pipelined", "run")
+    return _session(cfg, intr, impl, 4, schedule="pipelined").run(frames)
 
 
 def pipeline_schedule(n_frames: int, t_fe_ms: float, t_fm_ms: float):

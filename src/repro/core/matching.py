@@ -4,11 +4,13 @@ The FM stage mirrors the paper's ONE hardware block (Sec. III-D): the
 hot path is ``match_pair_fused`` — Search Region Decision + Hamming
 Compare + SAD Correction and Disparity Computing in a SINGLE fused
 Pallas launch per frame, batched over stereo pairs
-(``ops.match_rectify_fused``).  The standalone entry points route
-through the same dispatch: ``stereo_match`` / ``temporal_match`` use its
-match-only mode (one launch, no SAD) and ``sad_rectify`` uses the
-in-kernel SAD sweep (``ops.sad_patch_search``), so none of them runs the
-old host-graph patch-gather chain.
+(``ops.match_rectify_fused``).  This module is the ENGINE layer the
+``VisualSystem`` session (``repro.core.pipeline``) is built on; the old
+standalone entry points — ``stereo_match`` / ``temporal_match`` /
+``sad_rectify``, which threaded cfg/intr/impl through every call — are
+kept as thin deprecation shims over the session methods of the same
+name (bit-exact by construction: the session owns the only
+implementation).
 
 The pre-fusion schedule — separate ``hamming_match`` kernel, host-graph
 ``_gather_patches`` (full-image pad + 2*K vmapped ``dynamic_slice`` per
@@ -19,6 +21,8 @@ bit-for-bit in ``tests/test_matcher_fused.py``.
 """
 
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -48,15 +52,26 @@ def _match_set(dist, idx, feat_l: FeatureSet, cfg: ORBConfig) -> MatchSet:
                     distance=dist, valid=valid)
 
 
+def _fx_baseline(intr):
+    """Disparity -> depth scale: ``CameraIntrinsics`` (shared scalar
+    path, python-float product as before) or a precomputed broadcastable
+    ``fx * baseline`` array for heterogeneous per-pair intrinsics."""
+    if isinstance(intr, CameraIntrinsics):
+        return float(intr.fx) * float(intr.baseline)
+    return intr
+
+
 def _depth_set(x_l, rxy, best, matches: MatchSet, cfg: ORBConfig,
-               intr: CameraIntrinsics) -> DepthSet:
+               intr) -> DepthSet:
     """Disparity/depth computation shared by the fused and unfused
     paths: ``best`` is the SAD-argmin offset (already minus sad_range),
-    ``rxy`` the effective right feature coords."""
+    ``rxy`` the effective right feature coords.  ``intr`` is a
+    ``CameraIntrinsics`` or a broadcastable ``fx * baseline`` array
+    (see ``_fx_baseline``)."""
     x_r_rect = rxy[..., 0] + best
     disparity = x_l - x_r_rect
     valid = matches.valid & (disparity > 0.5)
-    depth = jnp.where(valid, intr.fx * intr.baseline
+    depth = jnp.where(valid, _fx_baseline(intr)
                       / jnp.maximum(disparity, 0.5), 0.0)
     xy_right = jnp.stack([x_r_rect, rxy[..., 1]], axis=-1)
     return DepthSet(disparity=jnp.where(valid, disparity, 0.0),
@@ -65,15 +80,16 @@ def _depth_set(x_l, rxy, best, matches: MatchSet, cfg: ORBConfig,
 
 def match_pair_fused(imgs_l: jnp.ndarray, imgs_r: jnp.ndarray,
                      feat_l: FeatureSet, feat_r: FeatureSet,
-                     cfg: ORBConfig, intr: CameraIntrinsics,
-                     impl: str | None = None):
+                     cfg: ORBConfig, intr, impl: str | None = None):
     """The whole FM stage of a frame in ONE fused launch.
 
     All arguments carry a leading (P,) stereo-pair axis (images
     (P, H, W), FeatureSet fields (P, K, ...)); the pair axis is folded
-    into the kernel grid instead of ``vmap``.  Returns (MatchSet,
-    DepthSet) with leading (P,) axes — bit-exact against
-    ``match_pair_unfused`` per pair (tests pin it)."""
+    into the kernel grid instead of ``vmap``.  ``intr`` is a shared
+    ``CameraIntrinsics`` or a broadcastable per-pair ``fx * baseline``
+    array (heterogeneous rigs).  Returns (MatchSet, DepthSet) with
+    leading (P,) axes — bit-exact against ``match_pair_unfused`` per
+    pair (tests pin it)."""
     dist, idx, rxy, sad = ops.match_rectify_fused(
         feat_l.desc, _meta(feat_l), feat_r.desc, _meta(feat_r),
         imgs_l, imgs_r,
@@ -101,16 +117,28 @@ def match_pair_unfused(img_l: jnp.ndarray, img_r: jnp.ndarray,
     return matches, depth
 
 
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.{old} is deprecated; use {new} on a "
+        "repro.core.VisualSystem session (see repro.core.pipeline for "
+        "the migration map)", DeprecationWarning, stacklevel=3)
+
+
+def _shim_session(cfg: ORBConfig, intr: CameraIntrinsics | None,
+                  impl: str | None, n_cameras: int = 2,
+                  schedule: str = "sequential"):
+    from repro.core import pipeline  # deferred: pipeline imports matching
+    return pipeline.session_for(cfg, intr, impl, n_cameras=n_cameras,
+                                schedule=schedule)
+
+
 def stereo_match(feat_l: FeatureSet, feat_r: FeatureSet,
                  cfg: ORBConfig, impl: str | None = None) -> MatchSet:
-    """Best Hamming match in the strip-like search region (Sec. II-C1),
-    via the fused dispatch's match-only mode (one launch)."""
-    dist, idx = ops.match_rectify_fused(
-        feat_l.desc[None], _meta(feat_l)[None],
-        feat_r.desc[None], _meta(feat_r)[None],
-        row_band=float(cfg.row_band),
-        max_disparity=float(cfg.max_disparity), impl=impl)
-    return _match_set(dist[0], idx[0], feat_l, cfg)
+    """DEPRECATED shim for ``VisualSystem.stereo_match``: best Hamming
+    match in the strip-like search region (Sec. II-C1), via the fused
+    dispatch's match-only mode (one launch)."""
+    _deprecated("core.matching.stereo_match", "stereo_match")
+    return _shim_session(cfg, None, impl).stereo_match(feat_l, feat_r)
 
 
 def stereo_match_unfused(feat_l: FeatureSet, feat_r: FeatureSet,
@@ -140,21 +168,13 @@ def sad_rectify(img_l: jnp.ndarray, img_r: jnp.ndarray,
                 feat_l: FeatureSet, feat_r: FeatureSet, matches: MatchSet,
                 cfg: ORBConfig, intr: CameraIntrinsics,
                 impl: str | None = None) -> DepthSet:
-    """SAD rectification + disparity/depth (Sec. II-C2, III-D).
-
-    Operates on level-0 images with level-0 coordinates (the pyramid-
-    multiplexed FM block of the paper processes both levels; our static
-    top-K already merged levels into level-0 coords).  Patch windows are
-    read IN-KERNEL from the level-0 slabs (``ops.sad_patch_search``) —
-    one launch, no host-graph gather chain."""
-    xy_l = feat_l.xy
-    xy_r = feat_r.xy[matches.right_index]
-    table = ops.sad_patch_search(
-        img_l[None], img_r[None], xy_l[None], xy_r[None],
-        sad_window=cfg.sad_window, sad_range=cfg.sad_range, impl=impl)[0]
-    best = (jnp.argmin(table, axis=1).astype(jnp.float32)
-            - float(cfg.sad_range))
-    return _depth_set(xy_l[:, 0], xy_r, best, matches, cfg, intr)
+    """DEPRECATED shim for ``VisualSystem.sad_rectify``: SAD
+    rectification + disparity/depth (Sec. II-C2, III-D) with in-kernel
+    patch reads (``ops.sad_patch_search`` — one launch, no host-graph
+    gather chain)."""
+    _deprecated("core.matching.sad_rectify", "sad_rectify")
+    return _shim_session(cfg, intr, impl).sad_rectify(
+        img_l, img_r, feat_l, feat_r, matches)
 
 
 def sad_rectify_unfused(img_l: jnp.ndarray, img_r: jnp.ndarray,
@@ -182,19 +202,10 @@ def temporal_match(feat_a: FeatureSet, feat_b: FeatureSet,
                    cfg: ORBConfig, search_radius: float = 48.0,
                    search_radius_y: float | None = None,
                    impl: str | None = None) -> MatchSet:
-    """Frame-to-frame matching for the VO backend: the fused dispatch's
-    match-only mode (one launch) with a rectangular search region —
-    +-``search_radius`` in x (via shifted meta, reusing the
-    [0, max_disparity] window) and +-``search_radius_y`` in y (defaults
-    to the x radius, i.e. the square window)."""
-    radius_y = search_radius if search_radius_y is None else search_radius_y
-    meta_a = _meta(feat_a)
-    meta_b = _meta(feat_b)
-    # Reuse the [0, max_disparity] window as [-radius, +radius] by
-    # shifting the left x coordinate.
-    meta_a = meta_a.at[:, 0].add(search_radius)
-    dist, idx = ops.match_rectify_fused(
-        feat_a.desc[None], meta_a[None], feat_b.desc[None], meta_b[None],
-        row_band=float(radius_y), max_disparity=2.0 * search_radius,
-        impl=impl)
-    return _match_set(dist[0], idx[0], feat_a, cfg)
+    """DEPRECATED shim for ``VisualSystem.temporal_match``:
+    frame-to-frame matching for the VO backend via the fused dispatch's
+    match-only mode (one launch) with a rectangular search region."""
+    _deprecated("core.matching.temporal_match", "temporal_match")
+    return _shim_session(cfg, None, impl).temporal_match(
+        feat_a, feat_b, search_radius=search_radius,
+        search_radius_y=search_radius_y)

@@ -1,10 +1,13 @@
 """ORB feature extraction — the paper's Feature Extractor block (Fig. 3d)
 as a whole-frame dense/sparse pipeline: TWO kernel launches per FRAME.
 
-The hot path is ``extract_features_batched``: all cameras enter as one
-leading batch axis, the pyramid is built, and the entire frame — every
-camera at every pyramid level — then costs exactly TWO fused kernel
-launches:
+This is the FE engine under the ``VisualSystem`` session
+(``repro.core.pipeline``): the session's ``process_frame`` /
+``process_fleet`` / ``extract`` entry points all flatten their camera
+(and fleet-rig) axes into the single leading batch axis of
+``extract_features_batched`` — all cameras of all rigs enter as one
+batch, the pyramid is built, and the entire frame — every camera at
+every pyramid level — then costs exactly TWO fused kernel launches:
 
   1. DENSE stage (``ops.fast_blur_nms_pyramid``): ONE launch whose grid
      walks (camera x level slab, tile).  Ragged level slabs are padded

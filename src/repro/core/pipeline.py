@@ -1,0 +1,548 @@
+"""`VisualSystem` — the session API of the quad-camera visual frontend.
+
+The paper's system is configured ONCE (rig layout, sync, FE/FM
+parameters) and then streams frames through a fixed hardware schedule
+(Sec. III, Fig. 4).  This module is that discipline on TPU/XLA: a
+``VisualSystem`` session is built from one ``RigConfig`` (camera count,
+stereo-pair layout, per-camera intrinsics, trigger/sync spec) plus one
+``PipelineConfig`` (ORB parameters, kernel impl, frame schedule, match
+radii) and owns everything the old free functions threaded through
+every call — cfg, intrinsics, impl resolution, and the jit caches.
+
+Entry points (each jitted once per (entry, shape) and cached on the
+session — repeated same-shape calls retrace ZERO times, asserted in
+tests):
+
+    vs = VisualSystem(RigConfig.quad(intr), PipelineConfig(orb=ocfg))
+    out  = vs.process_frame(images)        # (n_cameras, H, W) -> (P,) axes
+    outs = vs.run(frames)                  # (T, C, H, W); schedule from cfg
+    fout = vs.process_fleet(fleet_images)  # (n_rigs, C, H, W) -> (N, P)
+    fseq = vs.run_fleet(fleet_frames)      # (T, n_rigs, C, H, W)
+
+FLEET BATCHING is the scaling move of this API (the "share one datapath
+across channels" discipline of the runtime-reconfigurable accelerator
+in PAPERS.md §2, applied across RIGS): ``process_fleet`` folds the
+leading ``(n_rigs,)`` axis into the camera/pair batch axes the kernels
+already grid over — FE sees one ``(n_rigs * n_cameras,)`` camera batch,
+FM one ``(n_rigs * n_pairs,)`` pair batch — so an N-rig fleet frame
+still costs exactly THREE kernel launches (1 dense FE + 1 sparse FE +
+1 fused FM), the same budget as a single rig (CI-gated via
+``launch_gate/fleet_frame_*``), and is bit-exact against the per-rig
+loop.  With ``PipelineConfig.rig_shard_axis`` set and a
+``distributed.sharding.use_sharding`` mesh installed, the fleet axis is
+additionally ``shard_map``'d over that mesh axis (3 launches per
+device).
+
+MIGRATION MAP (the old free functions survive as thin deprecation
+shims, bit-exact against these paths):
+
+    process_quad_frame(im, cfg, intr)    -> VisualSystem.process_frame(im)
+    process_stereo_frame(l, r, cfg, intr)-> .process_frame(stack([l, r]))
+                                            (2-camera rig; drop pair axis)
+    run_sequence(frames, cfg, intr)      -> .run(frames)  (schedule=
+                                            "sequential")
+    run_sequence_pipelined(...)          -> .run(frames)  (schedule=
+                                            "pipelined")
+    extract_pair(l, r, cfg)              -> .extract(stack([l, r]))
+    match_pair(l, r, fl, fr, cfg, intr)  -> .match_pair(l, r, fl, fr)
+    stereo_match(fl, fr, cfg)            -> .stereo_match(fl, fr)
+    temporal_match(fa, fb, cfg, radius)  -> .temporal_match(fa, fb, ...)
+    sad_rectify(l, r, fl, fr, m, cfg, i) -> .sad_rectify(l, r, fl, fr, m)
+    ops.set_default_impl(impl)           -> PipelineConfig(impl=...) or
+                                            ops.use_impl(impl) (scoped)
+    ops.reset_launch_count/launch_count  -> ops.launch_audit() or
+                                            VisualSystem.traced_launches
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import matching, orb
+from repro.core.rig import DesyncError, RigConfig
+from repro.core.types import (CameraIntrinsics, FeatureSet, MatchSet,
+                              ORBConfig, StereoOutput)
+from repro.distributed import sharding
+from repro.kernels import ops
+
+_SCHEDULES = ("sequential", "pipelined")
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Everything about HOW frames are processed (the rig says WHAT).
+
+    ``impl`` resolves the kernel implementation once for the whole
+    session ("ref" | "pallas" | None = backend default) instead of the
+    old per-call / global ``ops.set_default_impl`` threading.
+    ``schedule`` picks the ``run`` discipline: "sequential" (FE+FM per
+    frame in order) or "pipelined" (Fig. 4: FE(t) overlaps FM(t-1), one
+    frame of latency hidden by the drain step).  ``rig_shard_axis``
+    names the mesh axis ``process_fleet`` / ``run_fleet`` shard the
+    rig dimension over when a ``use_sharding`` mesh is installed.
+    """
+
+    orb: ORBConfig = ORBConfig()
+    impl: str | None = None
+    schedule: str = "sequential"
+    temporal_radius: float = 48.0
+    temporal_radius_y: float | None = None
+    rig_shard_axis: str | None = None
+
+    def __post_init__(self):
+        if self.schedule not in _SCHEDULES:
+            raise ValueError(
+                f"schedule must be one of {_SCHEDULES}, "
+                f"got {self.schedule!r}")
+        if self.impl not in (None, "ref", "pallas"):
+            raise ValueError(
+                f"impl must be None, 'ref' or 'pallas', got {self.impl!r}")
+
+
+class VisualSystem:
+    """One configured rig + pipeline, with jitted cached entry points.
+
+    The session resolves impl once (``PipelineConfig.impl``), owns the
+    jit cache for every entry point (``trace_count`` observes retraces),
+    validates frame shapes eagerly with clear errors, and applies the
+    rig's sync policy to per-frame time tags (``desync_log`` /
+    ``DesyncError``).
+    """
+
+    def __init__(self, rig: RigConfig,
+                 pipe: PipelineConfig | None = None) -> None:
+        if not isinstance(rig, RigConfig):
+            raise TypeError(f"rig must be a RigConfig, got {type(rig)!r}")
+        self.rig = rig
+        self.pipe = pipe if pipe is not None else PipelineConfig()
+        if not isinstance(self.pipe, PipelineConfig):
+            raise TypeError(
+                f"pipe must be a PipelineConfig, got {type(self.pipe)!r}")
+        # Impl is resolved ONCE, at construction (None -> the ambient
+        # use_impl context / process default / backend default), so a
+        # session's kernel path is pinned for its lifetime — later
+        # context or global flips cannot silently miss the jit cache.
+        self.impl: str = ops.resolve_impl(self.pipe.impl)
+        self._jitted: dict = {}
+        self._trace_counts: dict = {}
+        # Bounded health log: one spread per checked frame; a streaming
+        # session at 30 fps would otherwise grow this without limit.
+        self.desync_log: "collections.deque[float]" = collections.deque(
+            maxlen=4096)
+
+    # -- jit cache ---------------------------------------------------------
+
+    def _jit(self, key, fn):
+        """Jit ``fn`` once per entry-point key; jax.jit's own cache then
+        keys on argument shapes.  The wrapper counts traces (a python
+        side effect that only fires while tracing) so tests can assert
+        repeated same-shape calls retrace zero times."""
+        if key not in self._jitted:
+            def counted(*args):
+                self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
+                return fn(*args)
+            self._jitted[key] = jax.jit(counted)
+        return self._jitted[key]
+
+    def trace_count(self, key) -> int:
+        """How many times entry point ``key`` has been traced (i.e. how
+        many distinct input shapes it has compiled for)."""
+        return self._trace_counts.get(key, 0)
+
+    # -- shape / sync validation (eager, outside jit) ----------------------
+
+    def _check_images(self, images, *, fleet: bool, sequence: bool,
+                      what: str | None = None) -> None:
+        want_nd = 3 + int(fleet) + int(sequence)
+        shape = tuple(images.shape)
+        if what is None:
+            what = (("run_fleet" if sequence else "process_fleet") if fleet
+                    else ("run" if sequence else "process_frame"))
+        if len(shape) != want_nd:
+            raise ValueError(
+                f"{what} expects a rank-{want_nd} array "
+                f"{'(T, ' if sequence else '('}"
+                f"{'n_rigs, ' if fleet else ''}n_cameras, H, W); got "
+                f"shape {shape}")
+        c, h, w = shape[-3], shape[-2], shape[-1]
+        if c != self.rig.n_cameras:
+            raise ValueError(
+                f"{what}: camera axis is {c} but the rig has "
+                f"{self.rig.n_cameras} cameras")
+        cfg = self.pipe.orb
+        if (h, w) != (cfg.height, cfg.width):
+            raise ValueError(
+                f"{what}: image shape ({h}, {w}) does not match "
+                f"PipelineConfig.orb ({cfg.height}, {cfg.width})")
+        if sequence and shape[0] == 0:
+            raise ValueError(
+                f"{what}: empty sequence (T == 0); the "
+                f"{self.pipe.schedule!r} schedule needs at least one "
+                "frame (the pipelined prologue/drain is defined for "
+                "T >= 1)")
+
+    def check_desync(self, timestamps) -> float:
+        """Apply the rig's sync policy to one frame's camera time tags.
+
+        Returns the tag spread (the float64 single-frame evaluation of
+        ``sync.max_desync`` over the (n_cameras,) stamp vector, seconds)
+        and appends it to ``desync_log``.
+        Hardware-trigger rigs assert the paper's 0-cycle guarantee
+        (spread <= ``rig.max_desync``, default 0.0 — Sec. III-A) by
+        raising ``DesyncError``; software-sync rigs only report.
+        """
+        ts = np.asarray(timestamps, dtype=np.float64).reshape(-1)
+        if ts.shape[0] != self.rig.n_cameras:
+            raise ValueError(
+                f"expected {self.rig.n_cameras} per-camera timestamps, "
+                f"got {ts.shape[0]}")
+        # float64 single-frame evaluation of ``sync.max_desync``: epoch-
+        # scale stamps (~1.75e9 s) have 128 s float32 spacing, so
+        # routing through jnp without x64 would zero out any real-world
+        # desync and the hardware gate below would never fire.
+        desync = float(np.max(ts) - np.min(ts))
+        self.desync_log.append(desync)
+        if self.rig.sync_policy == "hardware" and desync > self.rig.max_desync:
+            raise DesyncError(
+                f"hardware-trigger rig saw {desync:.3e}s inter-camera "
+                f"desync (tolerance {self.rig.max_desync:.3e}s): time "
+                "tags must come from the unified trigger clock "
+                "(paper Sec. III-A)")
+        return desync
+
+    # -- engine (pure, jit-able; impl threaded explicitly) -----------------
+
+    def _flat_pair_indices(self, n_rigs: int):
+        """Left/right camera indices of every pair of every rig in the
+        flattened ``(n_rigs * n_cameras,)`` camera batch."""
+        c = self.rig.n_cameras
+        left = np.asarray(self.rig.left_cams, np.int32)
+        right = np.asarray(self.rig.right_cams, np.int32)
+        offs = np.arange(n_rigs, dtype=np.int32)[:, None] * c
+        return (jnp.asarray((offs + left[None, :]).reshape(-1)),
+                jnp.asarray((offs + right[None, :]).reshape(-1)))
+
+    def _fm_intr(self, n_rigs: int):
+        """Shared ``CameraIntrinsics`` when the rig is homogeneous (the
+        scalar fast path, bit-identical to the legacy functions), else a
+        per-pair ``fx * baseline`` column tiled across the fleet."""
+        if self.rig.homogeneous_intrinsics:
+            return self.rig.intrinsics[0]
+        fxb = np.asarray([float(ic.fx) * float(ic.baseline)
+                          for ic in self.rig.pair_intrinsics], np.float32)
+        return jnp.asarray(np.tile(fxb, n_rigs)[:, None])
+
+    def _fe_flat(self, images, n_rigs: int, impl):
+        """FE stage over the flat camera batch: ONE dense + ONE sparse
+        launch for every camera of every rig at every pyramid level."""
+        feats = orb.extract_features_batched(images, self.pipe.orb,
+                                             impl=impl)
+        li, ri = self._flat_pair_indices(n_rigs)
+        feat_l = jax.tree.map(lambda x: x[li], feats)
+        feat_r = jax.tree.map(lambda x: x[ri], feats)
+        return images[li], images[ri], feat_l, feat_r
+
+    def _fm_flat(self, carry, n_rigs: int, impl) -> StereoOutput:
+        """FM stage over the flat pair batch: ONE fused matcher launch
+        whose grid folds every pair of every rig."""
+        imgs_l, imgs_r, feat_l, feat_r = carry
+        matches, depth = matching.match_pair_fused(
+            imgs_l, imgs_r, feat_l, feat_r, self.pipe.orb,
+            self._fm_intr(n_rigs), impl=impl)
+        return StereoOutput(feat_l, feat_r, matches, depth)
+
+    def _frame_core(self, images, impl) -> StereoOutput:
+        """(n_cameras, H, W) -> StereoOutput with (n_pairs,) axes; a
+        fleet-of-one view of the same 3-launch datapath."""
+        return self._fm_flat(self._fe_flat(images, 1, impl), 1, impl)
+
+    def _fleet_core(self, images, impl) -> StereoOutput:
+        """(n_rigs, n_cameras, H, W) -> StereoOutput with
+        (n_rigs, n_pairs) axes; the rig axis is folded into the kernels'
+        camera/pair batch axes, so the whole fleet frame still costs 3
+        launches."""
+        n = images.shape[0]
+        flat = images.reshape((n * self.rig.n_cameras,) + images.shape[2:])
+        out = self._fm_flat(self._fe_flat(flat, n, impl), n, impl)
+        return jax.tree.map(
+            lambda x: x.reshape((n, self.rig.n_pairs) + x.shape[1:]), out)
+
+    def _run_core(self, frames, impl, fleet: bool) -> StereoOutput:
+        if self.pipe.schedule == "pipelined":
+            return self._run_pipelined(frames, impl, fleet)
+        per_frame = self._fleet_core if fleet else self._frame_core
+        def body(_, frame):
+            return None, per_frame(frame, impl)
+        _, outs = jax.lax.scan(body, None, frames)
+        return outs
+
+    def _run_pipelined(self, frames, impl, fleet: bool) -> StereoOutput:
+        """Fig. 4 schedule: FE(t) overlaps FM(t-1) inside one scan step;
+        the final frame's FM runs in a drain step, so outputs cover all
+        T frames aligned to ``frames``.  T == 1 degenerates to prologue
+        + drain (an empty scan) and equals the sequential schedule;
+        T == 0 is rejected eagerly in ``run``/``run_fleet`` with a
+        clear error instead of the old bare in-trace ``assert``."""
+        t_total = int(frames.shape[0])
+        n_pairs = self.rig.n_pairs
+
+        def fe(frame):
+            if fleet:
+                n = frame.shape[0]
+                flat = frame.reshape((n * self.rig.n_cameras,)
+                                     + frame.shape[2:])
+                return self._fe_flat(flat, n, impl)
+            return self._fe_flat(frame, 1, impl)
+
+        def fm(carry):
+            n = carry[0].shape[0] // n_pairs
+            out = self._fm_flat(carry, n, impl)
+            if fleet:
+                out = jax.tree.map(
+                    lambda x: x.reshape((n, n_pairs) + x.shape[1:]), out)
+            return out
+
+        carry0 = fe(frames[0])
+
+        def body(carry, frame):
+            # FM(t-1) and FE(t): no data dependence -> XLA may overlap.
+            out = fm(carry)
+            return fe(frame), out
+
+        carry_last, outs = jax.lax.scan(body, carry0, frames[1:])
+        last = fm(carry_last)
+        outs = jax.tree.map(
+            lambda xs, x: jnp.concatenate([xs, x[None]], axis=0),
+            outs, last)
+        if outs.matches.valid.shape[0] != t_total:  # static shape check
+            raise RuntimeError(
+                f"pipelined schedule produced "
+                f"{outs.matches.valid.shape[0]} outputs for {t_total} "
+                "frames — drain/prologue accounting is broken")
+        return outs
+
+    # -- frame / sequence entry points -------------------------------------
+
+    def process_frame(self, images, timestamps=None) -> StereoOutput:
+        """One rig frame: (n_cameras, H, W) -> StereoOutput with leading
+        (n_pairs,) axes, in exactly 3 kernel launches (2 FE + 1 FM).
+
+        ``timestamps`` (optional, (n_cameras,) seconds) runs the rig's
+        per-frame desync check (``check_desync``) before dispatch.
+        """
+        self._check_images(images, fleet=False, sequence=False)
+        if timestamps is not None:
+            self.check_desync(timestamps)
+        return self._jit(
+            "process_frame",
+            lambda im: self._frame_core(im, self.impl))(images)
+
+    def process_fleet(self, images) -> StereoOutput:
+        """One frame from EVERY rig of a fleet: (n_rigs, n_cameras, H, W)
+        -> StereoOutput with leading (n_rigs, n_pairs) axes — still 3
+        kernel launches total, bit-exact against the per-rig loop.
+
+        With ``PipelineConfig.rig_shard_axis`` set and a
+        ``use_sharding`` mesh installed, the rig axis is sharded over
+        that mesh axis via ``shard_map`` (n_rigs must divide evenly).
+        """
+        self._check_images(images, fleet=True, sequence=False)
+        sharded = self._fleet_sharded("process_fleet", self._fleet_core)
+        if sharded is not None:
+            return sharded(images)
+        return self._jit(
+            "process_fleet",
+            lambda im: self._fleet_core(im, self.impl))(images)
+
+    def run(self, frames) -> StereoOutput:
+        """A frame sequence (T, n_cameras, H, W) -> StereoOutput with
+        leading (T, n_pairs) axes, under ``PipelineConfig.schedule``."""
+        self._check_images(frames, fleet=False, sequence=True)
+        return self._jit(
+            "run",
+            lambda f: self._run_core(f, self.impl, False))(frames)
+
+    def run_fleet(self, frames) -> StereoOutput:
+        """A fleet sequence (T, n_rigs, n_cameras, H, W) -> StereoOutput
+        with leading (T, n_rigs, n_pairs) axes; both schedules fold the
+        rig axis into the batched kernels (3 launches per scan step)."""
+        self._check_images(frames, fleet=True, sequence=True)
+        sharded = self._fleet_sharded(
+            "run_fleet", lambda f, impl: self._run_core(f, impl, True))
+        if sharded is not None:
+            return sharded(frames)
+        return self._jit(
+            "run_fleet",
+            lambda f: self._run_core(f, self.impl, True))(frames)
+
+    def _fleet_sharded(self, entry: str, core):
+        """shard_map'd jitted fleet entry when a mesh context carrying
+        ``rig_shard_axis`` is installed, else None.  ``core`` takes
+        (array, impl) with the rig axis leading (axis 0 for
+        process_fleet; run_fleet shards axis 1 of (T, n_rigs, ...))."""
+        axis = self.pipe.rig_shard_axis
+        ctx = sharding.current_ctx()
+        if axis is None or ctx is None or axis not in dict(ctx.mesh.shape):
+            return None
+        key = (entry, "sharded", axis, ctx.mesh)
+        if key not in self._jitted:
+            rig_dim = 1 if entry == "run_fleet" else 0
+            fn = sharding.shard_over(
+                lambda x: core(x, self.impl), ctx.mesh, axis,
+                arg_axis=rig_dim)
+            def counted(x):
+                # count under the plain entry name so trace_count(entry)
+                # observes sharded retraces too
+                self._trace_counts[entry] = \
+                    self._trace_counts.get(entry, 0) + 1
+                return fn(x)
+            self._jitted[key] = jax.jit(counted)
+        return self._jitted[key]
+
+    # -- feature / matcher entry points ------------------------------------
+
+    def extract(self, images) -> FeatureSet:
+        """FE only: (n_cameras, H, W) -> FeatureSet with a leading
+        (n_cameras,) axis, in 2 launches (1 dense + 1 sparse)."""
+        self._check_images(images, fleet=False, sequence=False,
+                           what="extract")
+        return self._jit(
+            "extract",
+            lambda im: orb.extract_features_batched(
+                im, self.pipe.orb, impl=self.impl))(images)
+
+    def match_pair(self, img_l, img_r, feat_l: FeatureSet,
+                   feat_r: FeatureSet):
+        """FM stage for ONE explicit stereo pair (a pair-batch-of-one
+        view of the fused megakernel): returns (MatchSet, DepthSet).
+        Depth uses the first pair's left-camera intrinsics."""
+        intr = self.rig.pair_intrinsics[0]
+        def core(il, ir, fl, fr):
+            matches, depth = matching.match_pair_fused(
+                il[None], ir[None],
+                jax.tree.map(lambda x: x[None], fl),
+                jax.tree.map(lambda x: x[None], fr),
+                self.pipe.orb, intr, impl=self.impl)
+            return jax.tree.map(lambda x: x[0], (matches, depth))
+        return self._jit("match_pair", core)(img_l, img_r, feat_l, feat_r)
+
+    def stereo_match(self, feat_l: FeatureSet,
+                     feat_r: FeatureSet) -> MatchSet:
+        """Best Hamming match in the strip-like search region
+        (Sec. II-C1) via the fused dispatch's match-only mode — one
+        launch."""
+        cfg = self.pipe.orb
+        def core(fl, fr):
+            dist, idx = ops.match_rectify_fused(
+                fl.desc[None], matching._meta(fl)[None],
+                fr.desc[None], matching._meta(fr)[None],
+                row_band=float(cfg.row_band),
+                max_disparity=float(cfg.max_disparity),
+                impl=self.impl)
+            return matching._match_set(dist[0], idx[0], fl, cfg)
+        return self._jit("stereo_match", core)(feat_l, feat_r)
+
+    def temporal_match(self, feat_a: FeatureSet, feat_b: FeatureSet,
+                       search_radius: float | None = None,
+                       search_radius_y: float | None = None) -> MatchSet:
+        """Frame-to-frame matching for the VO backend (match-only fused
+        mode, one launch) over a rectangular +-radius window; radii
+        default to ``PipelineConfig.temporal_radius`` /
+        ``temporal_radius_y`` (y falls back to the x radius)."""
+        cfg = self.pipe.orb
+        rx = (self.pipe.temporal_radius if search_radius is None
+              else float(search_radius))
+        ry = search_radius_y
+        if ry is None:
+            ry = (self.pipe.temporal_radius_y
+                  if self.pipe.temporal_radius_y is not None else rx)
+        ry = float(ry)
+        def core(fa, fb):
+            meta_a = matching._meta(fa)
+            # Reuse the [0, max_disparity] window as [-rx, +rx] by
+            # shifting the left x coordinate.
+            meta_a = meta_a.at[:, 0].add(rx)
+            dist, idx = ops.match_rectify_fused(
+                fa.desc[None], meta_a[None],
+                fb.desc[None], matching._meta(fb)[None],
+                row_band=ry, max_disparity=2.0 * rx, impl=self.impl)
+            return matching._match_set(dist[0], idx[0], fa, cfg)
+        return self._jit(("temporal_match", rx, ry), core)(feat_a, feat_b)
+
+    def sad_rectify(self, img_l, img_r, feat_l: FeatureSet,
+                    feat_r: FeatureSet, matches: MatchSet):
+        """SAD rectification + disparity/depth (Sec. II-C2, III-D) for
+        one explicit pair, with IN-KERNEL patch reads
+        (``ops.sad_patch_search`` — one launch).  Depth uses the first
+        pair's left-camera intrinsics."""
+        cfg = self.pipe.orb
+        intr = self.rig.pair_intrinsics[0]
+        def core(il, ir, fl, fr, m):
+            xy_l = fl.xy
+            xy_r = fr.xy[m.right_index]
+            table = ops.sad_patch_search(
+                il[None], ir[None], xy_l[None], xy_r[None],
+                sad_window=cfg.sad_window, sad_range=cfg.sad_range,
+                impl=self.impl)[0]
+            best = (jnp.argmin(table, axis=1).astype(jnp.float32)
+                    - float(cfg.sad_range))
+            return matching._depth_set(xy_l[:, 0], xy_r, best, m, cfg,
+                                       intr)
+        return self._jit("sad_rectify", core)(img_l, img_r, feat_l,
+                                              feat_r, matches)
+
+    # -- audit --------------------------------------------------------------
+
+    def traced_launches(self, entry: str, *args) -> int:
+        """Trace ``entry`` shape-only under impl='pallas' and return the
+        number of kernel launches in the traced graph — the
+        deterministic schedule number the CI launch gates enforce (3
+        per frame / fleet frame), independent of the session's impl."""
+        cores = {
+            "process_frame": lambda im: self._frame_core(im, "pallas"),
+            "process_fleet": lambda im: self._fleet_core(im, "pallas"),
+            "extract": lambda im: orb.extract_features_batched(
+                im, self.pipe.orb, impl="pallas"),
+            "run": lambda f: self._run_core(f, "pallas", False),
+            "run_fleet": lambda f: self._run_core(f, "pallas", True),
+        }
+        try:
+            core = cores[entry]
+        except KeyError:
+            raise ValueError(
+                f"traced_launches supports {sorted(cores)}, "
+                f"got {entry!r}") from None
+        with ops.launch_audit() as audit:
+            jax.eval_shape(core, *args)
+        return audit.count
+
+
+def session_for(cfg: ORBConfig, intr: CameraIntrinsics | None,
+                impl: str | None, n_cameras: int = 2,
+                schedule: str = "sequential") -> VisualSystem:
+    """Session cache backing the legacy free-function shims: one
+    ``VisualSystem`` per (ORBConfig, intrinsics, impl, layout), so
+    repeated shim calls reuse jit caches exactly like a held session.
+    Cameras pair up in the legacy [L, R, L, R, ...] order.  ``impl`` is
+    resolved BEFORE the cache lookup, preserving the legacy functions'
+    per-call resolution: an ``ops.use_impl`` scope or a
+    ``set_default_impl`` flip selects a different cached session rather
+    than silently reusing one pinned to the old impl."""
+    return _session_for(cfg, intr, ops.resolve_impl(impl), n_cameras,
+                        schedule)
+
+
+@functools.lru_cache(maxsize=128)
+def _session_for(cfg, intr, impl, n_cameras, schedule) -> VisualSystem:
+    pairs = tuple((2 * i, 2 * i + 1) for i in range(n_cameras // 2))
+    rig = RigConfig(n_cameras=n_cameras, pairs=pairs,
+                    intrinsics=intr if intr is not None
+                    else CameraIntrinsics())
+    return VisualSystem(rig, PipelineConfig(orb=cfg, impl=impl,
+                                            schedule=schedule))

@@ -1,0 +1,137 @@
+"""Rig description for the `VisualSystem` session API.
+
+A ``RigConfig`` captures everything the paper configures ONCE about the
+camera hardware (Sec. III, Fig. 4): how many cameras there are, how they
+group into stereo pairs, each camera's intrinsics, and the trigger/sync
+spec (Sec. III-A).  The session (``repro.core.pipeline.VisualSystem``)
+is built from one ``RigConfig`` plus one ``PipelineConfig`` and then
+streams frames through a fixed schedule — no per-call cfg/intr/impl
+threading.
+
+The pair layout is explicit instead of the old hard-coded "4 cameras =
+2 pairs in [L, R, L, R] order": ``pairs`` is a tuple of (left, right)
+camera indices, so asymmetric rigs (one stereo pair plus a mono camera,
+6-camera rings, ...) describe themselves and the fleet batcher can fold
+any rig shape into the kernels' flat camera/pair batch axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.sync import TriggerConfig
+from repro.core.types import CameraIntrinsics
+
+_SYNC_POLICIES = ("hardware", "software")
+
+
+class DesyncError(RuntimeError):
+    """A frame's camera time tags spread beyond the rig's tolerance.
+
+    Raised by ``VisualSystem.process_frame`` for hardware-trigger rigs,
+    whose trigger generator stamps every camera from one clock (paper
+    Sec. III-A) — any nonzero spread means the sync hardware is broken
+    or the tags do not come from it.  Software-sync rigs log the jitter
+    instead of raising.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class RigConfig:
+    """Static description of one camera rig.
+
+    ``intrinsics`` may be a single ``CameraIntrinsics`` (shared by all
+    cameras — the paper's quad rig) or one per camera; it is normalized
+    to a per-camera tuple.  ``sync`` defaults to a ``TriggerConfig``
+    with a matching camera count.  ``sync_policy`` selects the desync
+    discipline ``VisualSystem.process_frame`` applies to per-frame time
+    tags: ``"hardware"`` asserts the trigger-generator guarantee (spread
+    <= ``max_desync``, 0.0 by default — the paper's 0-cycle desync),
+    ``"software"`` only records the observed jitter.
+    """
+
+    n_cameras: int = 4
+    pairs: tuple[tuple[int, int], ...] = ((0, 1), (2, 3))
+    intrinsics: tuple[CameraIntrinsics, ...] | CameraIntrinsics = \
+        CameraIntrinsics()
+    sync: TriggerConfig | None = None
+    sync_policy: str = "hardware"
+    max_desync: float = 0.0      # tolerated per-frame tag spread (s)
+
+    def __post_init__(self):
+        if self.n_cameras < 1:
+            raise ValueError(f"n_cameras must be >= 1, got {self.n_cameras}")
+        if isinstance(self.intrinsics, CameraIntrinsics):
+            object.__setattr__(self, "intrinsics",
+                               (self.intrinsics,) * self.n_cameras)
+        else:
+            object.__setattr__(self, "intrinsics", tuple(self.intrinsics))
+        if len(self.intrinsics) != self.n_cameras:
+            raise ValueError(
+                f"got {len(self.intrinsics)} intrinsics for "
+                f"{self.n_cameras} cameras")
+        pairs = tuple((int(l), int(r)) for l, r in self.pairs)
+        object.__setattr__(self, "pairs", pairs)
+        if not pairs:
+            raise ValueError("a rig needs at least one stereo pair")
+        for l, r in pairs:
+            if not (0 <= l < self.n_cameras and 0 <= r < self.n_cameras):
+                raise ValueError(
+                    f"pair ({l}, {r}) references a camera outside "
+                    f"[0, {self.n_cameras})")
+            if l == r:
+                raise ValueError(f"pair ({l}, {r}) uses one camera twice")
+        if self.sync is None:
+            object.__setattr__(self, "sync",
+                               TriggerConfig(n_cameras=self.n_cameras))
+        if self.sync.n_cameras != self.n_cameras:
+            raise ValueError(
+                f"sync.n_cameras={self.sync.n_cameras} does not match "
+                f"rig n_cameras={self.n_cameras}")
+        if self.sync_policy not in _SYNC_POLICIES:
+            raise ValueError(
+                f"sync_policy must be one of {_SYNC_POLICIES}, "
+                f"got {self.sync_policy!r}")
+        if self.max_desync < 0.0:
+            raise ValueError(f"max_desync must be >= 0, got {self.max_desync}")
+
+    # -- layout views ------------------------------------------------------
+
+    @property
+    def n_pairs(self) -> int:
+        return len(self.pairs)
+
+    @property
+    def left_cams(self) -> tuple[int, ...]:
+        return tuple(l for l, _ in self.pairs)
+
+    @property
+    def right_cams(self) -> tuple[int, ...]:
+        return tuple(r for _, r in self.pairs)
+
+    @property
+    def pair_intrinsics(self) -> tuple[CameraIntrinsics, ...]:
+        """Per-pair intrinsics (the pair's LEFT camera drives the
+        disparity -> depth conversion)."""
+        return tuple(self.intrinsics[l] for l in self.left_cams)
+
+    @property
+    def homogeneous_intrinsics(self) -> bool:
+        return all(ic == self.intrinsics[0] for ic in self.intrinsics[1:])
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def quad(cls, intrinsics: CameraIntrinsics = CameraIntrinsics(),
+             **kwargs) -> "RigConfig":
+        """The paper's rig: 4 cameras, front pair (0, 1) + back pair
+        (2, 3), one shared set of intrinsics."""
+        return cls(n_cameras=4, pairs=((0, 1), (2, 3)),
+                   intrinsics=intrinsics, **kwargs)
+
+    @classmethod
+    def stereo(cls, intrinsics: CameraIntrinsics = CameraIntrinsics(),
+               **kwargs) -> "RigConfig":
+        """A single stereo pair (cameras 0 = left, 1 = right)."""
+        return cls(n_cameras=2, pairs=((0, 1),), intrinsics=intrinsics,
+                   **kwargs)

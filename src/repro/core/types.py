@@ -31,6 +31,21 @@ class FeatureSet(NamedTuple):
         return jnp.sum(self.valid.astype(jnp.int32))
 
 
+class StereoOutput(NamedTuple):
+    """One processed frame: per-pair features, matches, and depth.
+
+    Produced by the ``VisualSystem`` session (and the legacy frame
+    shims).  Field leading axes depend on the entry point: a processed
+    frame carries ``(n_pairs,)``, a fleet frame ``(n_rigs, n_pairs)``,
+    and a sequence prepends ``(T,)``.
+    """
+
+    features_l: "FeatureSet"
+    features_r: "FeatureSet"
+    matches: "MatchSet"
+    depth: "DepthSet"
+
+
 class MatchSet(NamedTuple):
     """Stereo matches: one candidate per left feature."""
 

@@ -59,6 +59,9 @@ PARAM_RULES_FSDP_TP = _merge(PARAM_RULES_TP, {"embed": ("data",)})
 # Activations.
 ACT_RULES_BASE: dict = {
     "batch": ("pod", "data"),
+    # Fleet batching (core.pipeline.VisualSystem.process_fleet): the
+    # leading rig axis of a multi-rig frame batch is data-parallel.
+    "rig": ("pod", "data"),
     "seq": (),               # context-parallel knob rewires to ("model",)
     # Megatron-style sequence parallelism: the RESIDUAL STREAM (and the
     # saved per-layer activations) shard their seq dim over "model";
@@ -183,6 +186,20 @@ def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
     spec = resolve(ctx.rules.acts, axes, x.shape, ctx.mesh)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(ctx.mesh, spec))
+
+
+def shard_over(fn, mesh: Mesh, axis: str, arg_axis: int = 0):
+    """``shard_map`` a single-argument function over ONE named mesh
+    axis: dimension ``arg_axis`` of the argument is split across
+    ``axis`` and every output leaf keeps that axis as its leading
+    dimension.  Used by ``core.pipeline.VisualSystem`` to shard the
+    fleet rig axis; the per-device program is the unmodified fused
+    3-launch datapath."""
+    from jax.experimental.shard_map import shard_map
+
+    in_spec = PartitionSpec(*([None] * arg_axis + [axis]))
+    return shard_map(fn, mesh=mesh, in_specs=(in_spec,),
+                     out_specs=in_spec)
 
 
 def spec_for(axes: Sequence[str | None], shape: Sequence[int],

@@ -5,8 +5,18 @@ Every op takes ``impl``:
   - "pallas"  — Pallas kernel; on CPU it automatically runs in
                 interpret mode (the kernel body executed in Python),
                 on TPU it compiles to Mosaic.
-  - None      — module default (``set_default_impl`` / REPRO_KERNEL_IMPL
-                env var; "ref" on CPU, "pallas" on TPU).
+  - None      — the innermost ``use_impl`` context, else the process
+                default (``set_default_impl`` / REPRO_KERNEL_IMPL env
+                var), else "ref" on CPU and "pallas" on TPU.  Sessions
+                (``core.pipeline.VisualSystem``) resolve their impl
+                once from ``PipelineConfig`` and thread it explicitly.
+
+Impl scoping and the launch audit are both context-var based so
+parallel sessions (threads, concurrent test workers) never cross-talk:
+``use_impl`` scopes the default impl, and ``launch_audit()`` yields a
+counter that observes every Pallas launch traced inside its scope.
+``set_default_impl`` / ``reset_launch_count`` / ``launch_count`` are
+kept as legacy shims over the same machinery.
 
 The wrappers own all padding/unpadding so kernels see tile-aligned
 shapes and callers see exact shapes.
@@ -14,6 +24,8 @@ shapes and callers see exact shapes.
 
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import os
 
 import jax
@@ -40,44 +52,113 @@ from repro.kernels.sad_rectify import sad_search_pallas
 
 _DEFAULT_IMPL: str | None = os.environ.get("REPRO_KERNEL_IMPL") or None
 
-# Trace-time Pallas launch counter: each pallas-path dispatch below bumps
-# it once per kernel launch appearing in the traced graph.  Benchmarks
-# reset/read it around a trace (jax.eval_shape / jit tracing) to report
-# how many kernel launches a frontend schedule issues — the regression-
-# trackable "fused vs seed" number when wall-clock is noisy.
-_LAUNCH_COUNT = 0
+# Context-scoped impl override: ``use_impl`` installs a value here; the
+# context var is per-thread (new threads start from defaults), so scoped
+# overrides in one session/thread never leak into another.
+_IMPL_VAR: contextvars.ContextVar[str | None] = contextvars.ContextVar(
+    "repro_kernel_impl", default=None)
 
 
-def reset_launch_count() -> None:
-    global _LAUNCH_COUNT
-    _LAUNCH_COUNT = 0
+def _check_impl(impl: str | None) -> None:
+    if impl not in (None, "ref", "pallas"):
+        raise ValueError(
+            f"unknown kernel impl {impl!r} (expected 'ref' or 'pallas'; "
+            "check REPRO_KERNEL_IMPL)")
 
 
-def launch_count() -> int:
-    return _LAUNCH_COUNT
-
-
-def _count_launches(n: int = 1) -> None:
-    global _LAUNCH_COUNT
-    _LAUNCH_COUNT += n
+@contextlib.contextmanager
+def use_impl(impl: str | None):
+    """Scope the default kernel impl for the dynamic extent of the
+    ``with`` block (context-var based: thread-safe, re-entrant)."""
+    _check_impl(impl)
+    token = _IMPL_VAR.set(impl)
+    try:
+        yield
+    finally:
+        _IMPL_VAR.reset(token)
 
 
 def set_default_impl(impl: str | None) -> None:
+    """Legacy shim: set the PROCESS-WIDE default impl.  Prefer scoping
+    with ``use_impl`` or resolving once in a ``VisualSystem`` session —
+    this global is shared across threads."""
     global _DEFAULT_IMPL
-    assert impl in (None, "ref", "pallas")
+    _check_impl(impl)
     _DEFAULT_IMPL = impl
 
 
 def resolve_impl(impl: str | None) -> str:
     if impl is None:
+        impl = _IMPL_VAR.get()
+    if impl is None:
         impl = _DEFAULT_IMPL
     if impl is None:
         return "pallas" if jax.default_backend() == "tpu" else "ref"
-    if impl not in ("ref", "pallas"):
-        raise ValueError(
-            f"unknown kernel impl {impl!r} (expected 'ref' or 'pallas'; "
-            "check REPRO_KERNEL_IMPL)")
+    _check_impl(impl)
     return impl
+
+
+# Trace-time Pallas launch audit: each pallas-path dispatch below bumps
+# every active audit once per kernel launch appearing in the traced
+# graph.  Benchmarks and tests open a ``launch_audit()`` scope around a
+# trace (jax.eval_shape / jit tracing) to report how many kernel
+# launches a schedule issues — the regression-trackable "fused vs seed"
+# number when wall-clock is noisy.  Audits are context-var based so
+# parallel sessions (threads) count independently; the legacy
+# ``reset_launch_count`` / ``launch_count`` pair is a shim over a
+# per-context counter.
+class LaunchAudit:
+    """Counter bound to one ``launch_audit()`` scope."""
+
+    __slots__ = ("count",)
+
+    def __init__(self) -> None:
+        self.count = 0
+
+
+_AUDIT_STACK: contextvars.ContextVar[tuple[LaunchAudit, ...]] = \
+    contextvars.ContextVar("repro_launch_audits", default=())
+_LEGACY_AUDIT: contextvars.ContextVar[LaunchAudit | None] = \
+    contextvars.ContextVar("repro_launch_legacy", default=None)
+
+
+@contextlib.contextmanager
+def launch_audit():
+    """Yield a ``LaunchAudit`` whose ``.count`` observes every Pallas
+    launch traced inside the ``with`` block.  Scopes nest (an inner
+    audit also feeds enclosing ones) and are thread-isolated."""
+    audit = LaunchAudit()
+    token = _AUDIT_STACK.set(_AUDIT_STACK.get() + (audit,))
+    try:
+        yield audit
+    finally:
+        _AUDIT_STACK.reset(token)
+
+
+def _legacy_audit() -> LaunchAudit:
+    audit = _LEGACY_AUDIT.get()
+    if audit is None:
+        audit = LaunchAudit()
+        _LEGACY_AUDIT.set(audit)
+    return audit
+
+
+def reset_launch_count() -> None:
+    """Legacy shim over the per-context counter; prefer
+    ``launch_audit()``."""
+    _legacy_audit().count = 0
+
+
+def launch_count() -> int:
+    """Legacy shim over the per-context counter; prefer
+    ``launch_audit()``."""
+    return _legacy_audit().count
+
+
+def _count_launches(n: int = 1) -> None:
+    _legacy_audit().count += n
+    for audit in _AUDIT_STACK.get():
+        audit.count += n
 
 
 def _interpret() -> bool:

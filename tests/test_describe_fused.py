@@ -141,14 +141,16 @@ def test_extractor_two_launches_per_frame(rng):
     from repro.core import extract_features_per_level
     imgs = _imgs(rng, 4, 96, 128)
     cfg = ORBConfig(height=96, width=128, max_features=48, n_levels=2)
-    ops.reset_launch_count()
-    jax.eval_shape(
-        lambda im: extract_features_batched(im, cfg, impl="pallas"), imgs)
-    assert ops.launch_count() == 2
-    ops.reset_launch_count()
-    jax.eval_shape(
-        lambda im: extract_features_per_level(im, cfg, impl="pallas"), imgs)
-    assert ops.launch_count() == 2 * cfg.n_levels
+    with ops.launch_audit() as audit:
+        jax.eval_shape(
+            lambda im: extract_features_batched(im, cfg, impl="pallas"),
+            imgs)
+    assert audit.count == 2
+    with ops.launch_audit() as audit:
+        jax.eval_shape(
+            lambda im: extract_features_per_level(im, cfg, impl="pallas"),
+            imgs)
+    assert audit.count == 2 * cfg.n_levels
 
 
 def test_detect_theta_pinned_to_batched_path(rng):

@@ -1,12 +1,15 @@
-"""Frame-multiplexed pipeline tests (paper Sec. III-B, Fig. 4)."""
+"""Frame-multiplexed pipeline tests (paper Sec. III-B, Fig. 4) on the
+``VisualSystem`` session API: schedule equivalence, quad-frame pair
+coverage, degenerate sequence lengths, and the analytic Fig. 4
+timeline."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core import (CameraIntrinsics, ORBConfig, pipeline_schedule,
-                        process_quad_frame, run_sequence,
-                        run_sequence_pipelined)
+from repro.core import (ORBConfig, PipelineConfig, RigConfig, VisualSystem,
+                        pipeline_schedule)
 from repro.data import scenes
 
 
@@ -18,12 +21,17 @@ def _sequence(t=3):
     return frames, ocfg, intr
 
 
+def _system(ocfg, intr, schedule="sequential"):
+    return VisualSystem(RigConfig.quad(intr),
+                        PipelineConfig(orb=ocfg, schedule=schedule))
+
+
 def test_pipelined_equals_reference_schedule():
     """Fig. 4 pipelining is a schedule change, not a math change: the
     pipelined sequence must produce identical per-frame outputs."""
     frames, ocfg, intr = _sequence(3)
-    a = run_sequence(frames, ocfg, intr)
-    b = run_sequence_pipelined(frames, ocfg, intr)
+    a = _system(ocfg, intr, "sequential").run(frames)
+    b = _system(ocfg, intr, "pipelined").run(frames)
     for fa, fb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
         fa, fb = np.asarray(fa), np.asarray(fb)
         if np.issubdtype(fa.dtype, np.floating):
@@ -33,14 +41,48 @@ def test_pipelined_equals_reference_schedule():
             np.testing.assert_array_equal(fa, fb)
 
 
+def test_pipelined_single_frame_sequence():
+    """T == 1 degenerates to prologue + drain (an empty scan) and must
+    equal the sequential schedule — the old implementation's bubble
+    accounting was only exercised for T >= 2."""
+    frames, ocfg, intr = _sequence(1)
+    a = _system(ocfg, intr, "sequential").run(frames)
+    b = _system(ocfg, intr, "pipelined").run(frames)
+    assert b.matches.valid.shape[0] == 1
+    for fa, fb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(fa), np.asarray(fb),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_empty_sequence_raises_clear_error():
+    """T == 0 must fail eagerly with a clear ValueError (the old path
+    died on a bare in-trace assert), on both schedules."""
+    frames, ocfg, intr = _sequence(1)
+    empty = frames[:0]
+    for schedule in ("sequential", "pipelined"):
+        with pytest.raises(ValueError, match="empty sequence"):
+            _system(ocfg, intr, schedule).run(empty)
+
+
 def test_quad_frame_processes_both_pairs():
     frames, ocfg, intr = _sequence(1)
-    out = process_quad_frame(frames[0], ocfg, intr)
+    out = _system(ocfg, intr).process_frame(frames[0])
     assert out.matches.valid.shape[0] == 2      # two stereo pairs
     v = np.asarray(out.depth.valid)
     assert v.shape[0] == 2
     assert v[0].sum() > 0 and v[1].sum() > 0    # 360-degree coverage: both
                                                 # hemispheres yield depth
+
+
+def test_frame_shape_validation_errors():
+    frames, ocfg, intr = _sequence(1)
+    vs = _system(ocfg, intr)
+    with pytest.raises(ValueError, match="rank-3"):
+        vs.process_frame(frames)                # (T, 4, H, W): too many dims
+    with pytest.raises(ValueError, match="4 cameras"):
+        vs.process_frame(frames[0, :2])         # camera axis mismatch
+    with pytest.raises(ValueError, match="does not match"):
+        vs.process_frame(frames[0, :, :64, :])  # H/W vs ORBConfig
 
 
 def test_pipeline_schedule_steady_state_period():

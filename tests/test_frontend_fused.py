@@ -127,21 +127,20 @@ def test_extract_features_batched_matches_per_image(rng):
 
 
 def test_quad_frame_two_fused_launches_per_frame(rng):
-    """Acceptance: process_quad_frame issues exactly TWO fused FE
-    launches per FRAME for all 4 cameras x all pyramid levels (1 dense
+    """Acceptance: a session frame issues exactly TWO fused FE launches
+    per FRAME for all 4 cameras x all pyramid levels (1 dense
     blur+FAST+NMS + 1 sparse orientation+rBRIEF) — not per level, not
     per camera per op, and no host-graph descriptor gathers."""
-    from repro.core import CameraIntrinsics, process_quad_frame
+    from repro.core import (CameraIntrinsics, PipelineConfig, RigConfig,
+                            VisualSystem)
     imgs = _imgs(rng, 4, 64, 96)
     cfg = ORBConfig(height=64, width=96, max_features=16, n_levels=2,
                     max_disparity=32)
     intr = CameraIntrinsics(cx=48.0, cy=32.0)
-    ops.reset_launch_count()
-    jax.eval_shape(
-        lambda f: process_quad_frame(f, cfg, intr, impl="pallas"), imgs)
+    vs = VisualSystem(RigConfig.quad(intr), PipelineConfig(orb=cfg))
     # 2 fused FE launches per frame; FM adds ONE fused matcher launch
     # covering both stereo pairs (the pair axis lives in the grid).
-    assert ops.launch_count() == 2 + 1
+    assert vs.traced_launches("process_frame", imgs) == 2 + 1
 
 
 def test_build_pyramid_batched_matches_single(rng):

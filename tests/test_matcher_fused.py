@@ -10,7 +10,7 @@ both the jnp fallback and the Pallas interpret path — including 640x480
 and odd shapes, all-invalid features and argmin ties.  The
 ``_gather_patches`` border clamp is audited against a python-loop
 per-pixel oracle (``ref.gather_patches_bruteforce``), and a traced
-``process_quad_frame`` pins the 3-launch budget (2 FE + 1 FM).
+``VisualSystem.process_frame`` pins the 3-launch budget (2 FE + 1 FM).
 
 Deterministic parametrized pins run everywhere; the Hypothesis property
 suite (random K/M/pair counts) runs where hypothesis is installed (CI)
@@ -23,10 +23,9 @@ import numpy as np
 import pytest
 
 from repro.core import (CameraIntrinsics, FeatureSet, ORBConfig,
+                        PipelineConfig, RigConfig, VisualSystem,
                         match_pair_fused, match_pair_unfused,
-                        process_quad_frame, sad_rectify,
-                        sad_rectify_unfused, stereo_match,
-                        stereo_match_unfused, temporal_match)
+                        sad_rectify_unfused, stereo_match_unfused)
 from repro.core.matching import _gather_patches
 from repro.kernels import ops, ref
 
@@ -35,6 +34,12 @@ try:
     HAVE_HYPOTHESIS = True
 except ImportError:          # dev-only dep; property tests skip
     HAVE_HYPOTHESIS = False
+
+
+def _system(cfg, intr=None, impl=None):
+    intr = intr if intr is not None else CameraIntrinsics()
+    return VisualSystem(RigConfig.stereo(intr),
+                        PipelineConfig(orb=cfg, impl=impl))
 
 
 def _random_features(rng, k, h, w, n_levels=2, valid_frac=0.8):
@@ -154,7 +159,7 @@ def test_fused_tie_breaks_to_lowest_right_index():
     cfg = ORBConfig(height=h, width=w, row_band=100, max_disparity=300,
                     max_hamming=256)
     for impl in ("ref", "pallas"):
-        got = stereo_match(fl, fr, cfg, impl=impl)
+        got = _system(cfg, impl=impl).stereo_match(fl, fr)
         want = stereo_match_unfused(fl, fr, cfg, impl="ref")
         np.testing.assert_array_equal(np.asarray(got.right_index),
                                       np.asarray(want.right_index),
@@ -173,7 +178,7 @@ def test_stereo_match_fused_equals_unfused():
         fr = _random_features(rng, m, 96, 144)
         want = stereo_match_unfused(fl, fr, cfg, impl="ref")
         for impl in ("ref", "pallas"):
-            got = stereo_match(fl, fr, cfg, impl=impl)
+            got = _system(cfg, impl=impl).stereo_match(fl, fr)
             for f in want._fields:
                 np.testing.assert_array_equal(
                     np.asarray(getattr(got, f)),
@@ -200,12 +205,12 @@ def test_sad_rectify_in_kernel_equals_unfused():
     xy[:4] = [[0.0, 0.0], [w - 1.0, h - 1.0], [-5.3, h / 2.0],
               [w / 2.0, h + 4.9]]
     fl = fl._replace(xy=jnp.asarray(xy))
-    matches = stereo_match(fl, fr, cfg)
+    matches = _system(cfg).stereo_match(fl, fr)
     want = sad_rectify_unfused(img_l, img_r, fl, fr, matches, cfg, intr,
                                impl="ref")
     for impl in ("ref", "pallas"):
-        got = sad_rectify(img_l, img_r, fl, fr, matches, cfg, intr,
-                          impl=impl)
+        got = _system(cfg, intr, impl=impl).sad_rectify(
+            img_l, img_r, fl, fr, matches)
         for f in want._fields:
             np.testing.assert_array_equal(np.asarray(getattr(got, f)),
                                           np.asarray(getattr(want, f)),
@@ -296,8 +301,9 @@ def test_temporal_match_asymmetric_radii_vs_bruteforce(rx, ry):
     want_valid = ((want_i >= 0) & (want_d <= cfg.max_hamming)
                   & np.asarray(fa.valid))
     for impl in ("ref", "pallas"):
-        tm = temporal_match(fa, fb, cfg, search_radius=rx,
-                            search_radius_y=ry, impl=impl)
+        tm = _system(cfg, impl=impl).temporal_match(fa, fb,
+                                                    search_radius=rx,
+                                                    search_radius_y=ry)
         np.testing.assert_array_equal(np.asarray(tm.distance), want_d,
                                       err_msg=impl)
         np.testing.assert_array_equal(np.asarray(tm.valid), want_valid,
@@ -313,10 +319,10 @@ def test_temporal_match_single_launch():
     cfg = ORBConfig(height=96, width=144)
     fa = _random_features(rng, 30, 96, 144)
     fb = _random_features(rng, 30, 96, 144)
-    ops.reset_launch_count()
-    jax.eval_shape(lambda a, b: temporal_match(a, b, cfg, impl="pallas"),
-                   fa, fb)
-    assert ops.launch_count() == 1
+    vs = _system(cfg, impl="pallas")
+    with ops.launch_audit() as audit:
+        vs.temporal_match(fa, fb)    # first call: traces under the audit
+    assert audit.count == 1
 
 
 # ---------------------------------------------------------------------------
@@ -332,16 +338,10 @@ def test_quad_frame_three_launches():
     rng = np.random.RandomState(53)
     imgs = jnp.asarray(rng.randint(0, 256, (4, 64, 96))
                        .astype(np.float32))
-    ops.reset_launch_count()
-    jax.eval_shape(
-        lambda f: process_quad_frame(f, cfg, intr, impl="pallas"), imgs)
-    assert ops.launch_count() == 3
+    vs = VisualSystem(RigConfig.quad(intr), PipelineConfig(orb=cfg))
+    assert vs.traced_launches("process_frame", imgs) == 3
     # and the fused FM itself is exactly ONE of those launches
-    from repro.core import extract_features_batched
-    ops.reset_launch_count()
-    jax.eval_shape(
-        lambda im: extract_features_batched(im, cfg, impl="pallas"), imgs)
-    assert ops.launch_count() == 2
+    assert vs.traced_launches("extract", imgs) == 2
 
 
 # ---------------------------------------------------------------------------

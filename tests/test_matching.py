@@ -1,18 +1,32 @@
-"""Stereo matching + SAD rectification behaviour (paper Sec. II-C),
-plus brute-force numpy oracle pins for the matcher ops: the jnp path
-and the Pallas kernels of ``ops.hamming_match`` / ``ops.sad_search``
-are both pinned against the python-loop references in ``kernels.ref``,
-and ``temporal_match`` / ``sad_rectify`` get dedicated oracle tests."""
+"""Stereo matching + SAD rectification behaviour (paper Sec. II-C) on
+the ``VisualSystem`` session API, plus brute-force numpy oracle pins
+for the matcher ops: the jnp path and the Pallas kernels of
+``ops.hamming_match`` / ``ops.sad_search`` are both pinned against the
+python-loop references in ``kernels.ref``, and the session's
+``temporal_match`` / ``sad_rectify`` get dedicated oracle tests."""
 
 import jax.numpy as jnp
 import numpy as np
 
+import jax
+
 from repro.core import (CameraIntrinsics, FeatureSet, ORBConfig,
-                        extract_features, process_stereo_frame,
-                        sad_rectify, stereo_match, temporal_match)
+                        PipelineConfig, RigConfig, VisualSystem,
+                        extract_features)
 from repro.data import scenes
 from repro.kernels import ops, ref
 from repro.kernels.hamming_match import BIG
+
+
+def _system(cfg, intr=None, impl=None):
+    intr = intr if intr is not None else CameraIntrinsics()
+    return VisualSystem(RigConfig.stereo(intr),
+                        PipelineConfig(orb=cfg, impl=impl))
+
+
+def _stereo_frame(vs, img_l, img_r):
+    out = vs.process_frame(jnp.stack([img_l, img_r]))
+    return jax.tree.map(lambda x: x[0], out)
 
 
 def _stereo_pair(disparity=12, h=128, w=192, seed=1):
@@ -34,7 +48,7 @@ def test_stereo_match_recovers_uniform_disparity():
     cfg = ORBConfig(height=128, width=192, max_features=64, n_levels=1,
                     max_disparity=32)
     intr = CameraIntrinsics(fx=140.0, baseline=0.12)
-    out = process_stereo_frame(left, right, cfg, intr)
+    out = _stereo_frame(_system(cfg, intr), left, right)
     v = np.asarray(out.depth.valid)
     assert v.sum() >= 5
     d = np.asarray(out.depth.disparity)[v]
@@ -51,15 +65,16 @@ def test_sad_rectification_fixes_coarse_match():
     cfg = ORBConfig(height=128, width=192, max_features=64, n_levels=1,
                     max_disparity=32, sad_range=4)
     intr = CameraIntrinsics(fx=140.0, baseline=0.12)
+    vs = _system(cfg, intr)
     feat_l = extract_features(left, cfg)
     feat_r = extract_features(right, cfg)
-    matches = stereo_match(feat_l, feat_r, cfg)
+    matches = vs.stereo_match(feat_l, feat_r)
     # corrupt the right feature coordinates before rectification
     rng = np.random.RandomState(0)
     offs = rng.randint(-2, 3, feat_r.xy.shape[0]).astype(np.float32)
     feat_r_bad = feat_r._replace(
         xy=feat_r.xy.at[:, 0].add(jnp.asarray(offs)))
-    depth = sad_rectify(left, right, feat_l, feat_r_bad, matches, cfg, intr)
+    depth = vs.sad_rectify(left, right, feat_l, feat_r_bad, matches)
     v = np.asarray(depth.valid)
     assert v.sum() >= 5
     d = np.asarray(depth.disparity)[v]
@@ -76,7 +91,7 @@ def test_matching_on_rendered_scene_has_depth_ground_truth():
     frames, poses, intr = scenes.render_sequence(cfg, 1)
     ocfg = ORBConfig(height=120, width=160, max_features=128, n_levels=1,
                      max_disparity=64)
-    out = process_stereo_frame(frames[0, 0], frames[0, 1], ocfg, intr)
+    out = _stereo_frame(_system(ocfg, intr), frames[0, 0], frames[0, 1])
     v = np.asarray(out.depth.valid)
     assert v.sum() >= 10
     z = np.asarray(out.depth.depth)[v]
@@ -174,7 +189,8 @@ def test_temporal_match_pinned_to_bruteforce():
     want_valid = ((want_i >= 0) & (want_d <= cfg.max_hamming)
                   & np.asarray(fa.valid))
     for impl in ("ref", "pallas"):
-        tm = temporal_match(fa, fb, cfg, search_radius=radius, impl=impl)
+        tm = _system(cfg, impl=impl).temporal_match(fa, fb,
+                                                    search_radius=radius)
         np.testing.assert_array_equal(np.asarray(tm.distance), want_d,
                                       err_msg=impl)
         np.testing.assert_array_equal(np.asarray(tm.valid), want_valid,
@@ -203,7 +219,7 @@ def test_sad_rectify_pinned_to_bruteforce():
     img_r = rng.randint(0, 256, (h, w)).astype(np.float32)
     fl = _random_features(rng, 19, h=h, w=w)
     fr = _random_features(rng, 23, h=h, w=w)
-    matches = stereo_match(fl, fr, cfg)
+    matches = _system(cfg).stereo_match(fl, fr)
 
     p, r = cfg.sad_window, cfg.sad_range
 
@@ -229,8 +245,8 @@ def test_sad_rectify_pinned_to_bruteforce():
                      intr.fx * intr.baseline / np.maximum(disparity, 0.5),
                      0.0)
     for impl in ("ref", "pallas"):
-        got = sad_rectify(jnp.asarray(img_l), jnp.asarray(img_r),
-                          fl, fr, matches, cfg, intr, impl=impl)
+        got = _system(cfg, intr, impl=impl).sad_rectify(
+            jnp.asarray(img_l), jnp.asarray(img_r), fl, fr, matches)
         np.testing.assert_array_equal(np.asarray(got.valid), valid,
                                       err_msg=impl)
         np.testing.assert_array_equal(
@@ -247,10 +263,10 @@ def test_sad_rectify_pinned_to_bruteforce():
 def test_temporal_match_finds_same_features():
     left, _ = _stereo_pair(8)
     cfg = ORBConfig(height=128, width=192, max_features=64, n_levels=1)
+    vs = _system(cfg)
     f = extract_features(left, cfg)
-    m = stereo_match(f, f, cfg)  # self stereo-match: dx == 0 allowed
-    from repro.core import temporal_match
-    tm = temporal_match(f, f, cfg)
+    m = vs.stereo_match(f, f)  # self stereo-match: dx == 0 allowed
+    tm = vs.temporal_match(f, f)
     v = np.asarray(tm.valid)
     idx = np.asarray(tm.right_index)
     # every valid feature self-matches at distance 0; identically-stamped

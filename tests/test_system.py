@@ -1,17 +1,29 @@
-"""End-to-end system tests: synthetic quad-camera scene -> frontend ->
-backend -> trajectory, plus the paper's accuracy methodology (Tab. III:
-quantized/kernel path vs float oracle on the same frames)."""
+"""End-to-end system tests on the session API: synthetic quad-camera
+scene -> frontend -> backend -> trajectory, plus the paper's accuracy
+methodology (Tab. III: quantized/kernel path vs float oracle on the
+same frames)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CameraIntrinsics, ORBConfig, backend,
-                        process_stereo_frame, temporal_match)
+from repro.core import (CameraIntrinsics, ORBConfig, PipelineConfig,
+                        RigConfig, VisualSystem, backend)
 from repro.data import scenes
 
 
 _FLIP = jnp.asarray([[-1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, -1.0]])
+
+
+def _stereo_system(ocfg, intr, impl=None):
+    return VisualSystem(RigConfig.stereo(intr),
+                        PipelineConfig(orb=ocfg, impl=impl))
+
+
+def _stereo_frame(vs, img_l, img_r):
+    """2-camera session frame, pair axis dropped (legacy shape)."""
+    out = vs.process_frame(jnp.stack([img_l, img_r]))
+    return jax.tree.map(lambda x: x[0], out)
 
 
 def _run_vo(frames, ocfg, intr, z_max=10.0):
@@ -24,14 +36,15 @@ def _run_vo(frames, ocfg, intr, z_max=10.0):
     solved on the fused cloud with flat weights (the estimator's median
     gating handles outliers; 1/z^2 weighting would bias the scale toward
     the sparse near field)."""
-    outs = [process_stereo_frame(f[0], f[1], ocfg, intr) for f in frames]
-    outs_b = [process_stereo_frame(f[2], f[3], ocfg, intr) for f in frames]
+    vs = _stereo_system(ocfg, intr)
+    outs = [_stereo_frame(vs, f[0], f[1]) for f in frames]
+    outs_b = [_stereo_frame(vs, f[2], f[3]) for f in frames]
     poses = []
     for t in range(len(frames) - 1):
         pts, pts_n, w = [], [], []
         for seq, rot in ((outs, jnp.eye(3)), (outs_b, _FLIP)):
             prev, curr = seq[t], seq[t + 1]
-            tm = temporal_match(prev.features_l, curr.features_l, ocfg)
+            tm = vs.temporal_match(prev.features_l, curr.features_l)
             idx = tm.right_index
             wk = (tm.valid & prev.depth.valid
                   & curr.depth.valid[idx]).astype(jnp.float32)
@@ -77,15 +90,15 @@ def test_visual_odometry_never_fails_claim():
         cfg, 3, step_t=(0.0, 0.0, 0.05), yaw_per_frame=0.06)
     ocfg = ORBConfig(height=120, width=160, max_features=160, n_levels=1,
                      max_disparity=48)
-    from repro.core import process_quad_frame
-    prev = process_quad_frame(frames[0], ocfg, intr)
+    vs = VisualSystem(RigConfig.quad(intr), PipelineConfig(orb=ocfg))
+    prev = vs.process_frame(frames[0])
     for t in range(1, 3):
-        curr = process_quad_frame(frames[t], ocfg, intr)
+        curr = vs.process_frame(frames[t])
         per_pair = []
         for pair in (0, 1):
             fp = jax.tree.map(lambda x: x[pair], prev.features_l)
             fc = jax.tree.map(lambda x: x[pair], curr.features_l)
-            tm = temporal_match(fp, fc, ocfg)
+            tm = vs.temporal_match(fp, fc)
             per_pair.append(int(tm.count()))
         assert max(per_pair) >= 10, per_pair
         prev = curr
@@ -100,11 +113,11 @@ def test_tab3_methodology_hardware_vs_software_counts():
     frames, _, intr = scenes.render_sequence(cfg, 2)
     ocfg = ORBConfig(height=120, width=160, max_features=160, n_levels=2,
                      max_disparity=48)
+    vs_hw = _stereo_system(ocfg, intr, impl="pallas")
+    vs_sw = _stereo_system(ocfg, intr, impl="ref")
     for t in range(2):
-        hw = process_stereo_frame(frames[t, 0], frames[t, 1], ocfg, intr,
-                                  impl="pallas")
-        sw = process_stereo_frame(frames[t, 0], frames[t, 1], ocfg, intr,
-                                  impl="ref")
+        hw = _stereo_frame(vs_hw, frames[t, 0], frames[t, 1])
+        sw = _stereo_frame(vs_sw, frames[t, 0], frames[t, 1])
         assert int(hw.features_l.count()) == int(sw.features_l.count())
         assert int(hw.matches.count()) == int(sw.matches.count())
         assert int(hw.depth.count()) == int(sw.depth.count())
@@ -122,8 +135,10 @@ def test_word_length_ablation_counts_stay_close():
                 max_disparity=48)
     q = ORBConfig(quantized=True, **base)
     f = ORBConfig(quantized=False, **base)
-    out_q = process_stereo_frame(frames[0, 0], frames[0, 1], q, intr)
-    out_f = process_stereo_frame(frames[0, 0], frames[0, 1], f, intr)
+    out_q = _stereo_frame(_stereo_system(q, intr), frames[0, 0],
+                          frames[0, 1])
+    out_f = _stereo_frame(_stereo_system(f, intr), frames[0, 0],
+                          frames[0, 1])
     # rounding shifts which near-threshold corners fire -> counts move,
     # but matching efficacy (matches / features) must be preserved.
     nf_q, nf_f = int(out_q.features_l.count()), int(out_f.features_l.count())

@@ -1,0 +1,305 @@
+"""`VisualSystem` session API tests: fleet-vs-loop bit-exactness (ref
+AND pallas-interpret, n_rigs in {1, 3}, odd shapes), the 3-launch fleet
+budget, jit-cache retrace accounting, the per-frame desync check,
+config validation, shard_map'd fleets, heterogeneous per-pair
+intrinsics, and the context-var impl / launch-audit isolation."""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CameraIntrinsics, DesyncError, ORBConfig,
+                        PipelineConfig, RigConfig, VisualSystem)
+from repro.distributed import sharding
+from repro.kernels import ops
+
+
+def _imgs(seed, *shape):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(0, 256, shape).astype(np.float32))
+
+
+def _quad(h=64, w=96, impl=None, **pipe_kw):
+    ocfg = ORBConfig(height=h, width=w, max_features=16, n_levels=2,
+                     max_disparity=32)
+    intr = CameraIntrinsics(cx=w / 2.0, cy=h / 2.0)
+    return VisualSystem(RigConfig.quad(intr),
+                        PipelineConfig(orb=ocfg, impl=impl, **pipe_kw))
+
+
+def _assert_tree_equal(a, b, msg=""):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# Fleet batching: bit-exact vs the per-rig loop, 3 launches total.
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("n_rigs,h,w", [(1, 64, 96), (3, 59, 85)])
+def test_fleet_equals_per_rig_loop(impl, n_rigs, h, w):
+    """process_fleet folds the rig axis into the kernels' camera/pair
+    batch axes; every rig's slice must equal its own process_frame,
+    bit for bit, on both impls and odd shapes."""
+    vs = _quad(h, w, impl=impl)
+    fleet = _imgs(100 + n_rigs, n_rigs, 4, h, w)
+    out = vs.process_fleet(fleet)
+    assert out.matches.valid.shape[:2] == (n_rigs, 2)
+    for r in range(n_rigs):
+        want = vs.process_frame(fleet[r])
+        got = jax.tree.map(lambda x: x[r], out)
+        _assert_tree_equal(got, want, f"rig {r} impl {impl}")
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_run_fleet_equals_stacked_fleet_frames(impl):
+    vs = _quad(impl=impl)
+    frames = _imgs(7, 3, 2, 4, 64, 96)       # (T=3, n_rigs=2, 4, H, W)
+    outs = vs.run_fleet(frames)
+    assert outs.matches.valid.shape[:3] == (3, 2, 2)
+    for t in range(3):
+        want = vs.process_fleet(frames[t])
+        got = jax.tree.map(lambda x: x[t], outs)
+        _assert_tree_equal(got, want, f"t {t} impl {impl}")
+
+
+def test_fleet_frame_is_three_launches():
+    """Acceptance: an N-rig fleet frame costs exactly 3 traced kernel
+    launches (1 dense FE + 1 sparse FE + 1 fused FM) — the same budget
+    as a single rig, for any fleet size."""
+    vs = _quad()
+    for n_rigs in (1, 2, 5):
+        fleet = _imgs(5, n_rigs, 4, 64, 96)
+        assert vs.traced_launches("process_fleet", fleet) == 3, n_rigs
+    assert vs.traced_launches("process_frame", _imgs(6, 4, 64, 96)) == 3
+
+
+def test_pipelined_fleet_schedule_matches_sequential():
+    frames = _imgs(8, 3, 2, 4, 64, 96)
+    a = _quad(schedule="sequential").run_fleet(frames)
+    b = _quad(schedule="pipelined").run_fleet(frames)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Jit cache: entry points trace once per shape, zero retraces after.
+
+def test_process_frame_retraces_zero_times():
+    vs = _quad()
+    imgs = _imgs(9, 4, 64, 96)
+    for _ in range(3):
+        vs.process_frame(imgs)
+    assert vs.trace_count("process_frame") == 1
+    # a NEW fleet shape traces once; repeats hit the cache
+    for n in (2, 2, 2, 3):
+        vs.process_fleet(_imgs(10, n, 4, 64, 96))
+    assert vs.trace_count("process_fleet") == 2
+    # other entry points are cached independently
+    vs.extract(imgs)
+    vs.extract(imgs)
+    assert vs.trace_count("extract") == 1
+    assert vs.trace_count("process_frame") == 1
+
+
+# ---------------------------------------------------------------------------
+# Sync policy: hardware asserts zero desync, software reports jitter.
+
+def test_hardware_rig_accepts_trigger_tags_and_rejects_jitter():
+    vs = _quad()
+    imgs = _imgs(11, 4, 64, 96)
+    vs.process_frame(imgs, timestamps=[2.5, 2.5, 2.5, 2.5])
+    assert list(vs.desync_log) == [0.0]
+    with pytest.raises(DesyncError, match="trigger"):
+        vs.process_frame(imgs, timestamps=[2.5, 2.504, 2.5, 2.5])
+    assert len(vs.desync_log) == 2 and vs.desync_log[1] > 0.0
+
+
+def test_software_rig_reports_jitter_without_raising():
+    ocfg = ORBConfig(height=64, width=96, max_features=16, n_levels=2,
+                     max_disparity=32)
+    rig = RigConfig.quad(CameraIntrinsics(cx=48.0, cy=32.0),
+                         sync_policy="software")
+    vs = VisualSystem(rig, PipelineConfig(orb=ocfg))
+    imgs = _imgs(12, 4, 64, 96)
+    out = vs.process_frame(imgs, timestamps=[1.0, 1.004, 1.0, 1.001])
+    assert out.matches.valid.shape[0] == 2
+    assert len(vs.desync_log) == 1
+    assert 3e-3 < vs.desync_log[0] < 5e-3
+
+
+def test_hardware_rig_with_tolerance_accepts_small_desync():
+    ocfg = ORBConfig(height=64, width=96, max_features=16, n_levels=2,
+                     max_disparity=32)
+    rig = RigConfig.quad(CameraIntrinsics(cx=48.0, cy=32.0),
+                         max_desync=5e-3)
+    vs = VisualSystem(rig, PipelineConfig(orb=ocfg))
+    vs.process_frame(_imgs(13, 4, 64, 96),
+                     timestamps=[1.0, 1.004, 1.0, 1.0])
+    with pytest.raises(DesyncError):
+        vs.process_frame(_imgs(13, 4, 64, 96),
+                         timestamps=[1.0, 1.006, 1.0, 1.0])
+
+
+def test_desync_check_keeps_float64_resolution_at_epoch_scale():
+    """Real capture stamps are epoch seconds (~1.75e9), where float32
+    spacing is 128 s — the check must stay in float64 or a 0.5 s
+    desync would silently read as 0."""
+    vs = _quad()
+    t0 = 1.7537e9
+    with pytest.raises(DesyncError):
+        vs.process_frame(_imgs(15, 4, 64, 96),
+                         timestamps=[t0, t0 + 0.5, t0, t0])
+    assert abs(vs.desync_log[-1] - 0.5) < 1e-6
+
+
+def test_desync_check_validates_timestamp_count():
+    vs = _quad()
+    with pytest.raises(ValueError, match="timestamps"):
+        vs.process_frame(_imgs(14, 4, 64, 96), timestamps=[1.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# Config validation.
+
+def test_rig_config_validation():
+    with pytest.raises(ValueError, match="outside"):
+        RigConfig(n_cameras=2, pairs=((0, 2),))
+    with pytest.raises(ValueError, match="twice"):
+        RigConfig(n_cameras=2, pairs=((1, 1),))
+    with pytest.raises(ValueError, match="at least one"):
+        RigConfig(n_cameras=2, pairs=())
+    with pytest.raises(ValueError, match="intrinsics"):
+        RigConfig(n_cameras=4, intrinsics=(CameraIntrinsics(),) * 3)
+    with pytest.raises(ValueError, match="sync_policy"):
+        RigConfig(sync_policy="gps")
+    # single intrinsics broadcast to every camera
+    rig = RigConfig.quad(CameraIntrinsics(fx=111.0))
+    assert len(rig.intrinsics) == 4
+    assert rig.homogeneous_intrinsics
+    assert rig.sync.n_cameras == 4
+    assert rig.left_cams == (0, 2) and rig.right_cams == (1, 3)
+
+
+def test_pipeline_config_validation():
+    with pytest.raises(ValueError, match="schedule"):
+        PipelineConfig(schedule="async")
+    with pytest.raises(ValueError, match="impl"):
+        PipelineConfig(impl="cuda")
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-pair intrinsics: depth scales with the pair's
+# fx * baseline.
+
+def test_heterogeneous_intrinsics_scale_depth_per_pair():
+    h, w = 64, 96
+    ocfg = ORBConfig(height=h, width=w, max_features=16, n_levels=1,
+                     max_disparity=32)
+    base = CameraIntrinsics(cx=w / 2.0, cy=h / 2.0, baseline=0.1)
+    wide = CameraIntrinsics(cx=w / 2.0, cy=h / 2.0, baseline=0.2)
+    rig = RigConfig(n_cameras=4, pairs=((0, 1), (2, 3)),
+                    intrinsics=(base, base, wide, wide))
+    assert not rig.homogeneous_intrinsics
+    vs = VisualSystem(rig, PipelineConfig(orb=ocfg))
+    # both pairs see the SAME stereo scene (right = left shifted 8 px ->
+    # uniform disparity) -> identical disparities; the back pair's
+    # doubled baseline must double its depths.
+    left = np.full((h, w), 40.0, np.float32)
+    rng = np.random.RandomState(21)
+    for _ in range(10):
+        y, x = rng.randint(18, h - 24), rng.randint(26, w - 24)
+        left[y:y + 5, x:x + 5] = rng.uniform(150, 250)
+    right = np.roll(left, -8, axis=1)
+    right[:, -8:] = 40.0
+    pair = jnp.asarray(np.stack([left, right]))
+    imgs = jnp.concatenate([pair, pair])
+    out = vs.process_frame(imgs)
+    v = np.asarray(out.depth.valid)
+    assert v[0].sum() >= 3
+    np.testing.assert_array_equal(v[0], v[1])
+    d0 = np.asarray(out.depth.depth)[0][v[0]]
+    d1 = np.asarray(out.depth.depth)[1][v[1]]
+    np.testing.assert_allclose(d1, 2.0 * d0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# shard_map'd fleet over a mesh (1-device CPU mesh in CI).
+
+def test_sharded_fleet_matches_unsharded():
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("rig",))
+    want_vs = _quad(impl="ref")
+    shard_vs = _quad(impl="ref", rig_shard_axis="rig")
+    fleet = _imgs(22, 2, 4, 64, 96)
+    want = want_vs.process_fleet(fleet)
+    with sharding.use_sharding(mesh, sharding.Rules.make()):
+        got = shard_vs.process_fleet(fleet)
+        seq = shard_vs.run_fleet(_imgs(23, 2, 2, 4, 64, 96))
+    _assert_tree_equal(got, want, "sharded process_fleet")
+    assert seq.matches.valid.shape[:3] == (2, 2, 2)
+    # outside the mesh context the same session falls back to plain jit
+    _assert_tree_equal(shard_vs.process_fleet(fleet), want, "fallback")
+
+
+# ---------------------------------------------------------------------------
+# Context isolation: parallel sessions audit/resolve independently.
+
+def test_launch_audit_threads_do_not_cross_talk():
+    cfg = ORBConfig(height=64, width=96, max_features=16, n_levels=2,
+                    max_disparity=32)
+    imgs = _imgs(24, 4, 64, 96)
+    intr = CameraIntrinsics(cx=48.0, cy=32.0)
+    counts = {}
+
+    def worker(name, n_repeats):
+        vs = VisualSystem(RigConfig.quad(intr), PipelineConfig(orb=cfg))
+        with ops.launch_audit() as audit:
+            for _ in range(n_repeats):
+                jax.eval_shape(lambda im: vs._frame_core(im, "pallas"),
+                               imgs)
+        counts[name] = audit.count
+
+    threads = [threading.Thread(target=worker, args=("a", 1)),
+               threading.Thread(target=worker, args=("b", 3))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert counts == {"a": 3, "b": 9}
+
+
+def test_session_impl_resolved_at_construction():
+    """A session pins its kernel impl when BUILT (None -> the ambient
+    context / backend default), so later context flips can't silently
+    miss its jit cache."""
+    vs = _quad()
+    assert vs.impl == "ref"              # CPU backend default, eager
+    with ops.use_impl("pallas"):
+        vs2 = _quad()
+        assert vs.impl == "ref"          # already-pinned session unmoved
+    assert vs2.impl == "pallas"
+
+
+def test_use_impl_scopes_default_per_context():
+    assert ops.resolve_impl("ref") == "ref"
+    with ops.use_impl("pallas"):
+        assert ops.resolve_impl(None) == "pallas"
+        with ops.use_impl("ref"):
+            assert ops.resolve_impl(None) == "ref"
+        assert ops.resolve_impl(None) == "pallas"
+        # an explicit per-call impl still wins over the context
+        assert ops.resolve_impl("ref") == "ref"
+        # a NEW thread starts from the default context, not this one
+        seen = {}
+        t = threading.Thread(
+            target=lambda: seen.setdefault("impl", ops.resolve_impl(None)))
+        t.start()
+        t.join()
+        assert seen["impl"] == "ref"     # CPU default, not "pallas"
+    assert ops.resolve_impl(None) == "ref"

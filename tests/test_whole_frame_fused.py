@@ -19,9 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (CameraIntrinsics, ORBConfig,
-                        extract_features_batched, extract_features_per_level,
-                        process_quad_frame)
+from repro.core import (CameraIntrinsics, ORBConfig, PipelineConfig,
+                        RigConfig, VisualSystem,
+                        extract_features_batched, extract_features_per_level)
 from repro.core import pyramid
 from repro.kernels import ops
 
@@ -257,19 +257,17 @@ def test_whole_frame_two_fe_launches():
         imgs = _imgs(11, b, 64, 96)
         cfg = ORBConfig(height=64, width=96, max_features=16,
                         n_levels=n_levels)
-        ops.reset_launch_count()
-        jax.eval_shape(
-            lambda im: extract_features_batched(im, cfg, impl="pallas"),
-            imgs)
-        assert ops.launch_count() == 2, (b, n_levels, ops.launch_count())
+        with ops.launch_audit() as audit:
+            jax.eval_shape(
+                lambda im: extract_features_batched(im, cfg,
+                                                    impl="pallas"),
+                imgs)
+        assert audit.count == 2, (b, n_levels, audit.count)
     cfg = ORBConfig(height=64, width=96, max_features=16, n_levels=2,
                     max_disparity=32)
     intr = CameraIntrinsics(cx=48.0, cy=32.0)
-    ops.reset_launch_count()
-    jax.eval_shape(
-        lambda f: process_quad_frame(f, cfg, intr, impl="pallas"),
-        _imgs(12, 4, 64, 96))
-    assert ops.launch_count() == 3
+    vs = VisualSystem(RigConfig.quad(intr), PipelineConfig(orb=cfg))
+    assert vs.traced_launches("process_frame", _imgs(12, 4, 64, 96)) == 3
 
 
 # ---------------------------------------------------------------------------
