@@ -25,9 +25,12 @@ import sys
 # drops a gate row (renames a table, deletes a benchmark) would
 # otherwise pass CI with nothing checked.  quad = one rig frame (3),
 # fm = the fused matcher alone (1), fleet = an N-rig fleet frame (3 —
-# the `VisualSystem.process_fleet` budget).
+# the `VisualSystem.process_fleet` budget), degraded_fleet = the same
+# fleet frame with dead cameras masked out (still 3: degradation is
+# elementwise masking, never extra kernels).
 REQUIRED_GATES = ("quad_frame_launches", "fm_frame_launches",
-                  "fleet_frame_launches")
+                  "fleet_frame_launches",
+                  "degraded_fleet_frame_launches")
 
 
 def check(path: str) -> int:

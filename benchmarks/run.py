@@ -642,6 +642,84 @@ def table_fleet(quick=False):
          "budget")
 
 
+def table_service(quick=False):
+    """Streaming fleet service (PR 6, `repro.serving`): sustained
+    frames/sec at N rigs through the full submit -> bucketed batch ->
+    masked `process_fleet` -> supervise loop, under synthetic arrival
+    jitter and a ~10% injected fault rate (dead camera / corrupt frame
+    / trigger desync) — the robustness tax measured, not assumed.  Also
+    emits the `launch_gate/degraded_fleet_frame_*` rows CI enforces: a
+    fleet frame with dead cameras masked out still traces EXACTLY 3
+    launches (masking is elementwise jnp, not a kernel)."""
+    from repro.serving import (FaultInjector, FaultSpec, FleetService,
+                               QueueConfig, SupervisorConfig, run_episode)
+    h, w = (48, 64) if quick else (120, 160)
+    n_rigs, t_total = 4, 6
+    dt = 1.0 / 30.0
+    scfg = scenes.SceneConfig(height=h, width=w, n_points=60, seed=11,
+                              baseline=0.3)
+    fleet, intr = scenes.render_fleet_sequence(scfg, t_total, n_rigs)
+    fleet = jax.block_until_ready(fleet)
+    ocfg = ORBConfig(height=h, width=w, n_levels=2, max_features=64,
+                     max_disparity=32)
+    rig = RigConfig.quad(intr, desync_policy="degrade", max_desync=1e-3)
+
+    def specs():
+        # ~10% of the n_rigs * t_total frame slots carry a fault,
+        # deterministic slots, kinds round-robin; every rig jitters.
+        slots = [(r, t) for r in range(n_rigs) for t in range(t_total)]
+        n_faults = max(1, round(0.1 * len(slots)))
+        idx = np.random.RandomState(0).choice(len(slots), n_faults,
+                                              replace=False)
+        kinds = ("dead_camera", "corrupt_frame", "desync")
+        out = [FaultSpec(kinds[i % 3], rig=slots[j][0], start=slots[j][1],
+                         stop=slots[j][1] + 1, camera=slots[j][0] % 4,
+                         magnitude=1.0)
+               for i, j in enumerate(sorted(idx))]
+        out += [FaultSpec("arrival_jitter", rig=r, magnitude=0.3 * dt)
+                for r in range(n_rigs)]
+        return out
+
+    def episode(vs):
+        svc = FleetService(
+            vs, QueueConfig(bucket_sizes=(1, 2, 4), deadline_s=dt),
+            SupervisorConfig(heartbeat_timeout_s=3 * dt,
+                             backoff_base_s=dt, backoff_max_s=4 * dt))
+        return run_episode(svc, fleet, dt=dt,
+                           injector=FaultInjector(specs(), seed=0))
+
+    vs = VisualSystem(rig, PipelineConfig(orb=ocfg))
+    episode(vs)                       # warmup: trace the bucket shapes
+    t0 = time.perf_counter()
+    result = episode(vs)
+    wall = time.perf_counter() - t0
+    served = result.status["counters"]["frames_out"]
+    degraded = sum(r.status == "degraded" for r in result.reports)
+    res = f"{w}x{h}"
+    emit("service", f"sustained_fps_{n_rigs}rigs_{res}",
+         round(served / wall, 1), "fps",
+         f"{served} frames served in {wall*1e3:.0f}ms, ~10% fault rate "
+         "+ arrival jitter")
+    emit("service", "frames_degraded", degraded, "frames",
+         "dead camera / corrupt slab / desync -> surviving pairs")
+    emit("service", "frames_dropped",
+         result.status["counters"]["frames_in"] - served, "frames",
+         "all-dead or desync-dropped intake")
+    emit("service", "batches", result.status["counters"]["batches"],
+         "dispatches", "bucketed fleet batches (3 launches each)")
+
+    # Degraded-fleet launch gate: dead cameras must not add launches.
+    mask = np.ones((n_rigs, 4), dtype=bool)
+    mask[0, 3] = False
+    mask[2, 0] = False
+    actual = vs.traced_launches("process_fleet", fleet[0],
+                                jnp.asarray(mask))
+    emit("launch_gate", "degraded_fleet_frame_launches", actual, "kernels",
+         f"traced, {n_rigs} rigs with 2 dead cameras masked, {res}")
+    emit("launch_gate", "degraded_fleet_frame_budget", 3, "kernels",
+         "degradation is elementwise masking — same 3-launch schedule")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -660,6 +738,7 @@ def main() -> None:
     table_whole_frame_vs_per_level(args.quick)
     table_fm_fused_vs_unfused(args.quick)
     table_fleet(args.quick)
+    table_service(args.quick)
     print(f"# done in {time.time() - t0:.1f}s ({len(ROWS)} rows)")
     if args.out:
         rows = [{"table": t, "name": n, "value": v, "unit": u, "note": note}

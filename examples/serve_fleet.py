@@ -1,0 +1,84 @@
+"""Stream a rendered quad-camera fleet through the fault-tolerant
+serving layer (`repro.serving`) with injected faults, then print the
+supervisor's status report.
+
+    PYTHONPATH=src python examples/serve_fleet.py --rigs 4 --frames 8
+
+What you should see: rig 1 loses camera 3 mid-episode (its reports turn
+"degraded", the (2,3) stereo pair goes invalid, pair (0,1) keeps
+serving); rig 2 stalls, the watchdog times out, backs off and restarts
+it (the restart hook clears the fault, so it recovers); every other
+rig serves every frame bit-exact to a fault-free run.  The whole
+episode runs on a virtual clock with seeded injection — re-running the
+command replays it bit-identically.
+
+(The end-of-episode health snapshot reads "restarting" for every rig:
+once arrivals stop, the watchdog correctly flags them all as overdue.
+That is the supervisor doing its job on a finite episode, not a fault.)
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core import ORBConfig, PipelineConfig, RigConfig, VisualSystem
+from repro.data import scenes
+from repro.serving import (FaultInjector, FaultSpec, FleetService,
+                           QueueConfig, SupervisorConfig, run_episode)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rigs", type=int, default=4)
+    ap.add_argument("--frames", type=int, default=8)
+    ap.add_argument("--height", type=int, default=96)
+    ap.add_argument("--width", type=int, default=128)
+    args = ap.parse_args()
+    dt = 1.0 / 30.0
+
+    scfg = scenes.SceneConfig(height=args.height, width=args.width,
+                              n_points=80, seed=7, baseline=0.3)
+    frames, intr = scenes.render_fleet_sequence(scfg, args.frames,
+                                                args.rigs)
+
+    ocfg = ORBConfig(height=args.height, width=args.width, n_levels=2,
+                     max_features=64, max_disparity=32)
+    rig = RigConfig.quad(intr, desync_policy="degrade", max_desync=1e-3)
+    vs = VisualSystem(rig, PipelineConfig(orb=ocfg))
+
+    injector = FaultInjector([
+        FaultSpec("dead_camera", rig=1, camera=3, start=2),
+        FaultSpec("stalled_rig", rig=2, start=3, stop=5),
+        FaultSpec("arrival_jitter", rig=0, magnitude=0.3 * dt),
+    ], seed=0)
+
+    service = FleetService(
+        vs,
+        QueueConfig(bucket_sizes=(1, 2, 4, 8), deadline_s=dt),
+        SupervisorConfig(heartbeat_timeout_s=2.5 * dt, backoff_base_s=dt,
+                         backoff_max_s=4 * dt, seed=0),
+        restart_cb=injector.clear_rig)
+
+    result = run_episode(service, np.asarray(frames), dt=dt,
+                         injector=injector)
+
+    print(f"served {len(result.reports)} frames from "
+          f"{args.rigs} rigs x {args.frames} ticks")
+    for r in result.reports:
+        n_valid = int(np.asarray(r.output.matches.valid).sum())
+        print(f"  t={r.t:6.3f}s rig={r.rig_id} {r.status:8s} "
+              f"cameras={''.join('x' if m else '.' for m in r.camera_mask)} "
+              f"valid_matches={n_valid}{'  (late)' if r.late else ''}")
+    for e in result.events:
+        print(f"  event t={e.now:6.3f}s rig={e.rig_id} {e.kind}"
+              + (f" attempt={e.attempt}" if e.attempt else ""))
+    print("status:")
+    for rig_id, rep in sorted(result.status["supervisor"]["rigs"].items()):
+        print(f"  rig {rig_id}: {rep['health']} "
+              f"frames={rep['frames']} degraded={rep['degraded_frames']} "
+              f"restarts={rep['restarts_total']}")
+    print(f"counters: {dict(result.status['counters'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,12 @@
 prefill/decode_step pair the 512-chip dry-run lowers.
 
     PYTHONPATH=src python examples/serve_lm.py --arch gemma2_2b
+
+NOTE (quarantined legacy example): this predates the quad-camera visual
+system this repo now reproduces and exercises the seed's LM stack
+(`repro.models`/`repro.configs`), which the visual pipeline does not
+touch.  Kept runnable but frozen — for the maintained serving story see
+`examples/serve_fleet.py` and `repro.serving`.
 """
 
 import argparse

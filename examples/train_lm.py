@@ -7,6 +7,12 @@ attend backwards).
 
 Checkpoints + crash-restart: add --ckpt-dir /tmp/lm_ckpt and re-run the
 same command after killing it — training resumes bit-identically.
+
+NOTE (quarantined legacy example): this predates the quad-camera visual
+system this repo now reproduces and trains the seed's LM stack, which
+the visual pipeline does not touch.  Kept runnable but frozen — the
+maintained examples are `quickstart.py`, `localize.py` and
+`serve_fleet.py`.
 """
 
 import argparse

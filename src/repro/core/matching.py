@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import (CameraIntrinsics, DepthSet, FeatureSet,
-                              MatchSet, ORBConfig)
+                              MatchSet, ORBConfig, StereoOutput)
 from repro.kernels import ops
 from repro.kernels import ref as _ref
 
@@ -76,6 +76,29 @@ def _depth_set(x_l, rxy, best, matches: MatchSet, cfg: ORBConfig,
     xy_right = jnp.stack([x_r_rect, rxy[..., 1]], axis=-1)
     return DepthSet(disparity=jnp.where(valid, disparity, 0.0),
                     depth=depth, xy_right=xy_right, valid=valid)
+
+
+def mask_stereo_output(out: StereoOutput, mask_l, mask_r,
+                       pair_mask) -> StereoOutput:
+    """Graceful-degradation gate on a flat pair-batched ``StereoOutput``:
+    AND every validity field with the per-camera / per-pair liveness of
+    a degraded rig.  ``mask_l``/``mask_r`` are (P,) bool — liveness of
+    each pair's left/right CAMERA; ``pair_mask`` is (P,) bool (normally
+    ``mask_l & mask_r``).  Numeric fields are left untouched (they may
+    hold values computed from a sanitized dead-camera slab) — consumers
+    must consult ``valid``, exactly as they already must for top-K
+    padding rows.  With all-true masks this is bit-exact identity, so
+    healthy rigs in a degraded fleet batch are unaffected.
+    """
+    ml = mask_l[..., None]
+    mr = mask_r[..., None]
+    mp = pair_mask[..., None]
+    return StereoOutput(
+        features_l=out.features_l._replace(valid=out.features_l.valid & ml),
+        features_r=out.features_r._replace(valid=out.features_r.valid & mr),
+        matches=out.matches._replace(valid=out.matches.valid & mp),
+        depth=out.depth._replace(valid=out.depth.valid & mp),
+    )
 
 
 def match_pair_fused(imgs_l: jnp.ndarray, imgs_r: jnp.ndarray,

@@ -33,6 +33,17 @@ loop.  With ``PipelineConfig.rig_shard_axis`` set and a
 additionally ``shard_map``'d over that mesh axis (3 launches per
 device).
 
+GRACEFUL DEGRADATION (the robustness half of the paper's sync/mux
+machinery): ``process_frame`` / ``process_fleet`` accept a per-camera
+liveness ``camera_mask`` — dead camera slabs are sanitized to zero
+before the kernels and every validity field they touch is gated off, so
+a rig with a dead camera degrades to its surviving stereo pairs in the
+SAME 3 launches (CI-gated).  Per-frame ``timestamps`` run the rig's
+desync policy (``RigConfig.desync_policy``: raise | drop_frame |
+degrade); the streaming fleet service (``repro.serving``) layers
+watchdog supervision, fault detection and bucketed batching on top of
+these hooks.
+
 MIGRATION MAP (the old free functions survive as thin deprecation
 shims, bit-exact against these paths):
 
@@ -59,12 +70,14 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import typing
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import matching, orb
+from repro.core import sync as sync_mod
 from repro.core.rig import DesyncError, RigConfig
 from repro.core.types import (CameraIntrinsics, FeatureSet, MatchSet,
                               ORBConfig, StereoOutput)
@@ -72,6 +85,19 @@ from repro.distributed import sharding
 from repro.kernels import ops
 
 _SCHEDULES = ("sequential", "pipelined")
+
+
+class DesyncDecision(typing.NamedTuple):
+    """Outcome of the rig's desync policy for one frame's time tags.
+
+    ``action`` is one of ``"ok"`` (process normally — includes the
+    legacy software-sync log-only path), ``"raise"``, ``"drop_frame"``
+    or ``"degrade"``; ``camera_mask`` is the (n_cameras,) bool keep-mask
+    for the degrade action, else None."""
+
+    desync: float
+    action: str
+    camera_mask: np.ndarray | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,34 +213,56 @@ class VisualSystem:
                 "frame (the pipelined prologue/drain is defined for "
                 "T >= 1)")
 
-    def check_desync(self, timestamps) -> float:
-        """Apply the rig's sync policy to one frame's camera time tags.
+    def desync_decision(self, timestamps) -> DesyncDecision:
+        """Apply the rig's sync + desync policies to one frame's camera
+        time tags WITHOUT raising — the inspectable form ``check_desync``
+        and the serving supervisor build on.
 
-        Returns the tag spread (the float64 single-frame evaluation of
-        ``sync.max_desync`` over the (n_cameras,) stamp vector, seconds)
-        and appends it to ``desync_log``.
-        Hardware-trigger rigs assert the paper's 0-cycle guarantee
-        (spread <= ``rig.max_desync``, default 0.0 — Sec. III-A) by
-        raising ``DesyncError``; software-sync rigs only report.
-        """
+        The tag spread is the float64 single-frame evaluation of
+        ``sync.max_desync`` over the (n_cameras,) stamp vector
+        (``sync.frame_desync`` — epoch-scale stamps have 128 s float32
+        spacing, so this must not round-trip through float32); it is
+        appended to ``desync_log``.  A spread within ``rig.max_desync``
+        is ``"ok"``.  Beyond it, ``rig.desync_policy`` decides: the
+        default (None) keeps the legacy split — hardware rigs get
+        ``"raise"`` (the paper's Sec. III-A 0-cycle guarantee), software
+        rigs log and stay ``"ok"`` — while an explicit policy applies to
+        both sync disciplines uniformly (``"degrade"`` also computes the
+        median-cluster camera keep-mask)."""
         ts = np.asarray(timestamps, dtype=np.float64).reshape(-1)
         if ts.shape[0] != self.rig.n_cameras:
             raise ValueError(
                 f"expected {self.rig.n_cameras} per-camera timestamps, "
                 f"got {ts.shape[0]}")
-        # float64 single-frame evaluation of ``sync.max_desync``: epoch-
-        # scale stamps (~1.75e9 s) have 128 s float32 spacing, so
-        # routing through jnp without x64 would zero out any real-world
-        # desync and the hardware gate below would never fire.
-        desync = float(np.max(ts) - np.min(ts))
+        desync = sync_mod.frame_desync(ts)
         self.desync_log.append(desync)
-        if self.rig.sync_policy == "hardware" and desync > self.rig.max_desync:
-            raise DesyncError(
-                f"hardware-trigger rig saw {desync:.3e}s inter-camera "
-                f"desync (tolerance {self.rig.max_desync:.3e}s): time "
-                "tags must come from the unified trigger clock "
-                "(paper Sec. III-A)")
-        return desync
+        if desync <= self.rig.max_desync:
+            return DesyncDecision(desync, "ok")
+        policy = self.rig.desync_policy
+        if policy is None:
+            policy = ("raise" if self.rig.sync_policy == "hardware"
+                      else "ok")
+        if policy == "degrade":
+            return DesyncDecision(
+                desync, "degrade",
+                sync_mod.desync_camera_mask(ts, self.rig.max_desync))
+        return DesyncDecision(desync, policy)
+
+    def _desync_error(self, desync: float, what: str = "") -> DesyncError:
+        return DesyncError(
+            f"{what}{self.rig.sync_policy}-sync rig saw {desync:.3e}s "
+            f"inter-camera desync (tolerance {self.rig.max_desync:.3e}s)"
+            ": time tags must come from the unified trigger clock "
+            "(paper Sec. III-A)")
+
+    def check_desync(self, timestamps) -> float:
+        """Legacy strict form of ``desync_decision``: returns the tag
+        spread (seconds, logged to ``desync_log``) and raises
+        ``DesyncError`` when the rig's policy resolves to ``"raise"``."""
+        decision = self.desync_decision(timestamps)
+        if decision.action == "raise":
+            raise self._desync_error(decision.desync)
+        return decision.desync
 
     # -- engine (pure, jit-able; impl threaded explicitly) -----------------
 
@@ -257,19 +305,47 @@ class VisualSystem:
             self._fm_intr(n_rigs), impl=impl)
         return StereoOutput(feat_l, feat_r, matches, depth)
 
-    def _frame_core(self, images, impl) -> StereoOutput:
-        """(n_cameras, H, W) -> StereoOutput with (n_pairs,) axes; a
-        fleet-of-one view of the same 3-launch datapath."""
-        return self._fm_flat(self._fe_flat(images, 1, impl), 1, impl)
+    def _core_flat(self, flat, n_rigs: int, impl,
+                   mask_flat=None) -> StereoOutput:
+        """The 3-launch datapath over the flat (n_rigs * n_cameras,)
+        camera batch, with optional graceful degradation: a per-camera
+        liveness mask sanitizes dead slabs to zero BEFORE the kernels
+        (NaN/garbage from a dead sensor never enters the fused launches)
+        and gates every validity field AFTER them — a rig with a dead
+        camera degrades to its surviving stereo pairs, in the SAME 3
+        launches (masking is elementwise jnp, not a kernel), and
+        all-true masks are bit-exact identity."""
+        if mask_flat is not None:
+            flat = jnp.where(mask_flat[:, None, None], flat,
+                             jnp.zeros_like(flat))
+        out = self._fm_flat(self._fe_flat(flat, n_rigs, impl), n_rigs,
+                            impl)
+        if mask_flat is not None:
+            li, ri = self._flat_pair_indices(n_rigs)
+            ml, mr = mask_flat[li], mask_flat[ri]
+            out = matching.mask_stereo_output(out, ml, mr, ml & mr)
+        return out
 
-    def _fleet_core(self, images, impl) -> StereoOutput:
+    def _frame_core(self, images, impl, camera_mask=None) -> StereoOutput:
+        """(n_cameras, H, W) -> StereoOutput with (n_pairs,) axes; a
+        fleet-of-one view of the same 3-launch datapath.  ``camera_mask``
+        ((n_cameras,) bool, optional) masks dead cameras through the
+        batch axes — see ``_core_flat``."""
+        mask = (None if camera_mask is None
+                else jnp.asarray(camera_mask).reshape(-1).astype(bool))
+        return self._core_flat(images, 1, impl, mask)
+
+    def _fleet_core(self, images, impl, camera_mask=None) -> StereoOutput:
         """(n_rigs, n_cameras, H, W) -> StereoOutput with
         (n_rigs, n_pairs) axes; the rig axis is folded into the kernels'
         camera/pair batch axes, so the whole fleet frame still costs 3
-        launches."""
+        launches — degraded or not (``camera_mask``: (n_rigs, n_cameras)
+        bool, optional)."""
         n = images.shape[0]
         flat = images.reshape((n * self.rig.n_cameras,) + images.shape[2:])
-        out = self._fm_flat(self._fe_flat(flat, n, impl), n, impl)
+        mask = (None if camera_mask is None
+                else jnp.asarray(camera_mask).astype(bool).reshape(-1))
+        out = self._core_flat(flat, n, impl, mask)
         return jax.tree.map(
             lambda x: x.reshape((n, self.rig.n_pairs) + x.shape[1:]), out)
 
@@ -329,36 +405,152 @@ class VisualSystem:
 
     # -- frame / sequence entry points -------------------------------------
 
-    def process_frame(self, images, timestamps=None) -> StereoOutput:
+    def _coerce_camera_mask(self, camera_mask, n_rigs: int | None,
+                            what: str) -> np.ndarray | None:
+        """Validate a caller camera mask eagerly: (n_cameras,) bool for
+        a frame, (n_rigs, n_cameras) for a fleet; returns np.bool_."""
+        if camera_mask is None:
+            return None
+        mask = np.asarray(camera_mask, dtype=bool)
+        want = ((self.rig.n_cameras,) if n_rigs is None
+                else (n_rigs, self.rig.n_cameras))
+        if mask.shape != want:
+            raise ValueError(
+                f"{what}: camera_mask shape {mask.shape} does not match "
+                f"{want} (per-camera liveness"
+                f"{'' if n_rigs is None else ' per rig'})")
+        return mask
+
+    def _frame_desync_mask(self, timestamps,
+                           camera_mask: np.ndarray | None):
+        """Resolve one frame's desync policy into (dropped, camera_mask):
+        raise raises, drop_frame -> (True, _), degrade ANDs the median-
+        cluster keep-mask into the caller's liveness mask."""
+        decision = self.desync_decision(timestamps)
+        if decision.action == "raise":
+            raise self._desync_error(decision.desync)
+        if decision.action == "drop_frame":
+            return True, camera_mask
+        if decision.action == "degrade":
+            keep = decision.camera_mask
+            camera_mask = (keep if camera_mask is None
+                           else camera_mask & keep)
+        return False, camera_mask
+
+    def process_frame(self, images, timestamps=None,
+                      camera_mask=None) -> StereoOutput | None:
         """One rig frame: (n_cameras, H, W) -> StereoOutput with leading
         (n_pairs,) axes, in exactly 3 kernel launches (2 FE + 1 FM).
 
         ``timestamps`` (optional, (n_cameras,) seconds) runs the rig's
-        per-frame desync check (``check_desync``) before dispatch.
+        per-frame desync policy (``desync_decision``) before dispatch:
+        ``raise`` raises ``DesyncError``, ``drop_frame`` returns None
+        (the frame is NOT processed), ``degrade`` masks the offending
+        cameras.  ``camera_mask`` (optional, (n_cameras,) bool) marks
+        dead cameras: their slabs are sanitized to zero before the
+        kernels and every validity field they touch is gated off, so
+        the rig degrades to its surviving stereo pairs — still 3
+        launches, bit-exact on the surviving cameras.
         """
         self._check_images(images, fleet=False, sequence=False)
+        camera_mask = self._coerce_camera_mask(camera_mask, None,
+                                               "process_frame")
         if timestamps is not None:
-            self.check_desync(timestamps)
+            dropped, camera_mask = self._frame_desync_mask(timestamps,
+                                                           camera_mask)
+            if dropped:
+                return None
+        if camera_mask is None:
+            return self._jit(
+                "process_frame",
+                lambda im: self._frame_core(im, self.impl))(images)
         return self._jit(
-            "process_frame",
-            lambda im: self._frame_core(im, self.impl))(images)
+            "process_frame_masked",
+            lambda im, cm: self._frame_core(im, self.impl, cm))(
+                images, jnp.asarray(camera_mask))
 
-    def process_fleet(self, images) -> StereoOutput:
+    def process_fleet(self, images, timestamps=None,
+                      camera_mask=None) -> StereoOutput:
         """One frame from EVERY rig of a fleet: (n_rigs, n_cameras, H, W)
         -> StereoOutput with leading (n_rigs, n_pairs) axes — still 3
         kernel launches total, bit-exact against the per-rig loop.
 
+        ``images`` may also be a SEQUENCE of per-rig (n_cameras, H, W)
+        frames; mismatched per-rig shapes (e.g. rigs with different
+        camera counts) raise an eager, descriptive ``ValueError`` here
+        instead of an opaque jit trace failure deep in the kernels.
+
+        ``timestamps`` ((n_rigs, n_cameras), optional) applies the desync
+        policy PER RIG: ``raise`` raises naming the rig, ``drop_frame``
+        masks the whole offending rig out of the batch (fleet shapes are
+        static — a dropped rig cannot leave the array), ``degrade``
+        masks its offending cameras.  ``camera_mask``
+        ((n_rigs, n_cameras) bool, optional) marks dead cameras; masked
+        rigs/cameras degrade to their surviving pairs in the same 3
+        launches.
+
         With ``PipelineConfig.rig_shard_axis`` set and a
         ``use_sharding`` mesh installed, the rig axis is sharded over
-        that mesh axis via ``shard_map`` (n_rigs must divide evenly).
+        that mesh axis via ``shard_map`` (n_rigs must divide evenly;
+        degraded — masked — fleets currently take the unsharded path).
         """
+        images = self._coerce_fleet_images(images, "process_fleet")
         self._check_images(images, fleet=True, sequence=False)
-        sharded = self._fleet_sharded("process_fleet", self._fleet_core)
-        if sharded is not None:
-            return sharded(images)
+        n_rigs = int(images.shape[0])
+        camera_mask = self._coerce_camera_mask(camera_mask, n_rigs,
+                                               "process_fleet")
+        if timestamps is not None:
+            ts = np.asarray(timestamps, dtype=np.float64)
+            if ts.shape != (n_rigs, self.rig.n_cameras):
+                raise ValueError(
+                    f"process_fleet: timestamps shape {ts.shape} does "
+                    f"not match ({n_rigs}, {self.rig.n_cameras})")
+            rows = (np.ones((n_rigs, self.rig.n_cameras), dtype=bool)
+                    if camera_mask is None else camera_mask.copy())
+            for r in range(n_rigs):
+                try:
+                    dropped, row = self._frame_desync_mask(
+                        ts[r], rows[r])
+                except DesyncError:
+                    raise self._desync_error(
+                        sync_mod.frame_desync(ts[r]),
+                        what=f"fleet rig {r}: ") from None
+                rows[r] = False if dropped else row
+            camera_mask = rows
+        if camera_mask is None:
+            sharded = self._fleet_sharded("process_fleet",
+                                          self._fleet_core)
+            if sharded is not None:
+                return sharded(images)
+            return self._jit(
+                "process_fleet",
+                lambda im: self._fleet_core(im, self.impl))(images)
         return self._jit(
-            "process_fleet",
-            lambda im: self._fleet_core(im, self.impl))(images)
+            "process_fleet_masked",
+            lambda im, cm: self._fleet_core(im, self.impl, cm))(
+                images, jnp.asarray(camera_mask))
+
+    def _coerce_fleet_images(self, images, what: str):
+        """Fleet inputs arrive either as one stacked array or as a
+        sequence of per-rig frames.  Stacking is only defined when every
+        rig shares one (n_cameras, H, W) shape — mismatched rigs (the
+        classic mixed quad/stereo fleet footgun) fail HERE with the
+        per-rig shapes spelled out, not as an XLA trace error."""
+        if isinstance(images, (list, tuple)) or (
+                hasattr(images, "dtype") and images.dtype == object):
+            shapes = [tuple(np.shape(x)) for x in images]
+            if len(set(shapes)) > 1:
+                raise ValueError(
+                    f"{what}: rigs have mismatched frame shapes "
+                    f"{shapes}; every rig in one fleet batch must share "
+                    f"the same (n_cameras, H, W) = "
+                    f"({self.rig.n_cameras}, {self.pipe.orb.height}, "
+                    f"{self.pipe.orb.width}).  Rigs with different "
+                    "camera counts need their own session (one "
+                    "RigConfig per layout) — the serving queue buckets "
+                    "per layout for exactly this reason.")
+            images = jnp.stack([jnp.asarray(x) for x in images])
+        return images
 
     def run(self, frames) -> StereoOutput:
         """A frame sequence (T, n_cameras, H, W) -> StereoOutput with
@@ -503,10 +695,15 @@ class VisualSystem:
         """Trace ``entry`` shape-only under impl='pallas' and return the
         number of kernel launches in the traced graph — the
         deterministic schedule number the CI launch gates enforce (3
-        per frame / fleet frame), independent of the session's impl."""
+        per frame / fleet frame), independent of the session's impl.
+        ``process_frame`` / ``process_fleet`` accept an optional second
+        camera-mask argument so the DEGRADED budget (also 3 — masking is
+        elementwise jnp, not a launch) is gateable too."""
         cores = {
-            "process_frame": lambda im: self._frame_core(im, "pallas"),
-            "process_fleet": lambda im: self._fleet_core(im, "pallas"),
+            "process_frame":
+                lambda im, cm=None: self._frame_core(im, "pallas", cm),
+            "process_fleet":
+                lambda im, cm=None: self._fleet_core(im, "pallas", cm),
             "extract": lambda im: orb.extract_features_batched(
                 im, self.pipe.orb, impl="pallas"),
             "run": lambda f: self._run_core(f, "pallas", False),

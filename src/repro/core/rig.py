@@ -19,10 +19,13 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.core.sync import TriggerConfig
 from repro.core.types import CameraIntrinsics
 
 _SYNC_POLICIES = ("hardware", "software")
+_DESYNC_POLICIES = ("raise", "drop_frame", "degrade")
 
 
 class DesyncError(RuntimeError):
@@ -48,6 +51,20 @@ class RigConfig:
     tags: ``"hardware"`` asserts the trigger-generator guarantee (spread
     <= ``max_desync``, 0.0 by default — the paper's 0-cycle desync),
     ``"software"`` only records the observed jitter.
+
+    ``desync_policy`` selects what a spread beyond ``max_desync`` DOES:
+
+      - ``None`` (default) — the legacy split: hardware rigs raise
+        ``DesyncError``, software rigs only log the jitter.
+      - ``"raise"`` — raise ``DesyncError`` (both sync policies).
+      - ``"drop_frame"`` — the frame is not processed:
+        ``process_frame`` returns ``None``; a fleet entry masks the
+        whole offending rig out of the batch instead (shapes are
+        static — a dropped rig cannot leave the fleet array).
+      - ``"degrade"`` — process the frame with the offending cameras
+        masked out (``sync.desync_camera_mask``: keep the cameras whose
+        tags agree with the frame's median tag), so the rig degrades to
+        its surviving stereo pairs instead of failing.
     """
 
     n_cameras: int = 4
@@ -57,6 +74,7 @@ class RigConfig:
     sync: TriggerConfig | None = None
     sync_policy: str = "hardware"
     max_desync: float = 0.0      # tolerated per-frame tag spread (s)
+    desync_policy: str | None = None   # None = legacy raise/log split
 
     def __post_init__(self):
         if self.n_cameras < 1:
@@ -92,6 +110,10 @@ class RigConfig:
             raise ValueError(
                 f"sync_policy must be one of {_SYNC_POLICIES}, "
                 f"got {self.sync_policy!r}")
+        if self.desync_policy not in (None,) + _DESYNC_POLICIES:
+            raise ValueError(
+                f"desync_policy must be None or one of "
+                f"{_DESYNC_POLICIES}, got {self.desync_policy!r}")
         if self.max_desync < 0.0:
             raise ValueError(f"max_desync must be >= 0, got {self.max_desync}")
 
@@ -118,6 +140,19 @@ class RigConfig:
     @property
     def homogeneous_intrinsics(self) -> bool:
         return all(ic == self.intrinsics[0] for ic in self.intrinsics[1:])
+
+    def pair_mask(self, camera_mask):
+        """Per-pair validity from a per-camera validity mask: a stereo
+        pair survives iff BOTH of its cameras are alive.  ``camera_mask``
+        is (..., n_cameras) bool; returns (..., n_pairs) bool — the
+        degraded-rig rule ``process_frame(camera_mask=...)`` applies."""
+        m = np.asarray(camera_mask, dtype=bool)
+        if m.shape[-1] != self.n_cameras:
+            raise ValueError(
+                f"camera_mask last axis is {m.shape[-1]} but the rig "
+                f"has {self.n_cameras} cameras")
+        return (m[..., list(self.left_cams)]
+                & m[..., list(self.right_cams)])
 
     # -- constructors ------------------------------------------------------
 

@@ -16,6 +16,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +62,32 @@ def software_sync(cfg: TriggerConfig, n_frames: int, key: jax.Array):
 def max_desync(camera_tags: jnp.ndarray) -> jnp.ndarray:
     """Worst inter-camera time-tag spread over the sequence (seconds)."""
     return jnp.max(jnp.max(camera_tags, axis=1) - jnp.min(camera_tags, axis=1))
+
+
+def frame_desync(timestamps) -> float:
+    """One frame's inter-camera tag spread, evaluated eagerly in float64.
+
+    Epoch-scale stamps (~1.75e9 s) have 128 s float32 spacing, so this
+    deliberately stays on the host in float64 — routing through jnp
+    without x64 would zero out any real-world desync.
+    """
+    ts = np.asarray(timestamps, dtype=np.float64).reshape(-1)
+    return float(np.max(ts) - np.min(ts))
+
+
+def desync_camera_mask(timestamps, max_desync_s: float) -> np.ndarray:
+    """Which cameras of a desynced frame are still usable (bool mask).
+
+    The degrade policy keeps every camera whose tag lies within
+    ``max_desync_s`` of the frame's MEDIAN tag — the largest coherent
+    cluster under the paper's one-trigger-clock model, where a desync
+    means some camera(s) drifted off the shared clock rather than the
+    clock itself moving.  A frame where no camera agrees with the median
+    (e.g. a 2-camera rig with one drifted tag) masks out entirely —
+    degradation, never a guess.
+    """
+    ts = np.asarray(timestamps, dtype=np.float64).reshape(-1)
+    return np.abs(ts - np.median(ts)) <= float(max_desync_s)
 
 
 def align_imu(camera_tags: jnp.ndarray, imu_tags: jnp.ndarray,

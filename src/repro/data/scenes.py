@@ -125,6 +125,28 @@ def render_quad(pts_world: jnp.ndarray, texture: jnp.ndarray,
     return jnp.stack(views)
 
 
+def render_fleet_sequence(cfg: SceneConfig, n_frames: int, n_rigs: int,
+                          step_t: tuple[float, float, float] =
+                          (0.05, 0.0, 0.10),
+                          yaw_per_frame: float = 0.01):
+    """Deterministic FLEET traffic: (T, n_rigs, 4, H, W) quad frames.
+
+    Every rig drives the same landmark field on the same twist, phase-
+    offset by ``r`` frames (rig r starts where rig 0 was r frames ago),
+    so rigs see DISTINCT images while the whole fleet renders only
+    ``n_frames + n_rigs - 1`` quad frames once.  This is the traffic
+    source for the serving layer's fault-injection episodes and the
+    ``table_service`` benchmark.  Returns (frames, intrinsics)."""
+    if n_rigs < 1:
+        raise ValueError(f"n_rigs must be >= 1, got {n_rigs}")
+    frames, _, intr = render_sequence(cfg, n_frames + n_rigs - 1,
+                                      step_t=step_t,
+                                      yaw_per_frame=yaw_per_frame)
+    fleet = jnp.stack([frames[r:r + n_frames] for r in range(n_rigs)],
+                      axis=1)
+    return fleet, intr
+
+
 def render_sequence(cfg: SceneConfig, n_frames: int,
                     step_t: tuple[float, float, float] = (0.05, 0.0, 0.10),
                     yaw_per_frame: float = 0.01):

@@ -1,0 +1,43 @@
+"""Streaming fleet service over the `VisualSystem` session.
+
+The core session (``repro.core.pipeline``) answers "process THIS fleet
+frame in 3 launches"; production traffic is rigs arriving
+asynchronously, stalling, desyncing and losing cameras.  This package
+is the robustness layer between the two:
+
+  ``queue``       host-side frame queue coalescing async rig arrivals
+                  into BUCKETED fleet batches (fixed small set of fleet
+                  sizes -> bounded retraces; padding rigs masked out)
+                  with per-rig deadlines.
+  ``supervisor``  watchdog: per-rig health state machine (HEALTHY ->
+                  DEGRADED -> RESTARTING -> QUARANTINED), heartbeat
+                  timeouts, deterministic exponential backoff + jitter,
+                  bounded restart budget, structured status report.
+  ``faults``      deterministic fault-injection harness (dead cameras,
+                  stalled rigs, corrupted frames, trigger desync,
+                  arrival jitter) so every failure mode has a
+                  reproducible test.
+  ``service``     ``FleetService``: ties the three to a ``VisualSystem``
+                  — submit/step API, never-crash discipline (faults
+                  become degradation or quarantine, not exceptions),
+                  plus the ``run_episode`` driver tests and benchmarks
+                  share.
+
+All time is explicit (every entry point takes ``now``): tests and the
+fault harness drive a virtual clock, so restart/backoff behavior is
+bit-reproducible under a fixed seed.
+"""
+
+from repro.serving.faults import FaultInjector, FaultSpec, InjectedFrame
+from repro.serving.queue import FleetBatch, FrameQueue, QueueConfig
+from repro.serving.service import (EpisodeResult, FleetService, RigReport,
+                                   run_episode)
+from repro.serving.supervisor import (RigHealth, Supervisor, SupervisorConfig,
+                                      SupervisorEvent)
+
+__all__ = [
+    "FaultInjector", "FaultSpec", "InjectedFrame",
+    "FleetBatch", "FrameQueue", "QueueConfig",
+    "EpisodeResult", "FleetService", "RigReport", "run_episode",
+    "RigHealth", "Supervisor", "SupervisorConfig", "SupervisorEvent",
+]

@@ -1,0 +1,136 @@
+"""Deterministic fault injection for the streaming fleet service.
+
+Every failure mode the service claims to survive gets a reproducible
+trigger: a ``FaultSpec`` names a rig, a frame window and a fault kind,
+and ``FaultInjector.apply`` perturbs that rig's frames accordingly —
+pure function of (specs, seed, rig, frame index), no wall clock, no
+global RNG — so an episode replays bit-identically and tests can pin
+healthy-rig outputs bit-exact against a no-fault run.
+
+Fault kinds (who detects them is part of the contract):
+
+  ``dead_camera``    slab zeroed AND reported dead in the driver-level
+                     ``camera_mask`` (a real driver knows its camera
+                     died) -> core degrades to surviving pairs.
+  ``corrupt_frame``  slab filled with NaN, mask says HEALTHY — the
+                     service's finite-check must catch it.
+  ``stalled_rig``    the frame is never delivered -> the supervisor's
+                     heartbeat timeout must catch it.
+  ``desync``         one camera's trigger tag drifts by ``magnitude``
+                     seconds -> the rig's desync policy must catch it.
+  ``arrival_jitter`` delivery time skews (deterministic per-frame
+                     half-normal, scale ``magnitude``) -> exercises
+                     queue deadlines/bucketing, not a fault per se.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import typing
+import zlib
+
+import numpy as np
+
+_KINDS = ("dead_camera", "corrupt_frame", "stalled_rig", "desync",
+          "arrival_jitter")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One fault: ``kind`` applied to ``rig`` for frame indices in
+    [``start``, ``stop``) (``stop=None`` = forever).  ``camera`` selects
+    the slab for dead_camera/corrupt_frame/desync; ``magnitude`` is the
+    desync offset / jitter scale in seconds."""
+
+    kind: str
+    rig: typing.Any
+    start: int = 0
+    stop: int | None = None
+    camera: int = 0
+    magnitude: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"kind must be one of {_KINDS}, "
+                             f"got {self.kind!r}")
+        if self.stop is not None and self.stop <= self.start:
+            raise ValueError(f"empty fault window [{self.start}, {self.stop})")
+
+    def active(self, frame_index: int) -> bool:
+        return (frame_index >= self.start
+                and (self.stop is None or frame_index < self.stop))
+
+
+class InjectedFrame(typing.NamedTuple):
+    """``apply``'s output: the (possibly perturbed) frame plus what the
+    DRIVER layer would know.  ``camera_mask`` only reflects faults a
+    real driver reports (dead_camera) — corruption and desync must be
+    caught downstream.  ``delivered=False`` means the frame never
+    reaches the service (stall)."""
+
+    images: np.ndarray
+    timestamps: np.ndarray
+    t_arrival: float
+    delivered: bool
+    camera_mask: np.ndarray
+    faults: tuple[str, ...]
+
+
+class FaultInjector:
+    """Applies the active subset of ``specs`` to each (rig, frame).
+
+    ``clear_rig`` disables every spec targeting a rig — the restart
+    hook: point ``Supervisor.restart_cb`` here and a watchdog restart
+    actually heals the fault, closing the detect -> restart -> recover
+    loop deterministically."""
+
+    def __init__(self, specs: typing.Sequence[FaultSpec],
+                 seed: int = 0) -> None:
+        self.specs = tuple(specs)
+        self.seed = int(seed)
+        self._disabled: set[int] = set()
+
+    def clear_rig(self, rig_id) -> int:
+        """Disable all specs for ``rig_id``; returns how many."""
+        hit = [i for i, s in enumerate(self.specs)
+               if s.rig == rig_id and i not in self._disabled]
+        self._disabled.update(hit)
+        return len(hit)
+
+    def active_faults(self, rig_id, frame_index: int) -> tuple[str, ...]:
+        return tuple(s.kind for i, s in enumerate(self.specs)
+                     if i not in self._disabled and s.rig == rig_id
+                     and s.active(frame_index))
+
+    def _rng(self, rig_id, frame_index: int) -> np.random.RandomState:
+        key = [self.seed & 0xFFFFFFFF,
+               zlib.crc32(repr(rig_id).encode()) & 0xFFFFFFFF,
+               int(frame_index)]
+        return np.random.RandomState(key)
+
+    def apply(self, rig_id, frame_index: int, images, timestamps,
+              t_arrival: float) -> InjectedFrame:
+        im = np.array(images, dtype=np.float32, copy=True)
+        ts = np.array(timestamps, dtype=np.float64, copy=True).reshape(-1)
+        mask = np.ones(im.shape[0], dtype=bool)
+        t = float(t_arrival)
+        delivered = True
+        applied: list[str] = []
+        for i, s in enumerate(self.specs):
+            if i in self._disabled or s.rig != rig_id \
+                    or not s.active(frame_index):
+                continue
+            applied.append(s.kind)
+            if s.kind == "dead_camera":
+                im[s.camera] = 0.0
+                mask[s.camera] = False
+            elif s.kind == "corrupt_frame":
+                im[s.camera] = np.nan
+            elif s.kind == "stalled_rig":
+                delivered = False
+            elif s.kind == "desync":
+                ts[s.camera] += s.magnitude
+            elif s.kind == "arrival_jitter":
+                t += abs(self._rng(rig_id, frame_index)
+                         .normal(0.0, s.magnitude))
+        return InjectedFrame(im, ts, t, delivered, mask, tuple(applied))

@@ -1,0 +1,204 @@
+"""``FleetService``: the never-crash streaming loop over a session.
+
+One service owns one ``VisualSystem`` (one rig layout — mixed layouts
+get one service each, mirroring the per-layout jit caches) plus a
+``FrameQueue`` and a ``Supervisor``.  The contract is the robustness
+inversion of the core API: ``process_frame`` RAISES on bad input so
+callers can't miss it; the service CONVERTS every fault into
+degradation, a drop, or quarantine and keeps serving —
+
+  corrupted frames   eager finite-check per camera slab -> dead-camera
+                     mask (the kernels then sanitize the slab);
+  desync             the rig's ``desync_decision`` applied eagerly; a
+                     policy that would raise becomes a dropped frame
+                     (counted + health-reported, never an exception);
+  dead cameras       driver mask -> masked fleet batch, surviving
+                     stereo pairs still served in the 3-launch budget;
+  stalled rigs       no frames -> no heartbeats -> supervisor timeout,
+                     backoff restarts, quarantine when flapping.
+
+All time is explicit (``submit``/``step`` take the caller's clock), so
+``run_episode`` can drive a virtual clock and replay an injected-fault
+episode bit-identically.
+"""
+
+from __future__ import annotations
+
+import collections
+import typing
+
+import jax
+import numpy as np
+
+from repro.core.pipeline import VisualSystem
+from repro.serving.faults import FaultInjector
+from repro.serving.queue import FrameQueue, QueueConfig
+from repro.serving.supervisor import (Supervisor, SupervisorConfig,
+                                      SupervisorEvent)
+
+
+class RigReport(typing.NamedTuple):
+    """One served (or dropped) rig frame.  ``output`` is the rig's
+    ``StereoOutput`` slice (leading (n_pairs,) axes) for served frames,
+    None for drops; ``status`` is ``"ok"``, ``"degraded"``, or one of
+    the ``"dropped_*"`` reasons."""
+
+    rig_id: typing.Any
+    t: float                    # service-step time the frame was served
+    t_arrival: float            # when the frame arrived (the stable key
+    status: str                 # for cross-episode output comparison)
+    camera_mask: np.ndarray | None
+    output: typing.Any
+    late: bool = False
+
+
+class FleetService:
+    def __init__(self, vs: VisualSystem,
+                 queue_cfg: QueueConfig | None = None,
+                 sup_cfg: SupervisorConfig | None = None,
+                 restart_cb=None) -> None:
+        self.vs = vs
+        self.queue = FrameQueue(vs.rig,
+                                (vs.pipe.orb.height, vs.pipe.orb.width),
+                                queue_cfg)
+        self.supervisor = Supervisor(sup_cfg, restart_cb)
+        self.events: list[SupervisorEvent] = []
+        self.counters = collections.Counter()
+
+    # -- intake ------------------------------------------------------------
+
+    def submit(self, rig_id, images, t_arrival: float, timestamps=None,
+               camera_mask=None) -> str:
+        """Accept one rig frame into the queue, running fault detection
+        eagerly.  Returns the intake status (``"queued"`` /
+        ``"queued_degraded"`` / ``"dropped_*"``); never raises on frame
+        CONTENT (shape/layout errors still raise — those are caller
+        bugs, not sensor faults)."""
+        now = float(t_arrival)
+        self.supervisor.register(rig_id, now)
+        self.counters["frames_in"] += 1
+        if self.supervisor.health(rig_id) is not None \
+                and self.supervisor.health(rig_id).value == "quarantined":
+            self.counters["dropped_quarantined"] += 1
+            return "dropped_quarantined"
+
+        im = np.asarray(images, dtype=np.float32)
+        mask = (np.ones(self.vs.rig.n_cameras, dtype=bool)
+                if camera_mask is None
+                else np.asarray(camera_mask, dtype=bool).reshape(-1))
+        # Corruption: a NaN/inf slab with a healthy driver mask — catch
+        # it here so garbage never reaches (or retraces) the kernels.
+        finite = np.isfinite(im).all(axis=tuple(range(1, im.ndim)))
+        if not finite.all():
+            self.counters["corrupt_cameras"] += int((~finite & mask).sum())
+            mask &= finite
+        if timestamps is not None:
+            decision = self.vs.desync_decision(timestamps)
+            if decision.action in ("raise", "drop_frame"):
+                # Never-crash discipline: a raise-policy desync becomes
+                # a counted drop; the rig stays alive but degraded.
+                self.counters["dropped_desync"] += 1
+                self.supervisor.heartbeat(rig_id, now, degraded=True)
+                return "dropped_desync"
+            if decision.action == "degrade":
+                self.counters["desync_degraded"] += 1
+                mask &= decision.camera_mask
+        if not mask.any():
+            self.counters["dropped_dead"] += 1
+            self.supervisor.heartbeat(rig_id, now, degraded=True)
+            return "dropped_dead"
+
+        degraded = not mask.all()
+        self.supervisor.heartbeat(rig_id, now, degraded=degraded)
+        self.queue.put(rig_id, im, now, camera_mask=mask)
+        self.counters["queued"] += 1
+        return "queued_degraded" if degraded else "queued"
+
+    # -- serving -----------------------------------------------------------
+
+    def step(self, now: float, force: bool = False) -> list[RigReport]:
+        """One service tick: advance the watchdog, then serve at most
+        one bucketed fleet batch (3 kernel launches regardless of how
+        many rigs are real, padded, or degraded)."""
+        self.events.extend(self.supervisor.poll(now))
+        batch = self.queue.next_batch(now, force=force)
+        if batch is None:
+            return []
+        out = self.vs.process_fleet(batch.images,
+                                    camera_mask=batch.camera_mask)
+        self.counters["batches"] += 1
+        self.counters["padded_rows"] += len(batch.rig_mask) - batch.n_real
+        reports = []
+        for b, rig_id in enumerate(batch.rig_ids):
+            mask = batch.camera_mask[b]
+            reports.append(RigReport(
+                rig_id=rig_id, t=float(now),
+                t_arrival=batch.t_arrivals[b],
+                status="ok" if mask.all() else "degraded",
+                camera_mask=mask,
+                output=jax.tree.map(lambda x: x[b], out),
+                late=bool(batch.late[b])))
+            self.counters["frames_out"] += 1
+            self.counters["late_frames"] += int(batch.late[b])
+        return reports
+
+    def status(self, now: float) -> dict:
+        """Structured service snapshot: supervisor report + queue depth
+        + intake/serve counters."""
+        return {
+            "supervisor": self.supervisor.status_report(now),
+            "queue": {"pending": self.queue.pending(),
+                      "oldest_wait_s": self.queue.oldest_wait(now),
+                      "dropped_overflow": self.queue.dropped_overflow},
+            "counters": dict(self.counters),
+        }
+
+
+class EpisodeResult(typing.NamedTuple):
+    reports: list        # every RigReport, in service order
+    events: list         # every SupervisorEvent
+    status: dict         # final FleetService.status snapshot
+
+
+def run_episode(service: FleetService, frames, dt: float = 1.0 / 30.0,
+                t0: float = 0.0, rig_ids: typing.Sequence | None = None,
+                injector: FaultInjector | None = None,
+                settle_steps: int = 4) -> EpisodeResult:
+    """Drive a deterministic streaming episode on a virtual clock.
+
+    ``frames``: (T, n_rigs, n_cameras, H, W).  Frame t of rig r nominally
+    arrives at ``t0 + t * dt`` with trigger tags equal to the arrival
+    time; the optional ``injector`` perturbs images/tags/arrival or
+    withholds delivery per its specs.  After the T arrival ticks,
+    ``settle_steps`` extra force-flushed ticks let watchdog timeouts,
+    backoff restarts and the final partial batch play out.  The SAME
+    driver feeds the fault-injection tests and the ``table_service``
+    benchmark, so "what CI verifies" and "what we measure" is one code
+    path.
+    """
+    frames = np.asarray(frames)
+    t_total, n_rigs = frames.shape[0], frames.shape[1]
+    n_cameras = frames.shape[2]
+    if rig_ids is None:
+        rig_ids = tuple(range(n_rigs))
+    reports: list[RigReport] = []
+    for t in range(t_total):
+        now = t0 + t * dt
+        for r in range(n_rigs):
+            ts = np.full(n_cameras, now, dtype=np.float64)
+            if injector is None:
+                service.submit(rig_ids[r], frames[t, r], now, timestamps=ts)
+                continue
+            inj = injector.apply(rig_ids[r], t, frames[t, r], ts, now)
+            if not inj.delivered:
+                continue
+            service.submit(rig_ids[r], inj.images, inj.t_arrival,
+                           timestamps=inj.timestamps,
+                           camera_mask=inj.camera_mask)
+        reports.extend(service.step(now + 0.5 * dt))
+    for k in range(settle_steps):
+        now = t0 + (t_total + k) * dt
+        reports.extend(service.step(now, force=True))
+    final = t0 + (t_total + settle_steps) * dt
+    return EpisodeResult(reports, list(service.events),
+                         service.status(final))

@@ -1,0 +1,202 @@
+"""Graceful-degradation core tests (no hypothesis dependency): the
+per-camera ``camera_mask`` through ``process_frame``/``process_fleet``,
+NaN-slab sanitization, the 3-launch degraded budget, desync-policy
+plumbing, and the eager mismatched-fleet ValueError."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CameraIntrinsics, DesyncError, ORBConfig,
+                        PipelineConfig, RigConfig, VisualSystem)
+
+H, W = 48, 64
+
+
+def _imgs(seed, *lead):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(0, 256, lead + (H, W))
+                       .astype(np.float32))
+
+
+def _quad(impl=None, **rig_kw):
+    ocfg = ORBConfig(height=H, width=W, max_features=16, n_levels=2,
+                     max_disparity=24)
+    return VisualSystem(
+        RigConfig.quad(CameraIntrinsics(cx=W / 2.0, cy=H / 2.0), **rig_kw),
+        PipelineConfig(orb=ocfg, impl=impl))
+
+
+def _tree_equal(a, b, msg=""):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# camera_mask through the frame/fleet paths
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_all_true_mask_is_bit_exact_identity(impl):
+    vs = _quad(impl=impl)
+    im = _imgs(0, 4)
+    _tree_equal(vs.process_frame(im, camera_mask=np.ones(4, bool)),
+                vs.process_frame(im), f"impl {impl}")
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_dead_camera_masks_its_pair_and_preserves_the_other(impl):
+    """Camera 3 dead: pair (2,3) fully invalid, pair (0,1) bit-exact to
+    the healthy frame — per-slab batch independence is what makes the
+    whole degradation story sound."""
+    vs = _quad(impl=impl)
+    im = _imgs(1, 4)
+    mask = np.asarray([True, True, True, False])
+    out = vs.process_frame(im, camera_mask=mask)
+    healthy = vs.process_frame(im)
+    assert not np.asarray(out.matches.valid[1]).any()
+    assert not np.asarray(out.depth.valid[1]).any()
+    assert not np.asarray(out.features_r.valid[1]).any()
+    _tree_equal(jax.tree.map(lambda x: x[0], out),
+                jax.tree.map(lambda x: x[0], healthy), f"impl {impl}")
+
+
+def test_nan_slab_is_sanitized_by_mask():
+    """A masked camera's slab may be garbage (NaN): sanitization zeroes
+    it BEFORE the kernels, so the output matches a zero-slab input
+    bit for bit and no NaN leaks anywhere."""
+    vs = _quad()
+    im = np.asarray(_imgs(2, 4))
+    bad = im.copy()
+    bad[3] = np.nan
+    zeroed = im.copy()
+    zeroed[3] = 0.0
+    mask = np.asarray([True, True, True, False])
+    out_bad = vs.process_frame(jnp.asarray(bad), camera_mask=mask)
+    out_zero = vs.process_frame(jnp.asarray(zeroed), camera_mask=mask)
+    _tree_equal(out_bad, out_zero)
+    for leaf in jax.tree.leaves(out_bad):
+        assert np.isfinite(np.asarray(leaf, dtype=np.float64)).all()
+
+
+def test_fleet_mask_matches_per_rig_frames():
+    vs = _quad()
+    fleet = _imgs(3, 3, 4)
+    mask = np.asarray([[True] * 4,
+                       [True, True, False, True],
+                       [False, False, True, True]])
+    out = vs.process_fleet(fleet, camera_mask=mask)
+    for r in range(3):
+        want = vs.process_frame(fleet[r], camera_mask=mask[r])
+        _tree_equal(jax.tree.map(lambda x: x[r], out), want, f"rig {r}")
+
+
+def test_degraded_paths_stay_in_the_3_launch_budget():
+    """Masking is elementwise jnp — the degraded frame AND fleet trace
+    the same 3 launches as the healthy path (CI gates the fleet one
+    via benchmarks)."""
+    vs = _quad()
+    im = _imgs(4, 4)
+    fleet = _imgs(5, 3, 4)
+    fmask = jnp.asarray(np.asarray([True, True, True, False]))
+    assert vs.traced_launches("process_frame", im) == 3
+    assert vs.traced_launches("process_frame", im, fmask) == 3
+    flmask_np = np.ones((3, 4), bool)
+    flmask_np[1, 2] = False
+    flmask = jnp.asarray(flmask_np)
+    assert vs.traced_launches("process_fleet", fleet) == 3
+    assert vs.traced_launches("process_fleet", fleet, flmask) == 3
+
+
+def test_masked_entry_uses_its_own_jit_key():
+    """Degraded calls must not retrace (or pollute) the healthy
+    entry's cache."""
+    vs = _quad()
+    im = _imgs(6, 4)
+    vs.process_frame(im)
+    assert vs.trace_count("process_frame") == 1
+    vs.process_frame(im, camera_mask=np.asarray([True, True, False, True]))
+    vs.process_frame(im, camera_mask=np.asarray([True, True, True, False]))
+    assert vs.trace_count("process_frame") == 1
+    assert vs.trace_count("process_frame_masked") == 1   # mask is data
+
+
+def test_camera_mask_shape_validated_eagerly():
+    vs = _quad()
+    with pytest.raises(ValueError, match="camera_mask"):
+        vs.process_frame(_imgs(7, 4), camera_mask=np.ones(3, bool))
+    with pytest.raises(ValueError, match="camera_mask"):
+        vs.process_fleet(_imgs(8, 2, 4), camera_mask=np.ones((3, 4), bool))
+
+
+# ---------------------------------------------------------------------------
+# desync policy plumbing (the hypothesis matrix lives in
+# test_desync_policy.py; these are the always-run pins)
+
+def test_drop_frame_policy_returns_none_and_fleet_masks_rig():
+    vs = _quad(desync_policy="drop_frame", max_desync=1e-3)
+    im = _imgs(9, 4)
+    ts_bad = [0.0, 0.0, 0.0, 1.0]
+    assert vs.process_frame(im, timestamps=ts_bad) is None
+    fleet = jnp.stack([im, im])
+    out = vs.process_fleet(fleet, timestamps=[[0.0] * 4, ts_bad])
+    # dropped rig: every validity field all-False; healthy rig intact
+    for field in (out.features_l.valid, out.matches.valid,
+                  out.depth.valid):
+        assert not np.asarray(field[1]).any()
+    _tree_equal(jax.tree.map(lambda x: x[0], out), vs.process_frame(im))
+
+
+def test_fleet_raise_names_the_offending_rig():
+    vs = _quad(desync_policy="raise", max_desync=1e-3)
+    fleet = _imgs(10, 2, 4)
+    with pytest.raises(DesyncError, match="fleet rig 1"):
+        vs.process_fleet(fleet, timestamps=[[0.0] * 4, [0.0, 0.0, 0.0, 1.0]])
+
+
+def test_degrade_composes_with_caller_mask():
+    """Desync keep-mask ANDs into the caller's dead-camera mask."""
+    vs = _quad(desync_policy="degrade", max_desync=1e-3)
+    im = _imgs(11, 4)
+    out = vs.process_frame(im, timestamps=[0.0, 0.0, 0.0, 1.0],
+                           camera_mask=np.asarray([False, True, True, True]))
+    want = vs.process_frame(
+        im, camera_mask=np.asarray([False, True, True, False]))
+    _tree_equal(out, want)
+
+
+def test_two_camera_rig_with_split_tags_degrades_to_nothing():
+    """Median-cluster rule on a stereo rig with one drifted tag: no
+    camera agrees with the median within tolerance -> everything masks
+    out (degradation, never a guess) — but no crash."""
+    ocfg = ORBConfig(height=H, width=W, max_features=8, n_levels=1,
+                     max_disparity=16)
+    vs = VisualSystem(
+        RigConfig.stereo(CameraIntrinsics(cx=W / 2.0, cy=H / 2.0),
+                         desync_policy="degrade", max_desync=1e-3),
+        PipelineConfig(orb=ocfg))
+    out = vs.process_frame(_imgs(12, 2), timestamps=[0.0, 1.0])
+    assert not np.asarray(out.features_l.valid).any()
+    assert not np.asarray(out.matches.valid).any()
+
+
+# ---------------------------------------------------------------------------
+# eager fleet-shape footgun (ISSUE 6 satellite)
+
+def test_mismatched_fleet_shapes_raise_eagerly():
+    vs = _quad()
+    quad = np.zeros((4, H, W), np.float32)
+    stereo = np.zeros((2, H, W), np.float32)
+    with pytest.raises(ValueError, match="mismatched frame shapes"):
+        vs.process_fleet([quad, stereo])
+    with pytest.raises(ValueError, match="per layout"):
+        vs.process_fleet([quad, np.zeros((4, H, W + 2), np.float32)])
+
+
+def test_fleet_sequence_input_still_works_when_uniform():
+    vs = _quad()
+    f0, f1 = np.asarray(_imgs(13, 4)), np.asarray(_imgs(14, 4))
+    out = vs.process_fleet([f0, f1])
+    _tree_equal(out, vs.process_fleet(jnp.stack([jnp.asarray(f0),
+                                                 jnp.asarray(f1)])))

@@ -1,0 +1,145 @@
+"""Hypothesis matrix over the desync policy space (ISSUE 6 satellite):
+hardware/software sync x (None | raise | drop_frame | degrade) x jitter
+above/below ``max_desync``, pinning that
+
+  - the action taken matches the policy table exactly (including the
+    legacy ``None`` split: hardware raises, software logs),
+  - ``degrade`` output is BIT-EXACT to a healthy frame on the surviving
+    cameras (and identical to an explicit ``camera_mask`` call),
+  - jitter below tolerance never perturbs the output at all.
+
+Timestamps are epoch-scale (~1.7e9 s) on purpose: the desync math must
+run in host float64 (float32 spacing there is 128 s), so any float32
+round-trip in the policy path fails these tests immediately."""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
+
+from repro.core import (CameraIntrinsics, DesyncError, ORBConfig,  # noqa: E402
+                        PipelineConfig, RigConfig, VisualSystem)
+
+H, W = 32, 48
+TOL = 1e-3
+BASE_T = 1.7e9          # epoch-scale stamps: float64-only territory
+_SETTINGS = dict(max_examples=40, deadline=None)
+
+_IMGS = np.random.RandomState(0).randint(0, 256, (4, H, W)) \
+    .astype(np.float32)
+
+
+@functools.lru_cache(maxsize=16)
+def _vs(sync_policy, desync_policy):
+    ocfg = ORBConfig(height=H, width=W, max_features=8, n_levels=1,
+                     max_disparity=16)
+    rig = RigConfig.quad(CameraIntrinsics(cx=W / 2.0, cy=H / 2.0),
+                         sync_policy=sync_policy,
+                         desync_policy=desync_policy, max_desync=TOL)
+    return VisualSystem(rig, PipelineConfig(orb=ocfg))
+
+
+def _stamps(camera, delta):
+    ts = np.full(4, BASE_T, dtype=np.float64)
+    ts[camera] += delta
+    return ts
+
+
+def _tree_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+@given(sync=st.sampled_from(["hardware", "software"]),
+       policy=st.sampled_from([None, "raise", "drop_frame", "degrade"]),
+       above=st.booleans(),
+       camera=st.integers(0, 3),
+       mag=st.floats(1.1, 100.0))
+@settings(**_SETTINGS)
+def test_policy_matrix(sync, policy, above, camera, mag):
+    vs = _vs(sync, policy)
+    delta = mag * TOL if above else TOL / mag
+    ts = _stamps(camera, delta)
+
+    decision = vs.desync_decision(ts)
+    assert decision.desync == pytest.approx(delta, abs=1e-6)
+
+    if not above:
+        # Within tolerance: every policy is a no-op and the output is
+        # bit-exact to a timestamp-free call.
+        assert decision.action == "ok"
+        _tree_equal(vs.process_frame(_IMGS, timestamps=ts),
+                    vs.process_frame(_IMGS))
+        return
+
+    want = policy if policy is not None else (
+        "raise" if sync == "hardware" else "ok")
+    assert decision.action == want
+
+    if want == "raise":
+        with pytest.raises(DesyncError, match="trigger clock"):
+            vs.process_frame(_IMGS, timestamps=ts)
+    elif want == "drop_frame":
+        assert vs.process_frame(_IMGS, timestamps=ts) is None
+    elif want == "ok":          # software legacy: log only
+        _tree_equal(vs.process_frame(_IMGS, timestamps=ts),
+                    vs.process_frame(_IMGS))
+        assert vs.desync_log[-1] == pytest.approx(delta, abs=1e-6)
+    else:                       # degrade
+        keep = np.ones(4, bool)
+        keep[camera] = False
+        assert decision.camera_mask.tolist() == keep.tolist()
+        out = vs.process_frame(_IMGS, timestamps=ts)
+        # identical to an explicit dead-camera mask...
+        _tree_equal(out, vs.process_frame(_IMGS, camera_mask=keep))
+        # ...the offending pair is fully gated off...
+        dead_pair = camera // 2
+        assert not np.asarray(out.matches.valid[dead_pair]).any()
+        assert not np.asarray(out.depth.valid[dead_pair]).any()
+        # ...and the SURVIVING pair is bit-exact to a healthy frame.
+        healthy = vs.process_frame(_IMGS)
+        live_pair = 1 - dead_pair
+        _tree_equal(jax.tree.map(lambda x: x[live_pair], out),
+                    jax.tree.map(lambda x: x[live_pair], healthy))
+
+
+@given(sync=st.sampled_from(["hardware", "software"]),
+       mag=st.floats(1.1, 100.0))
+@settings(**_SETTINGS)
+def test_fleet_degrade_matches_frame_degrade(sync, mag):
+    """The per-rig fleet timestamps path resolves to the same mask the
+    single-frame path does: rig 1 desynced on camera 3 -> its slice
+    equals the degraded process_frame, rig 0 stays bit-exact healthy."""
+    vs = _vs(sync, "degrade")
+    delta = mag * TOL
+    fleet = np.stack([_IMGS, _IMGS])
+    ts = np.stack([_stamps(0, 0.0), _stamps(3, delta)])
+    out = vs.process_fleet(fleet, timestamps=ts)
+    _tree_equal(jax.tree.map(lambda x: x[0], out), vs.process_frame(_IMGS))
+    _tree_equal(jax.tree.map(lambda x: x[1], out),
+                vs.process_frame(_IMGS, timestamps=_stamps(3, delta)))
+
+
+@given(policy=st.sampled_from(["raise", "drop_frame", "degrade"]),
+       deltas=st.lists(st.floats(0.0, 50.0), min_size=4, max_size=4))
+@settings(**_SETTINGS)
+def test_decision_never_mutates_state_on_ok(policy, deltas):
+    """desync_decision is observation + log only: the jit caches and
+    health log length are the only state it may touch."""
+    vs = _vs("hardware", policy)
+    n_before = len(vs.desync_log)
+    decision = vs.desync_decision(np.asarray(deltas) + BASE_T)
+    assert len(vs.desync_log) == n_before + 1
+    spread = max(deltas) - min(deltas)
+    # epoch-scale float64 rounding moves the spread by up to ~4e-7;
+    # stay off the policy boundary so the expected action is unambiguous
+    assume(abs(spread - TOL) > 1e-5)
+    assert decision.desync == pytest.approx(spread, abs=1e-6)
+    if spread <= TOL:
+        assert decision.action == "ok"
+    else:
+        assert decision.action == policy

@@ -1,0 +1,249 @@
+"""Serving-layer unit tests: queue bucketing/padding/deadlines and the
+supervisor's health state machine with deterministic backoff — all on a
+virtual clock (no wall-time reads anywhere in the layer)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CameraIntrinsics, ORBConfig, PipelineConfig,
+                        RigConfig, VisualSystem)
+from repro.serving import (FleetService, FrameQueue, QueueConfig, RigHealth,
+                           Supervisor, SupervisorConfig)
+
+H, W = 48, 64
+
+
+def _rig(**kw):
+    return RigConfig.quad(CameraIntrinsics(cx=W / 2.0, cy=H / 2.0), **kw)
+
+
+def _frame(seed=0):
+    return np.random.RandomState(seed).randint(
+        0, 256, (4, H, W)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# FrameQueue
+
+def test_queue_put_validates_shape_eagerly():
+    q = FrameQueue(_rig(), (H, W))
+    with pytest.raises(ValueError, match=r"\(4, 48, 64\)"):
+        q.put("a", np.zeros((4, H, W + 1), np.float32), 0.0)
+    with pytest.raises(ValueError, match="camera_mask"):
+        q.put("a", _frame(), 0.0, camera_mask=np.ones(3, bool))
+
+
+def test_queue_buckets_and_pads():
+    """3 pending rigs -> smallest covering bucket (4), padding row
+    masked out of both rig_mask and camera_mask."""
+    q = FrameQueue(_rig(), (H, W), QueueConfig(bucket_sizes=(1, 2, 4, 8),
+                                               deadline_s=0.1))
+    for r in range(3):
+        q.put(r, _frame(r), t_arrival=0.0)
+    batch = q.next_batch(now=0.2)          # past deadline -> ready
+    assert batch is not None
+    assert batch.images.shape == (4, 4, H, W)
+    assert batch.rig_ids == (0, 1, 2)
+    assert batch.rig_mask.tolist() == [True, True, True, False]
+    assert batch.camera_mask[:3].all() and not batch.camera_mask[3].any()
+    assert np.asarray(batch.images[3]).sum() == 0.0
+    assert q.pending() == 0
+
+
+def test_queue_not_ready_before_deadline_ready_when_full():
+    cfg = QueueConfig(bucket_sizes=(1, 2), deadline_s=1.0)
+    q = FrameQueue(_rig(), (H, W), cfg)
+    q.put("a", _frame(), t_arrival=0.0)
+    assert q.next_batch(now=0.5) is None          # under deadline, not full
+    for i in range(1):
+        q.put(i, _frame(i), t_arrival=0.5)
+    assert q.ready(0.6)                           # largest bucket (2) full
+    batch = q.next_batch(now=0.6)
+    assert batch.n_real == 2 and not batch.late.any()
+    # force flushes regardless of readiness
+    q.put("z", _frame(), t_arrival=10.0)
+    assert q.next_batch(now=10.0) is None
+    assert q.next_batch(now=10.0, force=True).rig_ids == ("z",)
+
+
+def test_queue_late_flag_and_overflow_drop():
+    cfg = QueueConfig(bucket_sizes=(4,), deadline_s=0.1,
+                      max_pending_per_rig=2)
+    q = FrameQueue(_rig(), (H, W), cfg)
+    q.put("a", _frame(1), t_arrival=0.0)
+    q.put("a", _frame(2), t_arrival=1.0)
+    q.put("a", _frame(3), t_arrival=2.0)   # 3rd pending -> oldest dropped
+    assert q.dropped_overflow == 1 and q.pending() == 2
+    batch = q.next_batch(now=2.05, force=True)
+    assert batch.t_arrivals == (1.0, 2.0)  # t=0.0 frame was the drop
+    assert batch.late.tolist() == [True, False]
+
+
+def test_queue_partial_camera_mask_threads_through():
+    q = FrameQueue(_rig(), (H, W))
+    mask = np.asarray([True, True, False, True])
+    q.put("a", _frame(), 0.0, camera_mask=mask)
+    batch = q.next_batch(now=1.0, force=True)
+    assert batch.camera_mask[0].tolist() == mask.tolist()
+
+
+# ---------------------------------------------------------------------------
+# Supervisor
+
+def _sup(**kw):
+    base = dict(heartbeat_timeout_s=1.0, backoff_base_s=1.0,
+                backoff_factor=2.0, backoff_max_s=8.0, backoff_jitter=0.25,
+                restart_budget=2, flap_window_s=100.0, seed=7)
+    base.update(kw)
+    return Supervisor(SupervisorConfig(**base))
+
+
+def test_supervisor_heartbeats_keep_healthy():
+    s = _sup()
+    s.register("r", 0.0)
+    for t in (0.5, 1.0, 1.5):
+        s.heartbeat("r", t)
+        assert s.poll(t) == []
+    assert s.health("r") is RigHealth.HEALTHY
+    s.heartbeat("r", 2.0, degraded=True)
+    assert s.health("r") is RigHealth.DEGRADED
+    s.heartbeat("r", 2.5)
+    assert s.health("r") is RigHealth.HEALTHY
+
+
+def test_supervisor_timeout_restart_recovery():
+    s = _sup()
+    s.register("r", 0.0)
+    events = s.poll(2.0)                       # heartbeat lapsed
+    assert [e.kind for e in events] == ["timeout"]
+    assert s.health("r") is RigHealth.RESTARTING
+    at = events[0].at
+    assert 2.0 + 1.0 * 0.75 <= at <= 2.0 + 1.0 * 1.25   # base +- jitter
+    assert s.poll(at - 1e-6) == []             # not due yet
+    events = s.poll(at)
+    assert [e.kind for e in events] == ["restart"]
+    s.heartbeat("r", at + 0.1)                 # rig came back
+    assert s.health("r") is RigHealth.HEALTHY
+    assert s.poll(at + 0.2) == []
+
+
+def test_supervisor_backoff_grows_then_quarantines():
+    s = _sup(restart_budget=2)
+    s.register("r", 0.0)
+    t = 2.0
+    delays = []
+    for _ in range(2):
+        ev = s.poll(t)
+        assert ev[0].kind == "timeout"
+        at = ev[0].at
+        delays.append(at - t)
+        ev = s.poll(at)
+        assert [e.kind for e in ev] == ["restart"]
+        t = at + 2.0                           # no heartbeat -> lapse again
+    assert delays[1] > delays[0]               # exponential growth
+    ev = s.poll(t)
+    assert [e.kind for e in ev] == ["quarantine"]
+    assert s.health("r") is RigHealth.QUARANTINED
+    # quarantined rigs are inert until reinstated
+    s.heartbeat("r", t + 1.0)
+    assert s.health("r") is RigHealth.QUARANTINED
+    assert s.poll(t + 50.0) == []
+    s.reinstate("r", t + 60.0)
+    ev = s.poll(t + 60.0)
+    assert [e.kind for e in ev] == ["restart"]
+    s.heartbeat("r", t + 61.0)
+    assert s.health("r") is RigHealth.HEALTHY
+
+
+def test_supervisor_backoff_deterministic_and_decorrelated():
+    """Same seed -> identical schedules; different rigs -> different
+    jitter (no restart stampede)."""
+    def schedule(sup, rig):
+        sup.register(rig, 0.0)
+        return [e.at for e in sup.poll(5.0) if e.kind == "timeout"]
+
+    a = schedule(_sup(seed=7), "rig-a")
+    b = schedule(_sup(seed=7), "rig-a")
+    assert a == b
+    c = schedule(_sup(seed=7), "rig-b")
+    assert a != c
+
+
+def test_supervisor_flap_window_forgives_old_restarts():
+    s = _sup(restart_budget=1, flap_window_s=10.0)
+    s.register("r", 0.0)
+    ev = s.poll(2.0)
+    assert ev[0].kind == "timeout"
+    s.poll(ev[0].at)
+    s.heartbeat("r", ev[0].at + 0.1)           # recovers
+    # next lapse far outside the flap window: budget is reset, so it
+    # schedules a restart instead of quarantining
+    ev = s.poll(ev[0].at + 50.0)
+    assert [e.kind for e in ev] == ["timeout"]
+
+
+def test_supervisor_status_report_structure():
+    s = _sup()
+    s.register("a", 0.0)
+    s.register("b", 0.0)
+    s.heartbeat("a", 0.5, degraded=True)
+    rep = s.status_report(1.0)
+    assert rep["counts"]["degraded"] == 1 and rep["counts"]["healthy"] == 1
+    assert rep["rigs"]["a"]["degraded_frames"] == 1
+    assert rep["rigs"]["b"]["since_heartbeat_s"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# FleetService intake (fault detection at submit; serving is covered
+# end-to-end in test_serving_faults.py)
+
+def _service(**rig_kw):
+    ocfg = ORBConfig(height=H, width=W, max_features=8, n_levels=1,
+                     max_disparity=16)
+    vs = VisualSystem(_rig(**rig_kw), PipelineConfig(orb=ocfg))
+    return FleetService(vs, QueueConfig(bucket_sizes=(1, 2, 4),
+                                        deadline_s=0.01))
+
+
+def test_service_detects_corrupt_slab():
+    svc = _service()
+    im = _frame()
+    im[2] = np.nan
+    assert svc.submit("r", im, 0.0) == "queued_degraded"
+    assert svc.counters["corrupt_cameras"] == 1
+    batch = svc.queue.next_batch(0.0, force=True)
+    assert batch.camera_mask[0].tolist() == [True, True, False, True]
+
+
+def test_service_never_raises_on_desync():
+    """A raise-policy desync becomes a counted drop, not an exception —
+    the service's never-crash discipline."""
+    svc = _service(sync_policy="hardware")      # legacy policy -> raise
+    ts = [0.0, 0.0, 0.0, 5.0]
+    assert svc.submit("r", _frame(), 0.0, timestamps=ts) == "dropped_desync"
+    assert svc.counters["dropped_desync"] == 1
+    assert svc.supervisor.health("r") is RigHealth.DEGRADED
+    assert svc.queue.pending() == 0
+
+
+def test_service_degrade_policy_masks_camera():
+    svc = _service(desync_policy="degrade", max_desync=1e-3)
+    ts = [0.0, 0.0, 0.0, 5.0]
+    assert svc.submit("r", _frame(), 0.0, timestamps=ts) == "queued_degraded"
+    batch = svc.queue.next_batch(0.0, force=True)
+    assert batch.camera_mask[0].tolist() == [True, True, True, False]
+
+
+def test_service_drops_all_dead_frame():
+    svc = _service()
+    im = np.full((4, H, W), np.nan, np.float32)
+    assert svc.submit("r", im, 0.0) == "dropped_dead"
+    assert svc.queue.pending() == 0
+
+
+def test_service_drops_quarantined_rig_frames():
+    svc = _service()
+    svc.supervisor.register("r", 0.0)
+    svc.supervisor._rigs["r"].health = RigHealth.QUARANTINED
+    assert svc.submit("r", _frame(), 1.0) == "dropped_quarantined"
+    assert svc.queue.pending() == 0
