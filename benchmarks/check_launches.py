@@ -27,10 +27,14 @@ import sys
 # fm = the fused matcher alone (1), fleet = an N-rig fleet frame (3 —
 # the `VisualSystem.process_fleet` budget), degraded_fleet = the same
 # fleet frame with dead cameras masked out (still 3: degradation is
-# elementwise masking, never extra kernels).
+# elementwise masking, never extra kernels), u8_* = the
+# precision='uint8' integer datapath (still 3 for frame AND fleet
+# frame: dtype switches the kernels' element type, never the launch
+# graph).
 REQUIRED_GATES = ("quad_frame_launches", "fm_frame_launches",
                   "fleet_frame_launches",
-                  "degraded_fleet_frame_launches")
+                  "degraded_fleet_frame_launches",
+                  "u8_frame_launches", "u8_fleet_frame_launches")
 
 
 def check(path: str) -> int:

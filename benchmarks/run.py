@@ -41,6 +41,15 @@
                                   python loop; emits the
                                   launch_gate/fleet_frame_* rows CI
                                   enforces
+  table_service          PR 6     streaming fleet service under fault
+                                  injection; emits the degraded-fleet
+                                  launch_gate rows
+  table_precision        PR 7     uint8 integer datapath vs f32: wall
+                                  clock + computed resident FM slab
+                                  bytes/pair (4x cut), and the
+                                  launch_gate/u8_* rows CI enforces
+                                  (uint8 frame/fleet frame == 3
+                                  launches)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--out PATH]
 Prints CSV rows ``table,name,value,unit,note`` and writes them to a
@@ -526,6 +535,8 @@ def table_whole_frame_vs_per_level(quick=False):
          f"traced, 4 cams {w}x{h} x {gcfg.n_levels} levels")
     emit("launch_gate", "quad_frame_budget", budget, "kernels",
          "whole-frame FE (1 dense + 1 sparse) + 1 fused FM")
+    emit("launch_gate", "quad_frame_input_bytes", 4 * h * w * 4, "bytes",
+         f"4 f32 camera slabs {w}x{h}; /4 under precision='uint8'")
 
 
 def table_fm_fused_vs_unfused(quick=False):
@@ -640,6 +651,9 @@ def table_fleet(quick=False):
     emit("launch_gate", "fleet_frame_budget", 3, "kernels",
          "rig axis folded into the batched kernels: fleet == single-rig "
          "budget")
+    emit("launch_gate", "fleet_frame_input_bytes", n_rigs * 4 * h * w * 4,
+         "bytes", f"{n_rigs} rigs x 4 f32 camera slabs {res}; /4 under "
+         "precision='uint8'")
 
 
 def table_service(quick=False):
@@ -720,6 +734,97 @@ def table_service(quick=False):
          "degradation is elementwise masking — same 3-launch schedule")
 
 
+def table_precision(quick=False):
+    """Low-precision integer datapath (this PR): the whole image path —
+    pyramid slabs, fused blur accumulation, FAST scores, patch moments,
+    descriptor selection, FM slab reads — runs in integers when the
+    session is built with ``PipelineConfig(precision='uint8')``.
+
+    Measures f32 vs uint8 ``process_frame`` wall clock on the jnp path,
+    and COMPUTES the resident-slab bytes/pair of the fused FM launch
+    from the actual padded slab shapes (``ops._pad_fm_slab`` via
+    ``jax.eval_shape`` — no allocation): the uint8 path holds the SAME
+    padded geometry in 1-byte elements, a 4x VMEM cut (the acceptance
+    floor is 3.5x), in the same 3-launch budget — gated in CI via the
+    ``launch_gate/u8_*`` rows emitted here.
+    """
+    rng = np.random.RandomState(13)
+    resolutions = [(480, 640)] + ([] if quick else [(720, 1280)])
+    for h, w in resolutions:
+        res = f"{w}x{h}"
+        ocfg = ORBConfig(height=h, width=w, n_levels=2, max_features=512,
+                         max_disparity=64)
+        intr = CameraIntrinsics(cx=w / 2.0, cy=h / 2.0)
+        rig = RigConfig.quad(intr)
+        imgs_u8 = rng.randint(0, 256, (4, h, w)).astype(np.uint8)
+        vs_f = VisualSystem(rig, PipelineConfig(orb=ocfg, impl="ref"))
+        vs_u = VisualSystem(rig, PipelineConfig(orb=ocfg, impl="ref",
+                                                precision="uint8"))
+        iters = 3 if (h, w) == (720, 1280) else 5
+        t_f = _bench_median(vs_f.process_frame,
+                            jnp.asarray(imgs_u8.astype(np.float32)),
+                            iters=iters)
+        t_u = _bench_median(vs_u.process_frame, jnp.asarray(imgs_u8),
+                            iters=iters)
+        emit("precision", f"f32_frame_ms_{res}", round(t_f * 1e3, 2),
+             "ms", "quad frame, f32 slabs (jnp path)")
+        emit("precision", f"u8_frame_ms_{res}", round(t_u * 1e3, 2),
+             "ms", "quad frame, uint8 slabs / int32 accumulators (jnp "
+             "path)")
+        emit("precision", f"u8_speedup_{res}", round(t_f / t_u, 2), "x",
+             "f32 / uint8 wall clock (host jnp; the VMEM/bandwidth win "
+             "is the computed rows below)")
+
+        # Resident-slab bytes of the fused FM launch, computed from the
+        # ACTUAL padded shapes the dispatch builds (padding geometry is
+        # dtype-independent, so the ratio is exactly itemsize).
+        ry = ocfg.sad_window // 2
+        def _slab_bytes(dtype):
+            one = jax.ShapeDtypeStruct((1, h, w), dtype)
+            sl = jax.eval_shape(lambda x: ops._pad_fm_slab(x, ry, ry),
+                                one)
+            sr = jax.eval_shape(
+                lambda x: ops._pad_fm_slab(x, ry, ry + ocfg.sad_range),
+                one)
+            return int((np.prod(sl.shape) + np.prod(sr.shape))
+                       * np.dtype(dtype).itemsize)
+        b_f, b_u = _slab_bytes(jnp.float32), _slab_bytes(jnp.uint8)
+        emit("precision", f"f32_fm_slab_bytes_per_pair_{res}", b_f,
+             "bytes", "padded level-0 L+R slabs resident in the FM "
+             "megakernel")
+        emit("precision", f"u8_fm_slab_bytes_per_pair_{res}", b_u,
+             "bytes", "same padded geometry, 1-byte elements")
+        emit("precision", f"u8_slab_reduction_{res}",
+             round(b_f / b_u, 2), "x",
+             "resident FM slab bytes f32 / uint8 (acceptance floor "
+             "3.5x)")
+
+    # Launch-count regression gates: the uint8 schedule is the SAME
+    # 3 launches (1 dense FE + 1 sparse FE + 1 fused FM) per frame and
+    # per N-rig fleet frame — dtype switches the kernels' element type,
+    # not the launch graph.
+    h, w = (240, 320) if quick else (480, 640)
+    gcfg = ORBConfig(height=h, width=w, n_levels=2, max_features=512,
+                     max_disparity=64)
+    gvs = VisualSystem(RigConfig.quad(CameraIntrinsics(cx=w / 2.0,
+                                                       cy=h / 2.0)),
+                       PipelineConfig(orb=gcfg, precision="uint8"))
+    gimgs = jnp.zeros((4, h, w), jnp.uint8)
+    actual = gvs.traced_launches("process_frame", gimgs)
+    emit("launch_gate", "u8_frame_launches", actual, "kernels",
+         f"traced, uint8 datapath, 4 cams {w}x{h} x {gcfg.n_levels} "
+         "levels")
+    emit("launch_gate", "u8_frame_budget", 3, "kernels",
+         "uint8 quad frame: same 3-launch schedule as f32")
+    n_rigs = 4
+    fleet = jnp.zeros((n_rigs, 4, h, w), jnp.uint8)
+    actual = gvs.traced_launches("process_fleet", fleet)
+    emit("launch_gate", "u8_fleet_frame_launches", actual, "kernels",
+         f"traced, uint8 datapath, {n_rigs} rigs x 4 cams {w}x{h}")
+    emit("launch_gate", "u8_fleet_frame_budget", 3, "kernels",
+         "uint8 fleet frame: same 3-launch schedule as f32")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -739,6 +844,7 @@ def main() -> None:
     table_fm_fused_vs_unfused(args.quick)
     table_fleet(args.quick)
     table_service(args.quick)
+    table_precision(args.quick)
     print(f"# done in {time.time() - t0:.1f}s ({len(ROWS)} rows)")
     if args.out:
         rows = [{"table": t, "name": n, "value": v, "unit": u, "note": note}

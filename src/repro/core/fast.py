@@ -34,11 +34,11 @@ def select_topk(score: jnp.ndarray, k: int, border: int):
     col = jnp.arange(w)[None, :]
     inside = ((row >= border) & (row < h - border)
               & (col >= border) & (col < w - border))
-    masked = jnp.where(inside, score, 0.0)
+    masked = jnp.where(inside, score, jnp.zeros_like(score))
     vals, idx = jax.lax.top_k(masked.reshape(-1), k)
     ys = (idx // w).astype(jnp.int32)
     xs = (idx % w).astype(jnp.int32)
-    valid = vals > 0.0
+    valid = vals > 0
     return jnp.stack([xs, ys], axis=-1), vals, valid
 
 

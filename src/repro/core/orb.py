@@ -61,7 +61,9 @@ def _level_features(lvl: int, cfg: ORBConfig, xy, vals, valid,
     return FeatureSet(
         xy=xy.astype(jnp.float32) * scale,
         level=jnp.full((b, k_l), lvl, dtype=jnp.int32),
-        score=vals,
+        # int16 scores (the uint8 datapath) cast losslessly: FAST
+        # scores live in [0, 255].  FeatureSet dtypes never change.
+        score=vals.astype(jnp.float32),
         theta=theta,
         desc=desc,
         valid=valid,
@@ -69,15 +71,23 @@ def _level_features(lvl: int, cfg: ORBConfig, xy, vals, valid,
 
 
 def extract_features_batched(images: jnp.ndarray, cfg: ORBConfig,
-                             impl: str | None = None) -> FeatureSet:
+                             impl: str | None = None, *,
+                             precision: str = "f32") -> FeatureSet:
     """images: (B, H, W) uint8/float in [0, 255] — B cameras — to a
     FeatureSet of K features with a leading (B,) axis on every field.
 
     Exactly 2 kernel launches per FRAME (1 dense + 1 sparse) for ALL
     cameras x ALL pyramid levels — asserted by the traced launch counter
     in tests and gated in CI by ``benchmarks.check_launches``.
+
+    precision="uint8" keeps the pyramid slabs uint8 end-to-end (4x less
+    resident VMEM, int32 accumulators in the kernels — paper Sec. III
+    word-length optimization); the FeatureSet dtypes are unchanged, and
+    on quantized images the keypoints/descriptors are bit-equal to the
+    f32 path (pinned in tests/test_precision.py).
     """
-    levels = pyramid.build_pyramid_batched(images, cfg)
+    levels = pyramid.build_pyramid_batched(images, cfg,
+                                           precision=precision)
     ks = cfg.features_per_level()
     dense = ops.fast_blur_nms_pyramid(
         levels, float(cfg.fast_threshold), nms=cfg.nms,
@@ -97,14 +107,16 @@ def extract_features_batched(images: jnp.ndarray, cfg: ORBConfig,
 
 
 def extract_features_per_level(images: jnp.ndarray, cfg: ORBConfig,
-                               impl: str | None = None) -> FeatureSet:
+                               impl: str | None = None, *,
+                               precision: str = "f32") -> FeatureSet:
     """Reference per-level schedule: 2 launches per pyramid LEVEL (the
     PR-2 pipeline).  Kept as the oracle the whole-frame path is pinned
     against bit-for-bit (``tests/test_whole_frame_fused.py``) and as the
     baseline of the ``table_whole_frame_vs_per_level`` benchmark; the
     hot path is ``extract_features_batched``.
     """
-    levels = pyramid.build_pyramid_batched(images, cfg)
+    levels = pyramid.build_pyramid_batched(images, cfg,
+                                           precision=precision)
     ks = cfg.features_per_level()
     parts = []
     for lvl, (imgs_l, k_l) in enumerate(zip(levels, ks)):
@@ -120,11 +132,13 @@ def extract_features_per_level(images: jnp.ndarray, cfg: ORBConfig,
 
 
 def extract_features(image: jnp.ndarray, cfg: ORBConfig,
-                     impl: str | None = None) -> FeatureSet:
+                     impl: str | None = None, *,
+                     precision: str = "f32") -> FeatureSet:
     """image: (H, W) uint8/float in [0, 255] -> FeatureSet of K features.
 
     Batch-of-one view of ``extract_features_batched`` so single-image
     callers share the whole-frame fused kernel path bit-for-bit.
     """
-    feats = extract_features_batched(image[None], cfg, impl=impl)
+    feats = extract_features_batched(image[None], cfg, impl=impl,
+                                     precision=precision)
     return jax.tree.map(lambda x: x[0], feats)

@@ -85,6 +85,7 @@ from repro.distributed import sharding
 from repro.kernels import ops
 
 _SCHEDULES = ("sequential", "pipelined")
+_PRECISIONS = ("f32", "uint8")
 
 
 class DesyncDecision(typing.NamedTuple):
@@ -112,6 +113,14 @@ class PipelineConfig:
     frame of latency hidden by the drain step).  ``rig_shard_axis``
     names the mesh axis ``process_fleet`` / ``run_fleet`` shard the
     rig dimension over when a ``use_sharding`` mesh is installed.
+    ``precision`` selects the image datapath: "f32" (default) keeps
+    float32 slabs; "uint8" is the paper's 8-bit datapath end-to-end —
+    uint8 pyramid slabs, int32 fixed-point blur accumulation, int16
+    FAST scores, int32 patch moments and int8 descriptor selection —
+    cutting resident slab VMEM 4x in the same 3-launch budget.  The
+    uint8 path requires ``ORBConfig.quantized`` and uint8 input frames
+    (validated eagerly); FAST keypoints and descriptors are bit-exact
+    against the quantized f32 path.
     """
 
     orb: ORBConfig = ORBConfig()
@@ -120,6 +129,7 @@ class PipelineConfig:
     temporal_radius: float = 48.0
     temporal_radius_y: float | None = None
     rig_shard_axis: str | None = None
+    precision: str = "f32"
 
     def __post_init__(self):
         if self.schedule not in _SCHEDULES:
@@ -129,6 +139,16 @@ class PipelineConfig:
         if self.impl not in (None, "ref", "pallas"):
             raise ValueError(
                 f"impl must be None, 'ref' or 'pallas', got {self.impl!r}")
+        if self.precision not in _PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {_PRECISIONS}, "
+                f"got {self.precision!r}")
+        if self.precision == "uint8" and not self.orb.quantized:
+            raise ValueError(
+                "precision='uint8' requires ORBConfig.quantized=True: "
+                "the integer datapath IS the quantized fixed-point "
+                "pipeline held in uint8 slabs (a float Gaussian is not "
+                "representable in a uint8 level)")
 
 
 class VisualSystem:
@@ -212,6 +232,31 @@ class VisualSystem:
                 f"{self.pipe.schedule!r} schedule needs at least one "
                 "frame (the pipelined prologue/drain is defined for "
                 "T >= 1)")
+        self._check_dtype(images, what)
+
+    def _check_dtype(self, images, what: str) -> None:
+        """Eager dtype validation against the session's configured
+        precision — a float frame silently entering a uint8 session (or
+        an integer frame a float one) would otherwise produce garbage
+        scores deep inside the kernels instead of an error here."""
+        dtype = np.dtype(getattr(images, "dtype", np.asarray(images).dtype))
+        precision = self.pipe.precision
+        if precision == "uint8":
+            if dtype != np.uint8:
+                raise TypeError(
+                    f"{what}: images have dtype {dtype.name} but this "
+                    "session is configured with "
+                    "PipelineConfig(precision='uint8') — the integer "
+                    "datapath needs uint8 frames.  Quantize with "
+                    "np.round(np.clip(images, 0, 255)).astype(np.uint8) "
+                    "or build the session with precision='f32'.")
+        elif not np.issubdtype(dtype, np.floating):
+            raise TypeError(
+                f"{what}: images have dtype {dtype.name} but this "
+                "session is configured with "
+                "PipelineConfig(precision='f32') — pass float frames "
+                "(e.g. images.astype(np.float32)) or build the session "
+                "with precision='uint8' to run the integer datapath.")
 
     def desync_decision(self, timestamps) -> DesyncDecision:
         """Apply the rig's sync + desync policies to one frame's camera
@@ -290,7 +335,8 @@ class VisualSystem:
         """FE stage over the flat camera batch: ONE dense + ONE sparse
         launch for every camera of every rig at every pyramid level."""
         feats = orb.extract_features_batched(images, self.pipe.orb,
-                                             impl=impl)
+                                             impl=impl,
+                                             precision=self.pipe.precision)
         li, ri = self._flat_pair_indices(n_rigs)
         feat_l = jax.tree.map(lambda x: x[li], feats)
         feat_r = jax.tree.map(lambda x: x[ri], feats)

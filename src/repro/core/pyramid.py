@@ -26,8 +26,24 @@ def bilinear_resize(image: jnp.ndarray, out_hw: tuple[int, int]) -> jnp.ndarray:
     return jax.image.resize(img, out_hw, method="bilinear")
 
 
-def build_pyramid(image: jnp.ndarray, cfg: ORBConfig) -> list[jnp.ndarray]:
-    """Return ``cfg.n_levels`` float32 images; level 0 is the input."""
+def build_pyramid(image: jnp.ndarray, cfg: ORBConfig, *,
+                  precision: str = "f32") -> list[jnp.ndarray]:
+    """Return ``cfg.n_levels`` level images; level 0 is the input.
+
+    precision="f32" (default) emits float32 levels as always.
+    precision="uint8" emits uint8 levels — the paper's 8-bit datapath:
+    level 0 is the uint8 input unchanged, and each resize runs bilinear
+    in f32 then rounds/clips back to uint8.  Because the f32 path with
+    ``cfg.quantized`` already rounds+clips every resized level to
+    integer values in [0, 255], the uint8 levels are the SAME values in
+    a 4x smaller slab."""
+    if precision == "uint8":
+        levels = [image.astype(jnp.uint8)]
+        for lvl in range(1, cfg.n_levels):
+            out = bilinear_resize(levels[-1], cfg.level_shape(lvl))
+            levels.append(jnp.round(jnp.clip(out, 0.0, 255.0))
+                          .astype(jnp.uint8))
+        return levels
     img = image.astype(jnp.float32)
     levels = [img]
     for lvl in range(1, cfg.n_levels):
@@ -44,12 +60,14 @@ def level_shapes(cfg: ORBConfig) -> list[tuple[int, int]]:
     return [cfg.level_shape(lvl) for lvl in range(cfg.n_levels)]
 
 
-def build_pyramid_batched(images: jnp.ndarray,
-                          cfg: ORBConfig) -> list[jnp.ndarray]:
-    """Batched pyramid: (B, H, W) -> list of (B, h_l, w_l) float32.
+def build_pyramid_batched(images: jnp.ndarray, cfg: ORBConfig, *,
+                          precision: str = "f32") -> list[jnp.ndarray]:
+    """Batched pyramid: (B, H, W) -> list of (B, h_l, w_l) level images
+    (float32, or uint8 under precision="uint8").
 
     B is the flattened camera batch of the fused frontend; each level is
     one resize over the whole batch.  All levels together feed ONE
     whole-frame dense launch (``ops.fast_blur_nms_pyramid``).
     """
-    return jax.vmap(lambda im: build_pyramid(im, cfg))(images)
+    return jax.vmap(
+        lambda im: build_pyramid(im, cfg, precision=precision))(images)

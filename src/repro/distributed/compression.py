@@ -1,15 +1,28 @@
-"""Compressed gradient all-reduce (int8 ring), via shard_map.
+"""8-bit wire formats: compressed gradient all-reduce + feature wire.
 
-The TPU analog of the paper's 8-bit word-length optimization, applied to
-the DP gradient sync: a ring reduce-scatter whose wire format is int8
-with one f32 scale per shard-chunk, followed by an int8 all-gather.
-Wire volume: 2 x size/4 bytes vs 2 x size (f32 AR) — ~4x reduction, at
-a bounded quantization error (tested).
+The TPU analog of the paper's 8-bit word-length optimization, applied
+everywhere data crosses a link:
 
-Accumulation stays exact-ish: each hop dequantizes, adds in f32, and
-requantizes, so error grows O(log-ish) with ring length rather than
-compounding catastrophically; relative error is bounded by ~1/127 per
-hop on the running partial sum.
+1. GRADIENT SYNC (``compressed_psum``): a ring reduce-scatter whose
+   wire format is int8 with one f32 scale per shard-chunk, followed by
+   an int8 all-gather.  Wire volume: 2 x size/4 bytes vs 2 x size
+   (f32 AR) — ~4x reduction, at a bounded quantization error (tested).
+
+   Accumulation stays exact-ish: each hop dequantizes, adds in f32, and
+   requantizes, so error grows O(log-ish) with ring length rather than
+   compounding catastrophically; relative error is bounded by ~1/127
+   per hop on the running partial sum.
+
+2. FEATURE / MATCH WIRE (``encode_features`` et al.): the serving tier
+   ships frontend outputs off-accelerator (VO backend, fleet uplink).
+   Descriptors are BIT PATTERNS, not magnitudes — they go over the wire
+   as a lossless uint32 <-> 4-byte little-endian view (256 bits stay
+   256 bits, Hamming distances unchanged); float fields (disparity,
+   depth, coordinates) reuse the SAME int8+scale quantizer as the
+   gradient ring (bounded relative error ~1/127 of the field's max);
+   validity masks pack to one bit per entry; match distances fit uint16
+   with a no-match sentinel.  Round-trip pins live in
+   tests/test_precision.py.
 """
 
 from __future__ import annotations
@@ -18,8 +31,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as Ps
+
+from repro.core.types import DepthSet, FeatureSet, MatchSet
 
 
 def _quant(x: jnp.ndarray):
@@ -103,3 +119,149 @@ def compressed_psum(tree, mesh: Mesh, axis: str = "data"):
         out.append(summed[off:off + size].reshape(x.shape))
         off += size
     return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Feature / match wire format (int8 + scale, lossless descriptor bytes)
+# ---------------------------------------------------------------------------
+
+#: uint16 sentinel for "no match" slots (right_index == -1 or distance
+#: >= the kernels' MATCH_BIG).  Real Hamming distances are <= 256 and
+#: real indices are < max_features (<= 1000), so the sentinel is
+#: unambiguous.
+WIRE_NO_MATCH = 0xFFFF
+
+_BYTE_SHIFTS = jnp.arange(4, dtype=jnp.uint32) * jnp.uint32(8)
+
+
+def encode_descriptors(desc: jnp.ndarray) -> jnp.ndarray:
+    """(..., 8) uint32 rBRIEF descriptors -> (..., 32) uint8 wire bytes
+    (little-endian per word).  LOSSLESS: descriptors are bit patterns —
+    quantizing them like magnitudes would corrupt Hamming distances, so
+    the wire format is a pure byte view."""
+    d = desc.astype(jnp.uint32)
+    b = (d[..., None] >> _BYTE_SHIFTS) & jnp.uint32(0xFF)
+    return b.astype(jnp.uint8).reshape(desc.shape[:-1] + (32,))
+
+
+def decode_descriptors(wire: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of ``encode_descriptors``: (..., 32) uint8 -> (..., 8)
+    uint32, bit-exact."""
+    b = wire.astype(jnp.uint32).reshape(wire.shape[:-1] + (8, 4))
+    return jnp.sum(b << _BYTE_SHIFTS, axis=-1, dtype=jnp.uint32)
+
+
+def quantize_f32(x: jnp.ndarray):
+    """Public int8+scale quantizer — the gradient ring's wire format
+    reused for float feature fields.  Returns (int8 codes, f32 scale);
+    absolute error is bounded by scale/2 ~= max|x| / 254."""
+    return _quant(x)
+
+
+def dequantize_f32(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return _dequant(q, scale)
+
+
+def _pack_mask(valid: jnp.ndarray) -> jnp.ndarray:
+    flat = valid.reshape(-1).astype(jnp.uint8)
+    pad = (-flat.size) % 8
+    flat = jnp.pad(flat, (0, pad))
+    bits = flat.reshape(-1, 8) << jnp.arange(8, dtype=jnp.uint8)
+    return jnp.sum(bits, axis=-1, dtype=jnp.uint8)
+
+
+def _unpack_mask(packed: jnp.ndarray, shape) -> jnp.ndarray:
+    bits = (packed[:, None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
+    n = int(np.prod(shape))
+    return bits.reshape(-1)[:n].reshape(shape).astype(bool)
+
+
+def _encode_u16(x: jnp.ndarray, no_value) -> jnp.ndarray:
+    """int32 field -> uint16 with WIRE_NO_MATCH for ``no_value`` slots
+    (sentinel comparison is >= so the kernels' MATCH_BIG maps too)."""
+    x = x.astype(jnp.int32)
+    bad = (x < 0) | (x >= jnp.int32(no_value))
+    return jnp.where(bad, jnp.int32(WIRE_NO_MATCH), x).astype(jnp.uint16)
+
+
+def _decode_u16(w: jnp.ndarray, no_value) -> jnp.ndarray:
+    x = w.astype(jnp.int32)
+    return jnp.where(x == WIRE_NO_MATCH, jnp.int32(no_value), x)
+
+
+def encode_features(feat: FeatureSet) -> dict:
+    """FeatureSet -> wire dict.  Descriptors lossless (uint8 bytes);
+    xy/score/theta int8+scale (bounded error); level uint8; valid
+    packed bits.  ~37 bytes/feature vs ~57 f32 — and the descriptor,
+    the dominant field, crosses at exactly 32 bytes either way."""
+    qxy, sxy = _quant(feat.xy)
+    qsc, ssc = _quant(feat.score)
+    qth, sth = _quant(feat.theta)
+    return dict(
+        desc=encode_descriptors(feat.desc),
+        xy=qxy, xy_scale=sxy, score=qsc, score_scale=ssc,
+        theta=qth, theta_scale=sth,
+        level=feat.level.astype(jnp.uint8),
+        valid=_pack_mask(feat.valid), k=int(feat.valid.shape[-1]),
+        shape=tuple(feat.valid.shape))
+
+
+def decode_features(wire: dict) -> FeatureSet:
+    shape = wire["shape"]
+    return FeatureSet(
+        xy=_dequant(wire["xy"], wire["xy_scale"]),
+        level=wire["level"].astype(jnp.int32),
+        score=_dequant(wire["score"], wire["score_scale"]),
+        theta=_dequant(wire["theta"], wire["theta_scale"]),
+        desc=decode_descriptors(wire["desc"]),
+        valid=_unpack_mask(wire["valid"], shape))
+
+
+def encode_matches(matches: MatchSet) -> dict:
+    """MatchSet -> wire dict: uint16 index/distance with a no-match
+    sentinel (LOSSLESS — both fields are small ints), packed validity."""
+    return dict(
+        right_index=_encode_u16(matches.right_index, WIRE_NO_MATCH),
+        distance=_encode_u16(matches.distance, WIRE_NO_MATCH),
+        valid=_pack_mask(matches.valid),
+        shape=tuple(matches.valid.shape))
+
+
+def decode_matches(wire: dict, *, no_match_distance: int) -> MatchSet:
+    """``no_match_distance`` restores the kernels' BIG sentinel (pass
+    ``ops.NO_MATCH_DIST``) so decoded sets compare equal upstream."""
+    return MatchSet(
+        right_index=_decode_u16(wire["right_index"], -1),
+        distance=_decode_u16(wire["distance"], no_match_distance),
+        valid=_unpack_mask(wire["valid"], wire["shape"]))
+
+
+def encode_depth(depth: DepthSet) -> dict:
+    """DepthSet -> wire dict: disparity/depth/xy_right int8+scale
+    (bounded relative error ~1/127), packed validity."""
+    qd, sd = _quant(depth.disparity)
+    qz, sz = _quant(depth.depth)
+    qxy, sxy = _quant(depth.xy_right)
+    return dict(disparity=qd, disparity_scale=sd,
+                depth=qz, depth_scale=sz,
+                xy_right=qxy, xy_right_scale=sxy,
+                valid=_pack_mask(depth.valid),
+                shape=tuple(depth.valid.shape))
+
+
+def decode_depth(wire: dict) -> DepthSet:
+    return DepthSet(
+        disparity=_dequant(wire["disparity"], wire["disparity_scale"]),
+        depth=_dequant(wire["depth"], wire["depth_scale"]),
+        xy_right=_dequant(wire["xy_right"], wire["xy_right_scale"]),
+        valid=_unpack_mask(wire["valid"], wire["shape"]))
+
+
+def wire_bytes(wire) -> int:
+    """Total payload bytes of a wire dict (or nest of them) — array
+    itemsizes only; keys/shape metadata ride the header."""
+    total = 0
+    for v in jax.tree.leaves(wire):
+        if hasattr(v, "size") and hasattr(v, "dtype"):
+            total += int(v.size) * int(np.dtype(v.dtype).itemsize)
+    return total

@@ -56,7 +56,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import pattern
 from repro.kernels.ref import (PATCH, RADIUS, pack_bits, patch_theta,
-                               theta_to_bin)
+                               patch_theta_int, theta_to_bin)
 
 KP_BLOCK = 8            # keypoints per grid step (unrolled in-kernel)
 
@@ -90,6 +90,15 @@ def _tap_sign_bits(sm_flat_row, a_idx, b_idx):
     """(1, 961) patch row + LUT index rows -> (256,) bool tau bits via
     the +-1 selection matmul (MXU gather)."""
     pos = jax.lax.broadcasted_iota(jnp.int32, (_FLAT, _N_PAIRS), 0)
+    if jnp.issubdtype(sm_flat_row.dtype, jnp.integer):
+        # Integer datapath: int8 +-1 selection matrix (4x less VMEM
+        # than the f32 one), int32 accumulate — p(B) - p(A) is computed
+        # exactly, so tau equals the gather oracle's bit-for-bit.
+        sel = ((pos == b_idx[None, :]).astype(jnp.int8)
+               - (pos == a_idx[None, :]).astype(jnp.int8))
+        diff = jnp.dot(sm_flat_row, sel,
+                       preferred_element_type=jnp.int32)    # (1, 256)
+        return diff[0] > 0
     sel = ((pos == b_idx[None, :]).astype(jnp.float32)
            - (pos == a_idx[None, :]).astype(jnp.float32))
     # HIGHEST precision: the default TPU dot precision multiplies via
@@ -102,6 +111,17 @@ def _tap_sign_bits(sm_flat_row, a_idx, b_idx):
     return diff[0] > 0.0
 
 
+def _block_theta(raw):
+    """Orientation of a stacked patch block, dtype-dispatched: uint8
+    patches run the int32 moment accumulators (theta bit-equal — see
+    ``ref.patch_theta_int``); moments come back f32 either way (int32
+    moments < 2^24 cast losslessly), so output shapes never change."""
+    if jnp.issubdtype(raw.dtype, jnp.integer):
+        theta, mom = patch_theta_int(raw)
+        return theta, mom.astype(jnp.float32)
+    return patch_theta(raw)
+
+
 def _describe_block(lut_ref, raw_ref, sm_ref, xy_ref,
                     theta_ref, mom_ref, desc_ref, kb, true_h, true_w):
     """Shared K-block body.  ``true_h``/``true_w`` may be static ints
@@ -110,7 +130,7 @@ def _describe_block(lut_ref, raw_ref, sm_ref, xy_ref,
     launch schedules run bit-identical math per block."""
     raw = jnp.stack(_load_patches(raw_ref, xy_ref, kb, true_h, true_w))
     sm = _load_patches(sm_ref, xy_ref, kb, true_h, true_w)
-    theta, mom = patch_theta(raw)                           # (kb,), (kb, 2)
+    theta, mom = _block_theta(raw)                          # (kb,), (kb, 2)
     bins = theta_to_bin(theta)
     theta_ref[0] = theta
     mom_ref[0] = mom
@@ -119,6 +139,13 @@ def _describe_block(lut_ref, raw_ref, sm_ref, xy_ref,
         a_idx, b_idx = _lut_rows(lut_ref, bins[kk])
         rows.append(_tap_sign_bits(sm[kk].reshape(1, _FLAT), a_idx, b_idx))
     desc_ref[0] = pack_bits(jnp.stack(rows))                # (kb, 8)
+
+
+def _cast_slab(x):
+    """Keep integer image slabs uint8 (the integer datapath); float
+    slabs run f32 exactly as before."""
+    return x.astype(jnp.uint8 if jnp.issubdtype(x.dtype, jnp.integer)
+                    else jnp.float32)
 
 
 def _describe_kernel(lut_ref, raw_ref, sm_ref, xy_ref,
@@ -141,7 +168,7 @@ def _describe_kernel_pyramid(lut_ref, raw_ref, sm_ref, xy_ref, hw_ref,
 def _orient_kernel(raw_ref, xy_ref, theta_ref, mom_ref, *,
                    true_h: int, true_w: int, kb: int):
     raw = jnp.stack(_load_patches(raw_ref, xy_ref, kb, true_h, true_w))
-    theta, mom = patch_theta(raw)
+    theta, mom = _block_theta(raw)
     theta_ref[0] = theta
     mom_ref[0] = mom
 
@@ -182,7 +209,7 @@ def describe_fused_pallas(lut: jnp.ndarray, raw_padded: jnp.ndarray,
             jax.ShapeDtypeStruct((b, k, 8), jnp.uint32),
         ],
         interpret=interpret,
-    )(lut, raw_padded.astype(jnp.float32), sm_padded.astype(jnp.float32),
+    )(lut, _cast_slab(raw_padded), _cast_slab(sm_padded),
       xy.astype(jnp.int32))
 
 
@@ -215,7 +242,7 @@ def orient_fused_pallas(raw_padded: jnp.ndarray, xy: jnp.ndarray, *,
             jax.ShapeDtypeStruct((b, k, 2), jnp.float32),
         ],
         interpret=interpret,
-    )(raw_padded.astype(jnp.float32), xy.astype(jnp.int32))
+    )(_cast_slab(raw_padded), xy.astype(jnp.int32))
 
 
 def _block_level(kk, level_offsets):
@@ -282,5 +309,5 @@ def describe_fused_pyramid_pallas(lut: jnp.ndarray, raw_slabs: jnp.ndarray,
             jax.ShapeDtypeStruct((b, k, 8), jnp.uint32),
         ],
         interpret=interpret,
-    )(lut, raw_slabs.astype(jnp.float32), sm_slabs.astype(jnp.float32),
+    )(lut, _cast_slab(raw_slabs), _cast_slab(sm_slabs),
       xy.astype(jnp.int32), hw.astype(jnp.int32))

@@ -47,7 +47,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.ref import (ARC_LEN, CIRCLE16, GAUSS7_NORM,
-                               GAUSS7_WEIGHTS_INT)
+                               GAUSS7_WEIGHTS_INT, int_threshold)
 
 TILE_H = 128
 TILE_W = 128
@@ -110,7 +110,13 @@ def fast_score_from_taps(taps, threshold: float):
         bright = jnp.maximum(bright, arc_min[s])
         dark = jnp.minimum(dark, arc_max[s])
     score = jnp.maximum(bright, -dark)
-    return jnp.where(score > threshold, score, 0.0)
+    # Integer taps (the uint8 datapath) compare against floor(threshold)
+    # — exactly ``score > threshold`` for integer scores (ref.int_threshold).
+    if jnp.issubdtype(score.dtype, jnp.integer):
+        thr = jnp.asarray(int_threshold(threshold), score.dtype)
+    else:
+        thr = jnp.asarray(threshold, score.dtype)
+    return jnp.where(score > thr, score, jnp.zeros_like(score))
 
 
 def _tile_outputs(x, true_h, true_w, *, threshold: float, nms: bool,
@@ -119,11 +125,20 @@ def _tile_outputs(x, true_h, true_w, *, threshold: float, nms: bool,
     (blur, score), each (tile_h, tile_w).  ``true_h``/``true_w`` may be
     static Python ints (per-level launch) or traced scalars read from the
     whole-pyramid shape table — the NMS boundary mask broadcasts either
-    way, so both launch schedules run the exact same math."""
+    way, so both launch schedules run the exact same math.
+
+    Dtype is static at trace time, so the integer datapath (paper Sec.
+    III word length: uint8 slab in, int32 accumulators, uint8 blur +
+    int16 score out) and the f32 datapath share this one body — the
+    branch below selects accumulator/literal dtypes, nothing else."""
     fh = FUSED_HALO
+    integer = jnp.issubdtype(x.dtype, jnp.integer)
+    if integer:
+        x = x.astype(jnp.int32)        # int32 accumulate, uint8 values
 
     # ---- 7x7 separable Gaussian (needs halo 3: rows/cols 1..tile+7) ----
-    w = [float(v) for v in GAUSS7_WEIGHTS_INT]
+    w = ([int(v) for v in GAUSS7_WEIGHTS_INT] if integer
+         else [float(v) for v in GAUSS7_WEIGHTS_INT])
     horiz = None
     for k in range(7):
         term = w[k] * x[1:tile_h + 7, 1 + k:1 + k + tile_w]
@@ -132,11 +147,15 @@ def _tile_outputs(x, true_h, true_w, *, threshold: float, nms: bool,
     for k in range(7):
         term = w[k] * horiz[k:k + tile_h, :]
         vert = term if vert is None else vert + term       # (tile_h, tile_w)
-    if quantized:
-        norm2 = float(GAUSS7_NORM * GAUSS7_NORM)
-        blur = jnp.floor((vert + norm2 / 2.0) / norm2)
+    norm2 = GAUSS7_NORM * GAUSS7_NORM
+    if integer:
+        # Exact round-half-up division; vert + 648 < 2^24, the same
+        # quotient the f32 floor computes (ref.gaussian_blur7_u8).
+        blur = ((vert + norm2 // 2) // norm2).astype(jnp.uint8)
+    elif quantized:
+        blur = jnp.floor((vert + norm2 / 2.0) / float(norm2))
     else:
-        blur = vert / float(GAUSS7_NORM * GAUSS7_NORM)
+        blur = vert / float(norm2)
 
     # ---- FAST-9/16 raw score on the (tile+2)^2 window (1-px NMS rim) ----
     eh, ew = tile_h + 2, tile_w + 2
@@ -154,7 +173,7 @@ def _tile_outputs(x, true_h, true_w, *, threshold: float, nms: bool,
     rows = i * tile_h - 1 + jax.lax.broadcasted_iota(jnp.int32, (eh, ew), 0)
     cols = j * tile_w - 1 + jax.lax.broadcasted_iota(jnp.int32, (eh, ew), 1)
     inside = ((rows >= 0) & (rows < true_h) & (cols >= 0) & (cols < true_w))
-    score = jnp.where(inside, score, -1.0)
+    score = jnp.where(inside, score, jnp.asarray(-1, score.dtype))
 
     cs = score[1:1 + tile_h, 1:1 + tile_w]
     if nms:
@@ -165,10 +184,27 @@ def _tile_outputs(x, true_h, true_w, *, threshold: float, nms: bool,
                            score[2:, :])
         nmax = jnp.maximum(jnp.maximum(rmax[:, :ew - 2], rmax[:, 1:ew - 1]),
                            rmax[:, 2:])
-        out = jnp.where(cs >= nmax, cs, 0.0) * (cs > 0.0)
+        out = (jnp.where(cs >= nmax, cs, jnp.zeros_like(cs))
+               * (cs > 0).astype(cs.dtype))
     else:
-        out = jnp.maximum(cs, 0.0)         # strip the -1 boundary sentinel
+        out = jnp.maximum(cs, jnp.zeros_like(cs))  # strip the -1 sentinel
+    if integer:
+        out = out.astype(jnp.int16)        # FAST scores live in [0, 255]
     return blur, out
+
+
+def _slab_dtypes(padded, quantized: bool):
+    """Resolve the (input slab, (blur, score) output dtypes) pair from
+    the slab dtype: integer slabs run the uint8 datapath (requires the
+    quantized blur — the float blur is not representable in uint8),
+    float slabs the f32 one."""
+    if jnp.issubdtype(padded.dtype, jnp.integer):
+        if not quantized:
+            raise ValueError(
+                "uint8 datapath requires quantized=True (the float "
+                "Gaussian is not representable in a uint8 slab)")
+        return padded.astype(jnp.uint8), (jnp.uint8, jnp.int16)
+    return padded.astype(jnp.float32), (jnp.float32, jnp.float32)
 
 
 def _kernel(x_ref, blur_ref, score_ref, *, threshold: float, nms: bool,
@@ -200,11 +236,14 @@ def frontend_fused_pallas(padded: jnp.ndarray, *, threshold: float,
                           nms: bool = True, quantized: bool = True,
                           true_h: int, true_w: int,
                           interpret: bool = False):
-    """padded: (B, H + 8, W + 8) float32, edge-padded by FUSED_HALO and
-    tile-aligned (H % TILE_H == 0, W % TILE_W == 0 — ``ops.py``
-    guarantees this).  (true_h, true_w) is the un-tile-padded image size
-    used for the NMS boundary mask.  Returns (blur, score), each
-    (B, H, W) float32."""
+    """padded: (B, H + 8, W + 8) float32 OR uint8, edge-padded by
+    FUSED_HALO and tile-aligned (H % TILE_H == 0, W % TILE_W == 0 —
+    ``ops.py`` guarantees this).  (true_h, true_w) is the un-tile-padded
+    image size used for the NMS boundary mask.  Returns (blur, score):
+    (B, H, W) float32 pair for float input, (uint8 blur, int16 score)
+    for uint8 input (the integer datapath — 4x less VMEM per resident
+    tile, same values on quantized images)."""
+    padded, out_dtypes = _slab_dtypes(padded, quantized)
     b = padded.shape[0]
     h = padded.shape[1] - 2 * FUSED_HALO
     w = padded.shape[2] - 2 * FUSED_HALO
@@ -225,11 +264,11 @@ def frontend_fused_pallas(padded: jnp.ndarray, *, threshold: float,
             pl.BlockSpec((1, TILE_H, TILE_W), lambda bb, i, j: (bb, i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b, h, w), jnp.float32),
-            jax.ShapeDtypeStruct((b, h, w), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, w), out_dtypes[0]),
+            jax.ShapeDtypeStruct((b, h, w), out_dtypes[1]),
         ],
         interpret=interpret,
-    )(padded.astype(jnp.float32))
+    )(padded)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -247,13 +286,15 @@ def frontend_fused_pyramid_pallas(padded: jnp.ndarray, hw: jnp.ndarray, *,
     padding).  hw: (N, 2) int32 per-slab (true_h, true_w) — the shape
     table the kernel masks by, so tiles that fall in a small level's
     padding region emit only the -1/0 sentinels and never win NMS.
-    Returns (blur, score), each (N, Hc, Wc) float32; callers slice each
-    slab back to its true shape.
+    Returns (blur, score), each (N, Hc, Wc): float32 pair for float
+    input, (uint8, int16) for uint8 slabs (integer datapath); callers
+    slice each slab back to its true shape.
 
     TPU-validation note: the (1, 2) int32 shape-table block rides in the
     default memory space; on a real Mosaic build it belongs in SMEM
     (scalar prefetch), like the keypoint blocks of ``describe_fused``.
     """
+    padded, out_dtypes = _slab_dtypes(padded, quantized)
     n = padded.shape[0]
     h = padded.shape[1] - 2 * FUSED_HALO
     w = padded.shape[2] - 2 * FUSED_HALO
@@ -276,8 +317,8 @@ def frontend_fused_pyramid_pallas(padded: jnp.ndarray, hw: jnp.ndarray, *,
             pl.BlockSpec((1, TILE_H, TILE_W), lambda bb, i, j: (bb, i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n, h, w), jnp.float32),
-            jax.ShapeDtypeStruct((n, h, w), jnp.float32),
+            jax.ShapeDtypeStruct((n, h, w), out_dtypes[0]),
+            jax.ShapeDtypeStruct((n, h, w), out_dtypes[1]),
         ],
         interpret=interpret,
-    )(padded.astype(jnp.float32), hw.astype(jnp.int32))
+    )(padded, hw.astype(jnp.int32))

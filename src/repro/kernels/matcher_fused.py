@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.describe_fused import _cast_slab
 from repro.kernels.hamming_match import BIG, masked_hamming
 
 FM_BK = 8         # left-feature tile of the fused/SAD kernels (unrolled)
@@ -230,7 +231,7 @@ def match_rectify_fused_pallas(desc_l, meta_l, desc_r, meta_r, xy0,
         ],
         interpret=interpret,
     )(desc_l, meta_l, desc_r, meta_r, xy0.astype(jnp.float32),
-      img_l_padded.astype(jnp.float32), img_r_padded.astype(jnp.float32))
+      _cast_slab(img_l_padded), _cast_slab(img_r_padded))
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -301,4 +302,4 @@ def sad_fused_pallas(xy_l, xy_r, img_l_padded, img_r_padded, *,
         out_shape=jax.ShapeDtypeStruct((n_pairs, k, sweep), jnp.int32),
         interpret=interpret,
     )(xy_l.astype(jnp.float32), xy_r.astype(jnp.float32),
-      img_l_padded.astype(jnp.float32), img_r_padded.astype(jnp.float32))
+      _cast_slab(img_l_padded), _cast_slab(img_r_padded))

@@ -34,7 +34,8 @@ import numpy as np
 
 from repro.kernels import pattern as _pattern
 from repro.kernels import ref as _ref
-from repro.kernels.describe_fused import (KP_BLOCK, describe_fused_pallas,
+from repro.kernels.describe_fused import (KP_BLOCK, _cast_slab,
+                                          describe_fused_pallas,
                                           describe_fused_pyramid_pallas,
                                           orient_fused_pallas)
 from repro.kernels.fast_detect import (HALO, TILE_H, TILE_W,
@@ -203,15 +204,22 @@ def gaussian_blur7(img: jnp.ndarray, quantized: bool = True,
 
 def _blur_rawscore_jnp(x: jnp.ndarray, threshold: float, quantized: bool):
     """Shared jnp stencil body of the fused fallbacks: (B, H, W) float32
-    -> (blur, raw score), each (B, H, W).  ONE shared edge-pad feeds
-    both stencils, the FAST arc extrema use the van Herk block
+    OR uint8 -> (blur, raw score), each (B, H, W).  ONE shared edge-pad
+    feeds both stencils, the FAST arc extrema use the van Herk block
     prefix/suffix scheme instead of materializing (16, H, W) stacks
     (min/max reassociation is exact, so results are unchanged), and the
-    blur keeps the oracle's tap-summation order (float-exact)."""
+    blur keeps the oracle's tap-summation order (float-exact).  uint8
+    input runs the integer datapath (int32 accumulators, uint8 blur +
+    int16 score out) — equal in value on quantized images (see
+    ``ref.gaussian_blur7_u8`` / ``ref.fast_score_map_int``)."""
     _, h, w = x.shape
+    integer = jnp.issubdtype(x.dtype, jnp.integer)
+    if integer:
+        x = x.astype(jnp.int32)
     pad = jnp.pad(x, ((0, 0), (3, 3), (3, 3)), mode="edge")
 
-    wts = [float(v) for v in _ref.GAUSS7_WEIGHTS_INT]
+    wts = ([int(v) for v in _ref.GAUSS7_WEIGHTS_INT] if integer
+           else [float(v) for v in _ref.GAUSS7_WEIGHTS_INT])
     horiz = None
     for k in range(7):
         term = wts[k] * pad[:, :, k:k + w]              # (B, H+6, W)
@@ -220,27 +228,34 @@ def _blur_rawscore_jnp(x: jnp.ndarray, threshold: float, quantized: bool):
     for k in range(7):
         term = wts[k] * horiz[:, k:k + h, :]            # (B, H, W)
         vert = term if vert is None else vert + term
-    norm2 = float(_ref.GAUSS7_NORM * _ref.GAUSS7_NORM)
-    if quantized:
-        blur = jnp.floor((vert + norm2 / 2.0) / norm2)
+    norm2 = _ref.GAUSS7_NORM * _ref.GAUSS7_NORM
+    if integer:
+        blur = ((vert + norm2 // 2) // norm2).astype(jnp.uint8)
+    elif quantized:
+        blur = jnp.floor((vert + norm2 / 2.0) / float(norm2))
     else:
-        blur = vert / norm2
+        blur = vert / float(norm2)
 
     taps = [pad[:, 3 + dy:3 + dy + h, 3 + dx:3 + dx + w] - x
             for dx, dy in _ref.CIRCLE16]
-    return blur, fast_score_from_taps(taps, float(threshold))
+    score = fast_score_from_taps(taps, float(threshold))
+    if integer:
+        score = score.astype(jnp.int16)
+    return blur, score
 
 
 def _nms_jnp(score: jnp.ndarray) -> jnp.ndarray:
     """Separable included-center 3x3 max over (B, H, W); cs >= max(cs,
     nbrs) iff cs >= max(nbrs), so the decision matches ref.nms3 exactly
     (the -1 constant pad is the oracle's outside-image sentinel)."""
-    spad = jnp.pad(score, ((0, 0), (1, 1), (1, 1)), constant_values=-1.0)
+    spad = jnp.pad(score, ((0, 0), (1, 1), (1, 1)),
+                   constant_values=jnp.asarray(-1, score.dtype))
     rmax = jnp.maximum(jnp.maximum(spad[:, :-2, :], spad[:, 1:-1, :]),
                        spad[:, 2:, :])
     nmax = jnp.maximum(jnp.maximum(rmax[:, :, :-2], rmax[:, :, 1:-1]),
                        rmax[:, :, 2:])
-    return jnp.where(score >= nmax, score, 0.0) * (score > 0.0)
+    return (jnp.where(score >= nmax, score, jnp.zeros_like(score))
+            * (score > 0).astype(score.dtype))
 
 
 def _fast_blur_nms_fused_jnp(imgs: jnp.ndarray, threshold: float,
@@ -253,7 +268,7 @@ def _fast_blur_nms_fused_jnp(imgs: jnp.ndarray, threshold: float,
     per-image oracle chain on CPU — the "fused" contender of the
     fused-vs-seed benchmark.
     """
-    blur, score = _blur_rawscore_jnp(imgs.astype(jnp.float32), threshold,
+    blur, score = _blur_rawscore_jnp(_cast_slab(imgs), threshold,
                                      quantized)
     if nms:
         score = _nms_jnp(score)
@@ -279,7 +294,7 @@ def fast_blur_nms_batched(imgs: jnp.ndarray, threshold: float, *,
     hp = (-h) % TILE_H
     wp = (-w) % TILE_W
     padded = jnp.pad(
-        imgs.astype(jnp.float32),
+        _cast_slab(imgs),
         ((0, 0), (FUSED_HALO, FUSED_HALO + hp), (FUSED_HALO, FUSED_HALO + wp)),
         mode="edge")
     _count_launches()
@@ -316,7 +331,7 @@ def fast_blur_nms_pyramid_stacked_jnp(levels, threshold: float, *,
     hc = max(h for h, _ in shapes)
     wc = max(w for _, w in shapes)
     x = jnp.concatenate([
-        jnp.pad(lv.astype(jnp.float32), ((0, 0), (0, hc - h), (0, wc - w)),
+        jnp.pad(_cast_slab(lv), ((0, 0), (0, hc - h), (0, wc - w)),
                 mode="edge")
         for lv, (h, w) in zip(levels, shapes)], axis=0)
     blur, score = _blur_rawscore_jnp(x, threshold, quantized)
@@ -324,8 +339,9 @@ def fast_blur_nms_pyramid_stacked_jnp(levels, threshold: float, *,
     tw = jnp.asarray(np.repeat([w for _, w in shapes], b))[:, None, None]
     inside = ((jnp.arange(hc)[None, :, None] < th)
               & (jnp.arange(wc)[None, None, :] < tw))
-    score = jnp.where(inside, score, -1.0)
-    score = _nms_jnp(score) if nms else jnp.maximum(score, 0.0)
+    score = jnp.where(inside, score, jnp.asarray(-1, score.dtype))
+    score = (_nms_jnp(score) if nms
+             else jnp.maximum(score, jnp.zeros_like(score)))
     return [(blur[l * b:(l + 1) * b, :h, :w],
              score[l * b:(l + 1) * b, :h, :w])
             for l, (h, w) in enumerate(shapes)]
@@ -360,7 +376,7 @@ def fast_blur_nms_pyramid(levels, threshold: float, *, nms: bool = True,
     hc = max(h + (-h) % TILE_H for h, _ in shapes)
     wc = max(w + (-w) % TILE_W for _, w in shapes)
     flat = jnp.concatenate([
-        jnp.pad(lv.astype(jnp.float32),
+        jnp.pad(_cast_slab(lv),
                 ((0, 0), (FUSED_HALO, FUSED_HALO + hc - h),
                  (FUSED_HALO, FUSED_HALO + wc - w)), mode="edge")
         for lv, (h, w) in zip(levels, shapes)], axis=0)
@@ -383,10 +399,19 @@ def _orient_describe_jnp(raw, smoothed, xy):
     calls, and the tap gather equals the kernel's selection-matmul sign
     exactly (see ``ref.lut_descriptor``).
     """
+    integer = jnp.issubdtype(raw.dtype, jnp.integer)
     if smoothed is None:
+        if integer:
+            theta, mom = jax.vmap(lambda im, p: _ref.patch_theta_int(
+                _ref.extract_patches(im, p, preserve_dtype=True)))(raw, xy)
+            return theta, mom.astype(jnp.float32), None
         return jax.vmap(
             lambda im, p: _ref.patch_theta(_ref.extract_patches(im, p))
         )(raw, xy) + (None,)
+    if integer:
+        theta, mom, desc = jax.vmap(_ref.orient_describe_int)(
+            raw, smoothed, xy)
+        return theta, mom.astype(jnp.float32), desc
     return jax.vmap(_ref.orient_describe)(raw, smoothed, xy)
 
 
@@ -398,7 +423,7 @@ def _pad_patch_slab(imgs: jnp.ndarray) -> jnp.ndarray:
     r = _ref.RADIUS
     hp = (-(h + 2 * r)) % 8
     wp = (-(w + 2 * r)) % 128
-    return jnp.pad(imgs.astype(jnp.float32),
+    return jnp.pad(_cast_slab(imgs),
                    ((0, 0), (r, r + hp), (r, r + wp)), mode="edge")
 
 
@@ -470,7 +495,7 @@ def orient_describe_pyramid(raws, smootheds, xys, *,
         # out to the common canvas; clamped patch starts stay within the
         # (h + 2*rad, w + 2*rad) region, so the canvas pad is never read
         # with values differing from the per-level slab.
-        return jnp.pad(imgs.astype(jnp.float32),
+        return jnp.pad(_cast_slab(imgs),
                        ((0, 0), (rad, hc - h - rad), (rad, wc - w - rad)),
                        mode="edge")
 
@@ -581,7 +606,7 @@ def _pad_fm_slab(imgs: jnp.ndarray, ry: int, rx: int) -> jnp.ndarray:
     _, h, w = imgs.shape
     hp = (-(h + 2 * ry)) % 8
     wp = (-(w + 2 * rx)) % 128
-    return jnp.pad(imgs.astype(jnp.float32),
+    return jnp.pad(_cast_slab(imgs),
                    ((0, 0), (ry, ry + hp), (rx, rx + wp)), mode="edge")
 
 

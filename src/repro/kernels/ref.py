@@ -62,7 +62,8 @@ def nms3(score: jnp.ndarray) -> jnp.ndarray:
     longer runs these eight host-graph dynamic slices.
     """
     h, w = score.shape
-    pad = jnp.pad(score, 1, mode="constant", constant_values=-1.0)
+    pad = jnp.pad(score, 1, mode="constant",
+                  constant_values=jnp.asarray(-1, score.dtype))
     neigh = []
     for dy in (-1, 0, 1):
         for dx in (-1, 0, 1):
@@ -70,7 +71,8 @@ def nms3(score: jnp.ndarray) -> jnp.ndarray:
                 continue
             neigh.append(jax.lax.dynamic_slice(pad, (1 + dy, 1 + dx), (h, w)))
     nmax = functools.reduce(jnp.maximum, neigh)
-    return jnp.where(score >= nmax, score, 0.0) * (score > 0.0)
+    keep = jnp.where(score >= nmax, score, jnp.zeros_like(score))
+    return keep * (score > 0).astype(score.dtype)
 
 
 def fast_blur_nms(img: jnp.ndarray, threshold: float, *, nms: bool = True,
@@ -122,6 +124,84 @@ def gaussian_blur7(img: jnp.ndarray, quantized: bool = True) -> jnp.ndarray:
     return vert / float(GAUSS7_NORM * GAUSS7_NORM)
 
 
+# ---------------------------------------------------------------------------
+# Integer-datapath oracles (paper Sec. III word-length optimization).
+#
+# The uint8 pipeline holds pyramid slabs as uint8 and runs blur / FAST /
+# NMS / moments on integer accumulators.  Each oracle below states why
+# its output is BIT-EQUAL to the f32 oracle on quantized (integer-
+# valued) images; tests pin that equivalence on ref and
+# pallas-interpret.
+
+def int_threshold(threshold: float) -> int:
+    """FAST threshold for the integer datapath.  For integer scores,
+    ``score > threshold`` == ``score > floor(threshold)`` exactly, so
+    the int16 compare reproduces the f32 compare bit-for-bit."""
+    return int(np.floor(threshold))
+
+
+def fast_score_map_int(img: jnp.ndarray, threshold: float) -> jnp.ndarray:
+    """Integer FAST-9/16 oracle: uint8 image -> int16 score map.
+
+    Taps d = I(circle) - I(p) live in [-255, 255]; arc min/max and the
+    final max stay in that range, so int16 is exact and equals the f32
+    oracle's values on integer images.
+    """
+    img_i = img.astype(jnp.int32)
+    h, w = img.shape
+    pad = jnp.pad(img_i, 3, mode="edge")
+    taps = [
+        jax.lax.dynamic_slice(pad, (3 + dy, 3 + dx), (h, w)) - img_i
+        for dx, dy in CIRCLE16
+    ]
+    d = jnp.stack(taps)
+    dd = jnp.concatenate([d, d[: ARC_LEN - 1]], axis=0)
+    bright = jnp.stack(
+        [jnp.min(dd[s: s + ARC_LEN], axis=0) for s in range(16)]
+    )
+    dark = jnp.stack(
+        [jnp.max(dd[s: s + ARC_LEN], axis=0) for s in range(16)]
+    )
+    score = jnp.maximum(jnp.max(bright, axis=0), -jnp.min(dark, axis=0))
+    thr = jnp.int32(int_threshold(threshold))
+    return jnp.where(score > thr, score, 0).astype(jnp.int16)
+
+
+def gaussian_blur7_u8(img: jnp.ndarray) -> jnp.ndarray:
+    """Integer-datapath 7x7 Gaussian: uint8 -> uint8.
+
+    int32 accumulate + round-half-up integer division.  vert + 648 <=
+    255*36*36 + 648 = 331128 < 2^24, so the f32 oracle's
+    ``floor((vert + 648.0) / 1296.0)`` computes the same quotient: the
+    int32 path is bit-equal to ``gaussian_blur7(img, quantized=True)``.
+    """
+    w = jnp.asarray(GAUSS7_WEIGHTS_INT, dtype=jnp.int32)
+    pad = jnp.pad(img.astype(jnp.int32), 3, mode="edge")
+    h, wid = img.shape
+    horiz = sum(
+        w[k] * jax.lax.dynamic_slice(pad, (3, k), (h + 6, wid))
+        for k in range(7)
+    )
+    vert = sum(
+        w[k] * jax.lax.dynamic_slice(horiz, (k, 0), (h, wid))
+        for k in range(7)
+    )
+    norm2 = GAUSS7_NORM * GAUSS7_NORM
+    return ((vert + norm2 // 2) // norm2).astype(jnp.uint8)
+
+
+def fast_blur_nms_int(img: jnp.ndarray, threshold: float, *,
+                      nms: bool = True):
+    """uint8 single-image oracle for the fused frontend: returns
+    (blur uint8, score int16) — the integer twins of ``fast_blur_nms``'s
+    outputs, equal in value on quantized images."""
+    blur = gaussian_blur7_u8(img)
+    score = fast_score_map_int(img, threshold)
+    if nms:
+        score = nms3(score)
+    return blur, score
+
+
 def _popcount32(x: jnp.ndarray) -> jnp.ndarray:
     """SWAR popcount of a uint32 array -> int32 (no native popcount on VPU)."""
     x = x.astype(jnp.uint32)
@@ -156,15 +236,19 @@ def pad_patch(img: jnp.ndarray) -> jnp.ndarray:
     return jnp.pad(img.astype(jnp.float32), RADIUS, mode="edge")
 
 
-def extract_patches(img: jnp.ndarray, xy: jnp.ndarray) -> jnp.ndarray:
+def extract_patches(img: jnp.ndarray, xy: jnp.ndarray, *,
+                    preserve_dtype: bool = False) -> jnp.ndarray:
     """(H, W) image + (K, 2) int32 centers -> (K, 31, 31) patches.
 
     Centers are clamped into the image (top-K padding rows may carry
     arbitrary coordinates) — identical clamping to the Pallas kernel.
     This is the host-graph gather the fused kernel replaces; kept as the
-    oracle and the single-image fallback.
+    oracle and the single-image fallback.  ``preserve_dtype=True`` keeps
+    the input dtype (the uint8 datapath); default casts to f32 as the
+    f32 oracle always did.
     """
-    padded = pad_patch(img)
+    padded = (jnp.pad(img, RADIUS, mode="edge") if preserve_dtype
+              else pad_patch(img))
     h, w = img.shape
 
     def one(pt):
@@ -200,6 +284,51 @@ def patch_theta(patches: jnp.ndarray):
     m10 = jnp.sum(patches * xg, axis=(-2, -1))
     m01 = jnp.sum(patches * yg, axis=(-2, -1))
     return jnp.arctan2(m01, m10), jnp.stack([m10, m01], axis=-1)
+
+
+def moment_grids_int():
+    """Integer twins of ``moment_grids``: int32 circular-mask coordinate
+    grids for the uint8 datapath's int32 moment accumulators."""
+    yy = (jax.lax.broadcasted_iota(jnp.int32, (PATCH, PATCH), 0)
+          - RADIUS)
+    xx = (jax.lax.broadcasted_iota(jnp.int32, (PATCH, PATCH), 1)
+          - RADIUS)
+    mask = (xx * xx + yy * yy <= RADIUS * RADIUS).astype(jnp.int32)
+    return xx * mask, yy * mask
+
+
+def patch_theta_int(patches: jnp.ndarray):
+    """uint8 (..., 31, 31) patches -> (theta (...,) f32, moments
+    (..., 2) int32), int32 accumulators.
+
+    |m10|, |m01| <= 255 * sum|x| over the circular mask ~ 1.4e6 < 2^24,
+    so the f32 oracle's moment sums are exact and the int32 moments
+    equal them; theta = atan2 of the same two f32 values is bit-equal.
+    """
+    xg, yg = moment_grids_int()
+    p = patches.astype(jnp.int32)
+    m10 = jnp.sum(p * xg, axis=(-2, -1))
+    m01 = jnp.sum(p * yg, axis=(-2, -1))
+    theta = jnp.arctan2(m01.astype(jnp.float32), m10.astype(jnp.float32))
+    return theta, jnp.stack([m10, m01], axis=-1)
+
+
+def orient_describe_int(raw: jnp.ndarray, smoothed: jnp.ndarray,
+                        xy: jnp.ndarray):
+    """uint8 single-image oracle for the fused sparse stage.
+
+    raw/smoothed: (H, W) uint8 level image + its uint8 blur; xy: (K, 2)
+    int32.  Returns (theta f32, moments int32 (K, 2), desc uint32
+    (K, 8)).  Theta is bit-equal to the f32 oracle (see
+    ``patch_theta_int``); descriptors compare the same integer tap
+    values, so they are bit-equal too.
+    """
+    theta, mom = patch_theta_int(
+        extract_patches(raw, xy, preserve_dtype=True))
+    desc = lut_descriptor(
+        extract_patches(smoothed, xy, preserve_dtype=True),
+        theta_to_bin(theta))
+    return theta, mom, desc
 
 
 # theta -> steering bin: nearest bin center, bins at b * ANGLE_BIN_STEP.
@@ -403,6 +532,45 @@ def sad_search_bruteforce(left_patches, right_strips):
         for s in range(sweep):
             table[i, s] = np.abs(lp[i] - rs[i, :, s:s + p]).sum()
     return table.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Bounded-error comparators — the uint8-vs-f32 correctness contract.
+# Where the integer math is exact (blur, FAST, moments, descriptors on
+# quantized images) tests pin bit-equality; everywhere else (float
+# inputs snapped to uint8, wire quantization) they pin a measured bound
+# through these helpers.
+
+def max_abs_err(a, b) -> float:
+    """max |a - b| in f32 — the bound the wire/quantization pins use."""
+    a = jnp.asarray(a).astype(jnp.float32)
+    b = jnp.asarray(b).astype(jnp.float32)
+    return float(jnp.max(jnp.abs(a - b))) if a.size else 0.0
+
+
+def keypoint_set_diff(xy_a, valid_a, xy_b, valid_b) -> int:
+    """Symmetric-difference size of two keypoint sets (valid (x, y)
+    rows as python sets — top-K ordering and tie permutations between
+    equal-score corners don't count as disagreement)."""
+    def to_set(xy, valid):
+        xy = np.asarray(xy).reshape(-1, np.asarray(xy).shape[-1])
+        valid = np.asarray(valid).reshape(-1)
+        return {tuple(map(float, r)) for r, v in zip(xy, valid) if v}
+    return len(to_set(xy_a, valid_a) ^ to_set(xy_b, valid_b))
+
+
+def descriptor_hamming_stats(desc, ref_desc, valid=None):
+    """Per-descriptor Hamming distance between two (..., 8) uint32
+    descriptor sets -> (mean, max) over valid rows; (0.0, 0) when
+    nothing is valid.  The uint8-path pin: 0 bits where descriptors are
+    exact-in-integers, a measured bound elsewhere."""
+    d = np.asarray(jnp.sum(_popcount32(
+        jnp.bitwise_xor(jnp.asarray(desc), jnp.asarray(ref_desc))), -1))
+    if valid is not None:
+        d = d[np.asarray(valid)]
+    if d.size == 0:
+        return 0.0, 0
+    return float(d.mean()), int(d.max())
 
 
 def sad_search(left_patches: jnp.ndarray,

@@ -31,7 +31,7 @@ bit-reproducible under a fixed seed.
 from repro.serving.faults import FaultInjector, FaultSpec, InjectedFrame
 from repro.serving.queue import FleetBatch, FrameQueue, QueueConfig
 from repro.serving.service import (EpisodeResult, FleetService, RigReport,
-                                   run_episode)
+                                   run_episode, wire_decode, wire_encode)
 from repro.serving.supervisor import (RigHealth, Supervisor, SupervisorConfig,
                                       SupervisorEvent)
 
@@ -39,5 +39,6 @@ __all__ = [
     "FaultInjector", "FaultSpec", "InjectedFrame",
     "FleetBatch", "FrameQueue", "QueueConfig",
     "EpisodeResult", "FleetService", "RigReport", "run_episode",
+    "wire_decode", "wire_encode",
     "RigHealth", "Supervisor", "SupervisorConfig", "SupervisorEvent",
 ]

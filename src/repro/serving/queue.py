@@ -61,7 +61,7 @@ class QueueConfig:
 
 class _Pending(typing.NamedTuple):
     rig_id: typing.Any
-    images: np.ndarray          # (C, H, W) float32
+    images: np.ndarray          # (C, H, W) in the queue's dtype
     t_arrival: float
     camera_mask: np.ndarray     # (C,) bool
 
@@ -91,10 +91,14 @@ class FrameQueue:
     """FIFO of shape-validated rig frames with bucketed draining."""
 
     def __init__(self, rig: RigConfig, frame_hw: tuple[int, int],
-                 cfg: QueueConfig | None = None) -> None:
+                 cfg: QueueConfig | None = None,
+                 dtype=np.float32) -> None:
         self.rig = rig
         self.frame_hw = (int(frame_hw[0]), int(frame_hw[1]))
         self.cfg = cfg if cfg is not None else QueueConfig()
+        # Frame storage dtype — np.uint8 when the session runs the
+        # integer datapath (4x smaller queue + batch slabs), else f32.
+        self.dtype = np.dtype(dtype)
         self._pending: collections.deque[_Pending] = collections.deque()
         self.dropped_overflow = 0     # oldest-frame drops from over-buffering
 
@@ -107,7 +111,7 @@ class FrameQueue:
         ``images``: (n_cameras, H, W); shape mismatches fail HERE with
         the expected shape spelled out, not as a trace error after the
         batch is padded.  ``camera_mask`` defaults to all-True."""
-        im = np.asarray(images, dtype=np.float32)
+        im = np.asarray(images, dtype=self.dtype)
         want = (self.rig.n_cameras,) + self.frame_hw
         if im.shape != want:
             raise ValueError(
@@ -162,7 +166,7 @@ class FrameQueue:
         bucket = next(b for b in self.cfg.bucket_sizes if b >= take)
 
         c, (h, w) = self.rig.n_cameras, self.frame_hw
-        images = np.zeros((bucket, c, h, w), dtype=np.float32)
+        images = np.zeros((bucket, c, h, w), dtype=self.dtype)
         camera_mask = np.zeros((bucket, c), dtype=bool)
         rig_mask = np.zeros(bucket, dtype=bool)
         deadline = self.cfg.deadline_s

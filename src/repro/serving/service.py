@@ -31,6 +31,9 @@ import jax
 import numpy as np
 
 from repro.core.pipeline import VisualSystem
+from repro.core.types import StereoOutput
+from repro.distributed import compression
+from repro.kernels import ops
 from repro.serving.faults import FaultInjector
 from repro.serving.queue import FrameQueue, QueueConfig
 from repro.serving.supervisor import (Supervisor, SupervisorConfig,
@@ -58,9 +61,14 @@ class FleetService:
                  sup_cfg: SupervisorConfig | None = None,
                  restart_cb=None) -> None:
         self.vs = vs
+        # The queue buffers frames in the session's datapath dtype —
+        # a uint8-precision session keeps the whole intake path 8-bit
+        # (4x smaller pending buffers and fleet batch slabs).
+        self._frame_dtype = (np.uint8 if vs.pipe.precision == "uint8"
+                             else np.float32)
         self.queue = FrameQueue(vs.rig,
                                 (vs.pipe.orb.height, vs.pipe.orb.width),
-                                queue_cfg)
+                                queue_cfg, dtype=self._frame_dtype)
         self.supervisor = Supervisor(sup_cfg, restart_cb)
         self.events: list[SupervisorEvent] = []
         self.counters = collections.Counter()
@@ -92,6 +100,12 @@ class FleetService:
         if not finite.all():
             self.counters["corrupt_cameras"] += int((~finite & mask).sum())
             mask &= finite
+        if self._frame_dtype == np.uint8:
+            # Quantize at ingest (round/clip, matching the f32 path's
+            # quantized pyramid) — NaNs were already masked above, so
+            # the cast is well-defined on every surviving camera.
+            im = np.round(np.clip(np.nan_to_num(im), 0.0, 255.0)) \
+                .astype(np.uint8)
         if timestamps is not None:
             decision = self.vs.desync_decision(timestamps)
             if decision.action in ("raise", "drop_frame"):
@@ -152,6 +166,34 @@ class FleetService:
                       "dropped_overflow": self.queue.dropped_overflow},
             "counters": dict(self.counters),
         }
+
+
+def wire_encode(output: StereoOutput) -> dict:
+    """Serialize one served ``StereoOutput`` into the fleet uplink wire
+    format (``repro.distributed.compression``): descriptors as lossless
+    uint8 bytes, match index/distance as uint16 with a no-match
+    sentinel, float fields (xy, score, theta, disparity, depth) as
+    int8+scale with bounded error, validity as packed bits — ~4x fewer
+    payload bytes than shipping the f32 pytree.  Use
+    ``compression.wire_bytes`` on the result for the payload size."""
+    return dict(
+        features_l=compression.encode_features(output.features_l),
+        features_r=compression.encode_features(output.features_r),
+        matches=compression.encode_matches(output.matches),
+        depth=compression.encode_depth(output.depth))
+
+
+def wire_decode(wire: dict) -> StereoOutput:
+    """Inverse of ``wire_encode``.  Descriptors, match indices/
+    distances (the kernels' BIG sentinel restored) and validity masks
+    round-trip bit-exact; quantized float fields come back within the
+    int8+scale error bound (pinned in tests/test_precision.py)."""
+    return StereoOutput(
+        features_l=compression.decode_features(wire["features_l"]),
+        features_r=compression.decode_features(wire["features_r"]),
+        matches=compression.decode_matches(
+            wire["matches"], no_match_distance=ops.NO_MATCH_DIST),
+        depth=compression.decode_depth(wire["depth"]))
 
 
 class EpisodeResult(typing.NamedTuple):
