@@ -1,4 +1,4 @@
-"""Launch-count regression gate for CI (ROADMAP open item).
+"""Launch-count + accuracy regression gate for CI (ROADMAP open item).
 
 Wall clock on shared CI runners is noisy; traced Pallas launch counts
 are deterministic.  ``benchmarks.run`` records, in the
@@ -11,6 +11,12 @@ gated on its own via ``launch_gate/fm_frame_*``).  This script fails the
 job when any actual count exceeds its budget, i.e. when a change
 silently un-fuses the frontend or matcher back toward per-level,
 per-pair or per-op dispatch.
+
+It also enforces the ``accuracy_gate/*`` rows: the localization
+backend's trajectory error (ATE / RPE vs scene ground truth, f32 AND
+uint8 datapaths) must stay under its pinned ``*_limit`` row — scene,
+seeds and the solver are all deterministic, so these are exact
+regression pins, not flaky perf numbers.
 
 Usage: python -m benchmarks.check_launches [BENCH_frontend.json]
 Exit status: 0 when every gate holds, 1 on regression or missing rows.
@@ -30,11 +36,21 @@ import sys
 # elementwise masking, never extra kernels), u8_* = the
 # precision='uint8' integer datapath (still 3 for frame AND fleet
 # frame: dtype switches the kernels' element type, never the launch
-# graph).
+# graph), loc_* = a localized frame / fleet frame (<= 4: the 3-launch
+# frontend plus ONE fused temporal-match backend launch).
 REQUIRED_GATES = ("quad_frame_launches", "fm_frame_launches",
                   "fleet_frame_launches",
                   "degraded_fleet_frame_launches",
-                  "u8_frame_launches", "u8_fleet_frame_launches")
+                  "u8_frame_launches", "u8_fleet_frame_launches",
+                  "loc_frame_launches", "loc_fleet_frame_launches")
+
+# Accuracy gates that MUST be present: trajectory error of the
+# localization backend vs ground truth, for BOTH precisions.  Each name
+# pairs with an ``accuracy_gate/<name>_limit`` row pinned in
+# benchmarks.run at ~2x the measured baseline.
+REQUIRED_ACCURACY = ("ate_f32", "ate_u8",
+                     "rpe_trans_f32", "rpe_trans_u8",
+                     "rpe_rot_f32", "rpe_rot_u8")
 
 
 def check(path: str) -> int:
@@ -68,6 +84,34 @@ def check(path: str) -> int:
         print(f"{verdict}: launch_gate/{name} = {actual} "
               f"(budget {budget}; {actual_row['note']})")
         if actual > budget:
+            status = 1
+
+    acc = [name for (table, name) in rows
+           if table == "accuracy_gate" and not name.endswith("_limit")]
+    if not acc:
+        print(f"FAIL: no accuracy_gate/* rows in {path} — "
+              "did benchmarks.run drop table_localization?")
+        return 1
+    for name in REQUIRED_ACCURACY:
+        if name not in acc:
+            print(f"FAIL: required gate accuracy_gate/{name} is missing "
+                  f"from {path} — did benchmarks.run drop it?")
+            status = 1
+    for name in sorted(acc):
+        actual_row = rows[("accuracy_gate", name)]
+        limit_row = rows.get(("accuracy_gate", name + "_limit"))
+        if limit_row is None:
+            print(f"FAIL: {name} has no matching {name}_limit row")
+            status = 1
+            continue
+        actual = float(actual_row["value"])
+        limit = float(limit_row["value"])
+        ok = actual <= limit
+        verdict = "ok" if ok else "REGRESSION"
+        print(f"{verdict}: accuracy_gate/{name} = {actual} "
+              f"{actual_row['unit']} (limit {limit}; "
+              f"{actual_row['note']})")
+        if not ok:
             status = 1
     return status
 

@@ -50,6 +50,13 @@
                                   launch_gate/u8_* rows CI enforces
                                   (uint8 frame/fleet frame == 3
                                   launches)
+  table_localization     PR 8     depth + ego-motion backend closed
+                                  against scene ground truth: ATE/RPE
+                                  accuracy_gate rows CI enforces for
+                                  f32 AND uint8, plus the
+                                  launch_gate/loc_* rows (localized
+                                  frame <= 3 frontend + 1 backend
+                                  launches)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--out PATH]
 Prints CSV rows ``table,name,value,unit,note`` and writes them to a
@@ -672,7 +679,7 @@ def table_service(quick=False):
     dt = 1.0 / 30.0
     scfg = scenes.SceneConfig(height=h, width=w, n_points=60, seed=11,
                               baseline=0.3)
-    fleet, intr = scenes.render_fleet_sequence(scfg, t_total, n_rigs)
+    fleet, intr, _ = scenes.render_fleet_sequence(scfg, t_total, n_rigs)
     fleet = jax.block_until_ready(fleet)
     ocfg = ORBConfig(height=h, width=w, n_levels=2, max_features=64,
                      max_disparity=32)
@@ -825,6 +832,82 @@ def table_precision(quick=False):
          "uint8 fleet frame: same 3-launch schedule as f32")
 
 
+def table_localization(quick=False):
+    """Localization backend (this PR): disparity -> depth -> rig-frame
+    points, the one-launch temporal matcher, and the batched robust
+    Procrustes solve, closed against ``data.scenes`` ground truth.
+
+    Emits the ``accuracy_gate/*`` rows CI enforces: ATE / RPE of a
+    localized ``run`` over a constant-twist scene must stay under
+    pinned limits (~2x the measured baseline) for BOTH the f32 and the
+    uint8 integer datapath — so neither a solver regression nor a
+    quantization change can silently walk the trajectory error up.
+    Also emits the ``launch_gate/loc_*`` rows: a localized frame (and
+    fleet frame) costs at most 3 frontend + 1 backend launches."""
+    from repro import localization as loc
+    h, w = (96, 128) if quick else (160, 240)
+    kmax = 96 if quick else 128
+    t_total = 4 if quick else 6
+    scfg = scenes.SceneConfig(height=h, width=w, baseline=0.5, seed=1)
+    seq = scenes.render_sequence(scfg, t_total, step_t=(0.25, 0.0, 0.1),
+                                 yaw_per_frame=0.0)
+    frames = jax.block_until_ready(jnp.asarray(seq.frames))
+    ocfg = ORBConfig(height=h, width=w, max_features=kmax,
+                     fast_threshold=15)
+    res = f"{w}x{h}"
+    # Pinned at ~2x the worst measured baseline across quick/full AND
+    # f32/u8 (measured 2026-08: ATE 0.19-0.29 m, RPE-t 0.10-0.10 m,
+    # RPE-r 0.10-0.14 deg) — tight enough to catch a solver or matcher
+    # regression, loose enough to absorb accelerator reduction-order
+    # jitter.
+    limits = {"ate": 0.60, "rpe_trans": 0.25, "rpe_rot": 0.30}
+
+    def gate(tag, vs, fr):
+        t_wall, out = _bench(vs.run, fr, iters=3, warmup=1)
+        m = loc.trajectory_metrics(out.pose.rotation,
+                                   out.pose.translation, seq.poses)
+        inl = np.asarray(out.pose.inliers)
+        emit("localization", f"run_ms_{tag}_{res}", round(t_wall * 1e3, 1),
+             "ms", f"{t_total}-frame localized run "
+             "(3 launches/step + 1 temporal)")
+        emit("localization", f"mean_inliers_{tag}",
+             round(float(inl[1:].mean()), 1), "points",
+             "per-transition robust-solve support")
+        emit("localization", f"travel_{tag}", round(m["travel_m"], 3),
+             "m", "ground-truth path length")
+        for key, metric, unit in (("ate", "ate_rmse_m", "m"),
+                                  ("rpe_trans", "rpe_trans_rmse_m", "m"),
+                                  ("rpe_rot", "rpe_rot_mean_deg", "deg")):
+            emit("accuracy_gate", f"{key}_{tag}", round(m[metric], 4),
+                 unit, f"{t_total}-frame constant-twist scene {res} "
+                 "vs ground truth")
+            emit("accuracy_gate", f"{key}_{tag}_limit", limits[key],
+                 unit, "pinned ~2x the measured baseline")
+        return out
+
+    rig = RigConfig.quad(seq.intrinsics)
+    vs = VisualSystem(rig, PipelineConfig(orb=ocfg, localize=True))
+    gate("f32", vs, frames)
+    u8 = jnp.asarray(np.round(np.clip(np.asarray(frames), 0.0, 255.0))
+                     .astype(np.uint8))
+    vs_u8 = VisualSystem(rig, PipelineConfig(orb=ocfg, localize=True,
+                                             precision="uint8"))
+    gate("u8", vs_u8, u8)
+
+    im = frames[0]
+    actual = vs.traced_launches("process_frame", im)
+    emit("launch_gate", "loc_frame_launches", actual, "kernels",
+         f"traced localized quad frame {res}: 3 frontend + 1 temporal")
+    emit("launch_gate", "loc_frame_budget", 4, "kernels",
+         "frame budget with the localization backend folded in")
+    actual = vs.traced_launches("process_fleet", jnp.stack([im, im]))
+    emit("launch_gate", "loc_fleet_frame_launches", actual, "kernels",
+         "traced localized 2-rig fleet frame: the rig axis folds into "
+         "the one temporal launch")
+    emit("launch_gate", "loc_fleet_frame_budget", 4, "kernels",
+         "fleet == single-rig localized budget")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -845,6 +928,7 @@ def main() -> None:
     table_fleet(args.quick)
     table_service(args.quick)
     table_precision(args.quick)
+    table_localization(args.quick)
     print(f"# done in {time.time() - t0:.1f}s ({len(ROWS)} rows)")
     if args.out:
         rows = [{"table": t, "name": n, "value": v, "unit": u, "note": note}

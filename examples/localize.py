@@ -4,31 +4,28 @@ frame-multiplexed ORB frontend -> stereo depth -> temporal matching ->
 robust pose backend -> trajectory, compared to ground truth.
 
 The session is configured ONCE from a ``RigConfig`` (camera layout +
-intrinsics + sync) and a ``PipelineConfig`` (ORB parameters, impl,
-schedule); every frame then goes through ``vs.process_frame`` — per
-FRAME, one dense blur+FAST+NMS launch and one sparse orientation+rBRIEF
-launch covering every camera at every pyramid level, plus ONE fused
-Feature Matcher launch (Hamming match + in-kernel SAD rectification)
-covering both stereo pairs: 3 launches total.  The same session also
-serves a FLEET of rigs: ``vs.process_fleet`` folds a leading
-``(n_rigs,)`` axis into the batched kernels, so N rigs still cost 3
-launches per fleet frame.  Both traced launch audits are printed at
-startup.
+intrinsics + sync) and a ``PipelineConfig`` with ``localize=True``;
+every frame then goes through ``vs.process_frame`` — one dense
+blur+FAST+NMS launch and one sparse orientation+rBRIEF launch covering
+every camera at every pyramid level, ONE fused Feature Matcher launch
+(Hamming match + in-kernel SAD rectification) for both stereo pairs,
+plus ONE fused temporal-match launch feeding the batched Procrustes
+pose solve: 4 launches total.  The same session serves a FLEET of rigs
+at the same budget (``vs.process_fleet`` folds a leading ``(n_rigs,)``
+axis into the batched kernels), and ``vs.run`` scans a whole sequence,
+threading the cross-frame ``LocalizationState`` automatically.
 
     PYTHONPATH=src python examples/localize.py [--frames 6]
 """
 
 import argparse
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ORBConfig, PipelineConfig, RigConfig, VisualSystem,
-                        backend)
+from repro.core import ORBConfig, PipelineConfig, RigConfig, VisualSystem
 from repro.data import scenes
-
-FLIP = jnp.asarray([[-1.0, 0, 0], [0, 1.0, 0], [0, 0, -1.0]])
+from repro.localization import metrics
 
 
 def main() -> None:
@@ -40,59 +37,49 @@ def main() -> None:
 
     scene = scenes.SceneConfig(height=160, width=240, n_points=250,
                                baseline=0.5, seed=13)
-    frames, rig_poses, intr = scenes.render_sequence(
-        scene, args.frames, step_t=(0.2, 0.0, 0.1), yaw_per_frame=0.02)
+    seq = scenes.render_sequence(scene, args.frames,
+                                 step_t=(0.2, 0.0, 0.1),
+                                 yaw_per_frame=0.02)
+    frames = jnp.asarray(seq.frames)
     ocfg = ORBConfig(height=160, width=240, max_features=256,
                      n_levels=1, max_disparity=96)
 
     # One session = one configured rig + pipeline: jitted entry points
-    # are cached on it, so the python loop below never retraces.
-    vs = VisualSystem(RigConfig.quad(intr), PipelineConfig(orb=ocfg))
+    # are cached on it, so nothing below ever retraces.  localize=True
+    # folds the depth + ego-motion backend into every entry point.
+    vs = VisualSystem(RigConfig.quad(seq.intrinsics),
+                      PipelineConfig(orb=ocfg, localize=True))
 
-    # Launch audit: the fused frontend schedule, traced (single rig and
-    # an N-rig fleet — the fleet folds into the same 3 launches).
+    # Launch audit: the fused schedule, traced (single rig and an
+    # N-rig fleet — the fleet folds into the SAME 4 launches).
     n_frame = vs.traced_launches("process_frame", frames[0])
     fleet0 = jnp.broadcast_to(frames[0], (args.fleet,) + frames[0].shape)
     n_fleet = vs.traced_launches("process_fleet", fleet0)
-    print(f"traced kernel launches per quad frame: {n_frame} "
-          f"(1 dense + 1 sparse FE for all 4 cams x all levels, + 1 fused "
-          f"FM — Hamming + in-kernel SAD for both pairs in one grid)")
+    print(f"traced kernel launches per localized quad frame: {n_frame} "
+          f"(1 dense + 1 sparse FE for all 4 cams x all levels, + 1 "
+          f"fused stereo FM, + 1 fused temporal FM for the pose solve)")
     print(f"traced kernel launches per {args.fleet}-rig fleet frame: "
           f"{n_fleet} (rig axis folded into the same batched kernels)")
 
-    outs = [vs.process_frame(f) for f in frames]  # leading (2,) pair axis
-    outs_f = [jax.tree.map(lambda x: x[0], o) for o in outs]
-    outs_b = [jax.tree.map(lambda x: x[1], o) for o in outs]
+    # The whole sequence in one call: out.pose rows are the t-1 -> t
+    # relative poses (row 0 has no predecessor -> identity + invalid).
+    out = vs.run(frames)
+    for t in range(1, args.frames):
+        print(f"frame {t - 1}->{t}: "
+              f"{int(out.pose.inliers[t])} inliers, valid="
+              f"{bool(out.pose.valid[t])}, t = "
+              f"{np.asarray(out.pose.translation[t]).round(3)}")
 
-    poses = []
-    for t in range(args.frames - 1):
-        pts, pts_n, w = [], [], []
-        for seq, rot in ((outs_f, jnp.eye(3)), (outs_b, FLIP)):
-            prev, curr = seq[t], seq[t + 1]
-            tm = vs.temporal_match(prev.features_l, curr.features_l)
-            idx = tm.right_index
-            wk = (tm.valid & prev.depth.valid
-                  & curr.depth.valid[idx]).astype(jnp.float32)
-            pts.append(backend.triangulate(
-                prev.features_l, prev.depth, intr) @ rot.T)
-            pts_n.append(backend.triangulate(
-                curr.features_l, curr.depth, intr)[idx] @ rot.T)
-            w.append(wk)
-        pose = backend.estimate_relative_pose(
-            jnp.concatenate(pts), jnp.concatenate(pts_n),
-            jnp.concatenate(w), None, intr, refine=False)
-        poses.append(pose)
-        print(f"frame {t}->{t+1}: {int(pose.inliers)} inliers, "
-              f"t = {np.asarray(pose.translation).round(3)}")
-
-    traj = np.asarray(backend.integrate_trajectory(poses))
-    true = np.asarray(rig_poses[-1][1])
-    err = np.linalg.norm(traj[-1] - true)
-    travel = np.linalg.norm(true)
-    print(f"\nestimated final position: {traj[-1].round(3)}")
-    print(f"ground-truth position:    {true.round(3)}")
-    print(f"drift: {err:.3f} m over {travel:.2f} m "
-          f"({100 * err / travel:.1f}%)")
+    m = metrics.trajectory_metrics(out.pose.rotation,
+                                   out.pose.translation, seq.poses)
+    est_pos, _ = metrics.integrate_relative(out.pose.rotation,
+                                            out.pose.translation)
+    ref_pos = metrics.gt_positions(seq.poses)
+    print(f"\nestimated final position: {est_pos[-1].round(3)}")
+    print(f"ground-truth position:    {ref_pos[-1].round(3)}")
+    print(f"ATE {m['ate_rmse_m']:.3f} m | RPE {m['rpe_trans_rmse_m']:.3f} m"
+          f" / {m['rpe_rot_mean_deg']:.3f} deg over {m['travel_m']:.2f} m"
+          f" of travel")
 
 
 if __name__ == "__main__":

@@ -38,8 +38,8 @@ def main() -> None:
 
     scfg = scenes.SceneConfig(height=args.height, width=args.width,
                               n_points=80, seed=7, baseline=0.3)
-    frames, intr = scenes.render_fleet_sequence(scfg, args.frames,
-                                                args.rigs)
+    frames, intr, _ = scenes.render_fleet_sequence(scfg, args.frames,
+                                                   args.rigs)
 
     ocfg = ORBConfig(height=args.height, width=args.width, n_levels=2,
                      max_features=64, max_disparity=32)

@@ -12,7 +12,8 @@ fused extraction), ``matching`` (fused FM megakernel + unfused oracle),
 """
 
 from repro.core.types import (CameraIntrinsics, DepthSet, FeatureSet,
-                              MatchSet, ORBConfig, StereoOutput)
+                              LocalizationOutput, LocalizationState,
+                              MatchSet, ORBConfig, PoseSet, StereoOutput)
 from repro.core.rig import DesyncError, RigConfig
 from repro.core.pipeline import PipelineConfig, VisualSystem
 from repro.core.orb import (extract_features, extract_features_batched,
@@ -29,7 +30,7 @@ from repro.core import backend, sync  # noqa: F401
 
 __all__ = [
     "CameraIntrinsics", "DepthSet", "FeatureSet", "MatchSet", "ORBConfig",
-    "StereoOutput",
+    "StereoOutput", "LocalizationOutput", "LocalizationState", "PoseSet",
     "RigConfig", "PipelineConfig", "VisualSystem", "DesyncError",
     "extract_features", "extract_features_batched",
     "extract_features_per_level", "stereo_match", "stereo_match_unfused",

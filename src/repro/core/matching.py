@@ -33,6 +33,18 @@ from repro.kernels import ops
 from repro.kernels import ref as _ref
 
 
+#: Smallest disparity (px) accepted as a real stereo observation.  One
+#: constant drives BOTH the validity gate and the divisor guard in
+#: ``_depth_set``: a match at exactly MIN_DISPARITY is INVALID (the gate
+#: is strict), and the depth divisor is only ever the raw disparity of a
+#: match that passed the gate — the ``maximum(.., MIN_DISPARITY)`` clamp
+#: exists purely to keep the masked-out lanes' division finite, never to
+#: manufacture a depth for a ruled-out match (its depth is exactly 0).
+#: Before unification the gate used 0.5 and the clamp used a separate
+#: literal 0.5 — consistent only by coincidence.
+MIN_DISPARITY = 0.5
+
+
 def _meta(feat: FeatureSet) -> jnp.ndarray:
     """(..., K) FeatureSet -> (..., K, 4) float32 matcher meta rows of
     (x, y, level, valid); works for unbatched and pair-batched sets."""
@@ -70,9 +82,13 @@ def _depth_set(x_l, rxy, best, matches: MatchSet, cfg: ORBConfig,
     (see ``_fx_baseline``)."""
     x_r_rect = rxy[..., 0] + best
     disparity = x_l - x_r_rect
-    valid = matches.valid & (disparity > 0.5)
+    valid = matches.valid & (disparity > MIN_DISPARITY)
+    # The clamp only sanitizes lanes ``where`` discards (static shapes:
+    # every lane divides); any lane with disparity <= MIN_DISPARITY is
+    # already invalid above, so a clamped divisor NEVER reaches a depth
+    # a consumer may read as real.
     depth = jnp.where(valid, _fx_baseline(intr)
-                      / jnp.maximum(disparity, 0.5), 0.0)
+                      / jnp.maximum(disparity, MIN_DISPARITY), 0.0)
     xy_right = jnp.stack([x_r_rect, rxy[..., 1]], axis=-1)
     return DepthSet(disparity=jnp.where(valid, disparity, 0.0),
                     depth=depth, xy_right=xy_right, valid=valid)

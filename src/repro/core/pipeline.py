@@ -79,10 +79,13 @@ import numpy as np
 from repro.core import matching, orb
 from repro.core import sync as sync_mod
 from repro.core.rig import DesyncError, RigConfig
-from repro.core.types import (CameraIntrinsics, FeatureSet, MatchSet,
-                              ORBConfig, StereoOutput)
+from repro.core.types import (CameraIntrinsics, FeatureSet,
+                              LocalizationOutput, LocalizationState,
+                              MatchSet, ORBConfig, PoseSet, StereoOutput)
 from repro.distributed import sharding
 from repro.kernels import ops
+from repro import localization
+from repro.localization import pose as pose_solver
 
 _SCHEDULES = ("sequential", "pipelined")
 _PRECISIONS = ("f32", "uint8")
@@ -121,6 +124,17 @@ class PipelineConfig:
     uint8 path requires ``ORBConfig.quantized`` and uint8 input frames
     (validated eagerly); FAST keypoints and descriptors are bit-exact
     against the quantized f32 path.
+
+    ``localize`` turns on the localization backend
+    (``repro.localization``): ``process_frame`` / ``process_fleet`` /
+    ``run`` / ``run_fleet`` then return a ``LocalizationOutput``
+    (frontend fields + rig-frame 3-D points + relative ego-motion
+    ``PoseSet``) instead of a bare ``StereoOutput``.  The backend adds
+    exactly ONE kernel launch per frame (the batched temporal matcher;
+    triangulation and the robust Procrustes solve are jnp) — a
+    localized frame is <= 4 launches, CI-gated.  It defaults OFF so
+    frontend-only sessions keep their output type, launch budget, and
+    bit-exactness pins unchanged.
     """
 
     orb: ORBConfig = ORBConfig()
@@ -130,6 +144,7 @@ class PipelineConfig:
     temporal_radius_y: float | None = None
     rig_shard_axis: str | None = None
     precision: str = "f32"
+    localize: bool = False
 
     def __post_init__(self):
         if self.schedule not in _SCHEDULES:
@@ -181,6 +196,11 @@ class VisualSystem:
         # session at 30 fps would otherwise grow this without limit.
         self.desync_log: "collections.deque[float]" = collections.deque(
             maxlen=4096)
+        # Localization memory: the previous processed frame's state per
+        # entry key ("frame" / ("fleet", n_rigs)) — only written when
+        # PipelineConfig.localize is on.  Callers that manage their own
+        # cross-batch state (the serving tier) pass ``prev=`` instead.
+        self._loc_state: dict = {}
 
     # -- jit cache ---------------------------------------------------------
 
@@ -449,6 +469,152 @@ class VisualSystem:
                 "frames — drain/prologue accounting is broken")
         return outs
 
+    # -- localization engine (pure, jit-able) ------------------------------
+
+    def _temporal_radii(self) -> tuple[float, float]:
+        rx = float(self.pipe.temporal_radius)
+        ry = (rx if self.pipe.temporal_radius_y is None
+              else float(self.pipe.temporal_radius_y))
+        return rx, ry
+
+    def _loc_flat(self, out: StereoOutput, prev: LocalizationState,
+                  n_rigs: int, impl):
+        """Backend stage over the FLAT (n_rigs * n_pairs,) pair batch:
+        rig-frame triangulation (jnp, 0 launches), ONE fused temporal
+        match launch folding every pair of every rig, and the vmapped
+        robust Procrustes solve (jnp).  Returns (points (B*P, K, 3),
+        PoseSet with (n_rigs,) axes)."""
+        p = self.rig.n_pairs
+        k = out.features_l.valid.shape[-1]
+        xy = out.features_l.xy.reshape((n_rigs, p, k, 2))
+        z = out.depth.depth.reshape((n_rigs, p, k))
+        pts = localization.rig_points(xy, z, self.rig)
+        pts_flat = pts.reshape((n_rigs * p, k, 3))
+        curr = LocalizationState(
+            desc=out.features_l.desc,
+            meta=matching._meta(out.features_l),
+            points=pts_flat,
+            valid=out.features_l.valid & out.depth.valid)
+        rx, ry = self._temporal_radii()
+        pp, cp, w = pose_solver.temporal_correspondences(
+            prev, curr, self.pipe.orb, rx, ry, impl)
+        pose = pose_solver.solve_pose_batched(
+            pp.reshape((n_rigs, p * k, 3)),
+            cp.reshape((n_rigs, p * k, 3)),
+            w.reshape((n_rigs, p * k)))
+        return pts_flat, pose
+
+    def _localize_frame(self, out: StereoOutput, prev: LocalizationState,
+                        impl):
+        """Frame view of ``_loc_flat``: (P,) axes in, scalar pose out."""
+        pts, pose = self._loc_flat(out, prev, 1, impl)
+        return pts, jax.tree.map(lambda x: x[0], pose)
+
+    def _localize_fleet(self, out: StereoOutput, prev: LocalizationState,
+                        impl):
+        """Fleet view: (n, P, ...) axes in, (n,) pose out — the rig
+        axis folds into the temporal matcher's pair grid and the solve's
+        vmap, so localizing a whole fleet is still ONE extra launch."""
+        n = out.features_l.valid.shape[0]
+        p, k = self.rig.n_pairs, out.features_l.valid.shape[-1]
+        flat = jax.tree.map(
+            lambda x: x.reshape((n * p,) + x.shape[2:]), out)
+        prev_flat = jax.tree.map(
+            lambda x: x.reshape((n * p,) + x.shape[2:]), prev)
+        pts, pose = self._loc_flat(flat, prev_flat, n, impl)
+        return pts.reshape((n, p, k, 3)), pose
+
+    def _run_loc(self, frames, impl, fleet: bool) -> LocalizationOutput:
+        """Localized sequence: the frontend scan (3 launches per step)
+        plus ONE temporal-match launch for ALL T-1 frame transitions of
+        all rigs (time folds into the matcher's pair grid exactly like
+        the fleet axis), then the (T-1)*n_rigs-way batched solve.
+        ``pose`` row 0 is identity + invalid (no predecessor)."""
+        outs = self._run_core(frames, impl, fleet)
+        shaped = outs if fleet else jax.tree.map(lambda x: x[:, None],
+                                                 outs)
+        feat_l = shaped.features_l
+        t_total, n = feat_l.valid.shape[0], feat_l.valid.shape[1]
+        p, k = self.rig.n_pairs, feat_l.valid.shape[-1]
+        pts = localization.rig_points(feat_l.xy, shaped.depth.depth,
+                                      self.rig)      # (T, n, P, K, 3)
+        meta = matching._meta(feat_l)
+        valid = feat_l.valid & shaped.depth.valid
+
+        def invalid_pose(lead):
+            return PoseSet(
+                rotation=jnp.broadcast_to(jnp.eye(3, dtype=jnp.float32),
+                                          lead + (3, 3)),
+                translation=jnp.zeros(lead + (3,), jnp.float32),
+                inliers=jnp.zeros(lead, jnp.int32),
+                valid=jnp.zeros(lead, bool))
+
+        if t_total == 1:
+            pose = invalid_pose((1, n))
+        else:
+            b = (t_total - 1) * n
+
+            def flat(x, sl):
+                return x[sl].reshape((b * p,) + x.shape[3:])
+
+            def state(sl):
+                return LocalizationState(
+                    desc=flat(feat_l.desc, sl), meta=flat(meta, sl),
+                    points=flat(pts, sl), valid=flat(valid, sl))
+
+            rx, ry = self._temporal_radii()
+            pp, cp, w = pose_solver.temporal_correspondences(
+                state(slice(None, -1)), state(slice(1, None)),
+                self.pipe.orb, rx, ry, impl)
+            pose = pose_solver.solve_pose_batched(
+                pp.reshape((b, p * k, 3)), cp.reshape((b, p * k, 3)),
+                w.reshape((b, p * k)))
+            pose = jax.tree.map(
+                lambda x: x.reshape((t_total - 1, n) + x.shape[1:]),
+                pose)
+            pose = jax.tree.map(
+                lambda first, rest: jnp.concatenate([first, rest]),
+                invalid_pose((1, n)), pose)
+        if not fleet:
+            pts = pts[:, 0]
+            pose = jax.tree.map(lambda x: x[:, 0], pose)
+        return LocalizationOutput(outs, pts, pose)
+
+    def _resolve_prev(self, prev, key, out: StereoOutput, what: str
+                      ) -> LocalizationState:
+        """Previous-frame state for a localized entry: the caller's
+        explicit ``prev`` (shape-validated eagerly), else the session's
+        stored state for this entry key, else the all-invalid zero state
+        (session start — the solve degenerates to identity+invalid)."""
+        k = out.features_l.valid.shape[-1]
+        n_rigs = None if key == "frame" else key[1]
+        if prev is None:
+            prev = self._loc_state.get(key)
+        if prev is None:
+            return localization.zero_state(self.rig.n_pairs, k, n_rigs)
+        if not isinstance(prev, LocalizationState):
+            raise TypeError(
+                f"{what}: prev must be a LocalizationState "
+                f"(see repro.localization.state_from), got "
+                f"{type(prev)!r}")
+        lead = ((self.rig.n_pairs,) if n_rigs is None
+                else (n_rigs, self.rig.n_pairs))
+        want = lead + (k, 3)
+        got = tuple(prev.points.shape)
+        if got != want:
+            raise ValueError(
+                f"{what}: prev.points shape {got} does not match {want} "
+                "— the state must come from the same rig layout and "
+                "feature budget (and, for fleets, the same n_rigs)")
+        return prev
+
+    def reset_localization(self) -> None:
+        """Forget all cross-frame localization state: the next
+        ``process_frame`` / ``process_fleet`` behaves like a session
+        start (identity + invalid pose).  Call between unrelated
+        sequences so a stale previous frame cannot leak into a pose."""
+        self._loc_state.clear()
+
     # -- frame / sequence entry points -------------------------------------
 
     def _coerce_camera_mask(self, camera_mask, n_rigs: int | None,
@@ -483,10 +649,17 @@ class VisualSystem:
                            else camera_mask & keep)
         return False, camera_mask
 
-    def process_frame(self, images, timestamps=None,
-                      camera_mask=None) -> StereoOutput | None:
+    def process_frame(self, images, timestamps=None, camera_mask=None,
+                      prev: LocalizationState | None = None
+                      ) -> StereoOutput | LocalizationOutput | None:
         """One rig frame: (n_cameras, H, W) -> StereoOutput with leading
         (n_pairs,) axes, in exactly 3 kernel launches (2 FE + 1 FM).
+        With ``PipelineConfig.localize`` the return is a
+        ``LocalizationOutput`` (adds rig-frame 3-D points and the
+        relative pose vs the previous processed frame) in <= 4 launches;
+        ``prev`` overrides the session-held previous-frame state
+        (``repro.localization.state_from``), e.g. for callers that
+        interleave several streams through one session.
 
         ``timestamps`` (optional, (n_cameras,) seconds) runs the rig's
         per-frame desync policy (``desync_decision``) before dispatch:
@@ -507,16 +680,29 @@ class VisualSystem:
             if dropped:
                 return None
         if camera_mask is None:
-            return self._jit(
+            out = self._jit(
                 "process_frame",
                 lambda im: self._frame_core(im, self.impl))(images)
-        return self._jit(
-            "process_frame_masked",
-            lambda im, cm: self._frame_core(im, self.impl, cm))(
-                images, jnp.asarray(camera_mask))
+        else:
+            out = self._jit(
+                "process_frame_masked",
+                lambda im, cm: self._frame_core(im, self.impl, cm))(
+                    images, jnp.asarray(camera_mask))
+        if not self.pipe.localize:
+            return out
+        prev_state = self._resolve_prev(prev, "frame", out,
+                                        "process_frame")
+        pts, pose = self._jit(
+            "localize_frame",
+            lambda o, pv: self._localize_frame(o, pv, self.impl))(
+                out, prev_state)
+        lout = LocalizationOutput(out, pts, pose)
+        self._loc_state["frame"] = localization.state_from(lout)
+        return lout
 
-    def process_fleet(self, images, timestamps=None,
-                      camera_mask=None) -> StereoOutput:
+    def process_fleet(self, images, timestamps=None, camera_mask=None,
+                      prev: LocalizationState | None = None
+                      ) -> StereoOutput | LocalizationOutput:
         """One frame from EVERY rig of a fleet: (n_rigs, n_cameras, H, W)
         -> StereoOutput with leading (n_rigs, n_pairs) axes — still 3
         kernel launches total, bit-exact against the per-rig loop.
@@ -539,6 +725,15 @@ class VisualSystem:
         ``use_sharding`` mesh installed, the rig axis is sharded over
         that mesh axis via ``shard_map`` (n_rigs must divide evenly;
         degraded — masked — fleets currently take the unsharded path).
+
+        With ``PipelineConfig.localize`` the return is a
+        ``LocalizationOutput`` with (n_rigs,) pose axes — the temporal
+        matcher folds rigs into its pair grid and the solve vmaps, so
+        the WHOLE fleet localizes in one extra launch (<= 4 total).
+        ``prev`` ((n_rigs, ...) ``LocalizationState``) overrides the
+        session-held state — the serving tier re-buckets rigs between
+        batches, so it assembles per-rig state explicitly (localized
+        fleets take the unsharded path).
         """
         images = self._coerce_fleet_images(images, "process_fleet")
         self._check_images(images, fleet=True, sequence=False)
@@ -564,17 +759,30 @@ class VisualSystem:
                 rows[r] = False if dropped else row
             camera_mask = rows
         if camera_mask is None:
-            sharded = self._fleet_sharded("process_fleet",
-                                          self._fleet_core)
+            sharded = (None if self.pipe.localize
+                       else self._fleet_sharded("process_fleet",
+                                                self._fleet_core))
             if sharded is not None:
                 return sharded(images)
-            return self._jit(
+            out = self._jit(
                 "process_fleet",
                 lambda im: self._fleet_core(im, self.impl))(images)
-        return self._jit(
-            "process_fleet_masked",
-            lambda im, cm: self._fleet_core(im, self.impl, cm))(
-                images, jnp.asarray(camera_mask))
+        else:
+            out = self._jit(
+                "process_fleet_masked",
+                lambda im, cm: self._fleet_core(im, self.impl, cm))(
+                    images, jnp.asarray(camera_mask))
+        if not self.pipe.localize:
+            return out
+        key = ("fleet", n_rigs)
+        prev_state = self._resolve_prev(prev, key, out, "process_fleet")
+        pts, pose = self._jit(
+            "localize_fleet",
+            lambda o, pv: self._localize_fleet(o, pv, self.impl))(
+                out, prev_state)
+        lout = LocalizationOutput(out, pts, pose)
+        self._loc_state[key] = localization.state_from(lout)
+        return lout
 
     def _coerce_fleet_images(self, images, what: str):
         """Fleet inputs arrive either as one stacked array or as a
@@ -598,19 +806,33 @@ class VisualSystem:
             images = jnp.stack([jnp.asarray(x) for x in images])
         return images
 
-    def run(self, frames) -> StereoOutput:
+    def run(self, frames) -> StereoOutput | LocalizationOutput:
         """A frame sequence (T, n_cameras, H, W) -> StereoOutput with
-        leading (T, n_pairs) axes, under ``PipelineConfig.schedule``."""
+        leading (T, n_pairs) axes, under ``PipelineConfig.schedule``.
+        With ``localize`` on: a ``LocalizationOutput`` whose pose rows
+        are the per-step relative motion (row 0 identity+invalid);
+        sequences are self-contained — they neither read nor write the
+        ``process_frame`` cross-call state."""
         self._check_images(frames, fleet=False, sequence=True)
+        if self.pipe.localize:
+            return self._jit(
+                "run_loc",
+                lambda f: self._run_loc(f, self.impl, False))(frames)
         return self._jit(
             "run",
             lambda f: self._run_core(f, self.impl, False))(frames)
 
-    def run_fleet(self, frames) -> StereoOutput:
+    def run_fleet(self, frames) -> StereoOutput | LocalizationOutput:
         """A fleet sequence (T, n_rigs, n_cameras, H, W) -> StereoOutput
         with leading (T, n_rigs, n_pairs) axes; both schedules fold the
-        rig axis into the batched kernels (3 launches per scan step)."""
+        rig axis into the batched kernels (3 launches per scan step).
+        With ``localize`` on: a ``LocalizationOutput`` with
+        (T, n_rigs) pose axes (row 0 identity+invalid; unsharded)."""
         self._check_images(frames, fleet=True, sequence=True)
+        if self.pipe.localize:
+            return self._jit(
+                "run_fleet_loc",
+                lambda f: self._run_loc(f, self.impl, True))(frames)
         sharded = self._fleet_sharded(
             "run_fleet", lambda f, impl: self._run_core(f, impl, True))
         if sharded is not None:
@@ -744,16 +966,39 @@ class VisualSystem:
         per frame / fleet frame), independent of the session's impl.
         ``process_frame`` / ``process_fleet`` accept an optional second
         camera-mask argument so the DEGRADED budget (also 3 — masking is
-        elementwise jnp, not a launch) is gateable too."""
+        elementwise jnp, not a launch) is gateable too.  On a
+        ``localize`` session the frame/fleet/run entries trace the FULL
+        localized graph (frontend + temporal matcher + solve), so the
+        <= 4 localized budget is gateable the same way."""
+        k = self.pipe.orb.max_features
+
+        def frame_core(im, cm=None):
+            out = self._frame_core(im, "pallas", cm)
+            if not self.pipe.localize:
+                return out
+            prev = localization.zero_state(self.rig.n_pairs, k)
+            return self._localize_frame(out, prev, "pallas")
+
+        def fleet_core(im, cm=None):
+            out = self._fleet_core(im, "pallas", cm)
+            if not self.pipe.localize:
+                return out
+            prev = localization.zero_state(self.rig.n_pairs, k,
+                                           int(im.shape[0]))
+            return self._localize_fleet(out, prev, "pallas")
+
+        def run_core(f, fleet):
+            if self.pipe.localize:
+                return self._run_loc(f, "pallas", fleet)
+            return self._run_core(f, "pallas", fleet)
+
         cores = {
-            "process_frame":
-                lambda im, cm=None: self._frame_core(im, "pallas", cm),
-            "process_fleet":
-                lambda im, cm=None: self._fleet_core(im, "pallas", cm),
+            "process_frame": frame_core,
+            "process_fleet": fleet_core,
             "extract": lambda im: orb.extract_features_batched(
                 im, self.pipe.orb, impl="pallas"),
-            "run": lambda f: self._run_core(f, "pallas", False),
-            "run_fleet": lambda f: self._run_core(f, "pallas", True),
+            "run": lambda f: run_core(f, False),
+            "run_fleet": lambda f: run_core(f, True),
         }
         try:
             core = cores[entry]

@@ -75,6 +75,12 @@ class RigConfig:
     sync_policy: str = "hardware"
     max_desync: float = 0.0      # tolerated per-frame tag spread (s)
     desync_policy: str | None = None   # None = legacy raise/log split
+    # Per-pair camera->rig rotation (the pair's LEFT camera frame into
+    # the shared rig frame), as nested float tuples so the config stays
+    # hashable.  None = identity for every pair (a forward-looking rig);
+    # ``quad()`` sets the back pair's 180-degree yaw so the localization
+    # backend fuses both pairs' 3-D points into ONE rig-frame solve.
+    pair_rotations: tuple | None = None
 
     def __post_init__(self):
         if self.n_cameras < 1:
@@ -116,6 +122,22 @@ class RigConfig:
                 f"{_DESYNC_POLICIES}, got {self.desync_policy!r}")
         if self.max_desync < 0.0:
             raise ValueError(f"max_desync must be >= 0, got {self.max_desync}")
+        if self.pair_rotations is not None:
+            rots = np.asarray(self.pair_rotations, dtype=np.float64)
+            if rots.shape != (len(pairs), 3, 3):
+                raise ValueError(
+                    f"pair_rotations shape {rots.shape} does not match "
+                    f"({len(pairs)}, 3, 3) — one camera->rig rotation "
+                    "per stereo pair")
+            for i, r in enumerate(rots):
+                if not np.allclose(r @ r.T, np.eye(3), atol=1e-6):
+                    raise ValueError(
+                        f"pair_rotations[{i}] is not a rotation matrix "
+                        "(R @ R.T != I)")
+            object.__setattr__(
+                self, "pair_rotations",
+                tuple(tuple(tuple(float(v) for v in row) for row in r)
+                      for r in rots))
 
     # -- layout views ------------------------------------------------------
 
@@ -141,6 +163,15 @@ class RigConfig:
     def homogeneous_intrinsics(self) -> bool:
         return all(ic == self.intrinsics[0] for ic in self.intrinsics[1:])
 
+    def pair_rotation_array(self) -> np.ndarray:
+        """(n_pairs, 3, 3) float32 camera->rig rotations (identity rows
+        when ``pair_rotations`` is None) — the layout the localization
+        backend folds every pair's 3-D points through."""
+        if self.pair_rotations is None:
+            return np.broadcast_to(np.eye(3, dtype=np.float32),
+                                   (self.n_pairs, 3, 3)).copy()
+        return np.asarray(self.pair_rotations, dtype=np.float32)
+
     def pair_mask(self, camera_mask):
         """Per-pair validity from a per-camera validity mask: a stereo
         pair survives iff BOTH of its cameras are alive.  ``camera_mask``
@@ -160,7 +191,14 @@ class RigConfig:
     def quad(cls, intrinsics: CameraIntrinsics = CameraIntrinsics(),
              **kwargs) -> "RigConfig":
         """The paper's rig: 4 cameras, front pair (0, 1) + back pair
-        (2, 3), one shared set of intrinsics."""
+        (2, 3), one shared set of intrinsics.  The back pair looks along
+        -z (180-degree yaw — ``data.scenes.camera_poses``), so its
+        camera->rig rotation is the xz flip; callers may override
+        ``pair_rotations`` for a different physical layout."""
+        kwargs.setdefault(
+            "pair_rotations",
+            (((1.0, 0.0, 0.0), (0.0, 1.0, 0.0), (0.0, 0.0, 1.0)),
+             ((-1.0, 0.0, 0.0), (0.0, 1.0, 0.0), (0.0, 0.0, -1.0))))
         return cls(n_cameras=4, pairs=((0, 1), (2, 3)),
                    intrinsics=intrinsics, **kwargs)
 

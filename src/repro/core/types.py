@@ -46,6 +46,74 @@ class StereoOutput(NamedTuple):
     depth: "DepthSet"
 
 
+class PoseSet(NamedTuple):
+    """Relative rig pose(s) from the localization backend.
+
+    ``rotation``/``translation`` map previous-frame rig coordinates into
+    the current frame: ``p_curr = R @ p_prev + t``.  ``valid`` is False
+    (and the pose exactly identity) whenever the solve was degenerate —
+    first frame, < 3 usable correspondences, collapsed geometry — so a
+    consumer integrating a trajectory can skip the step instead of
+    ingesting garbage; the fields are NEVER NaN.  Leading axes follow
+    the entry point: none for ``process_frame``, ``(n_rigs,)`` for
+    ``process_fleet``, ``(T,)`` / ``(T, n_rigs)`` for sequences.
+    """
+
+    rotation: jnp.ndarray      # (..., 3, 3) float32
+    translation: jnp.ndarray   # (..., 3)    float32
+    inliers: jnp.ndarray       # (...,)      int32 — final solve support
+    valid: jnp.ndarray         # (...,)      bool
+
+
+class LocalizationOutput(NamedTuple):
+    """One localized frame: the stereo frontend output plus the backend
+    quantities derived from it.
+
+    ``points`` are rig-frame 3-D back-projections of the left features
+    ((..., n_pairs, K, 3) — a point is meaningful iff the matching
+    ``stereo.features_l.valid & stereo.depth.valid`` lane is, otherwise
+    it is exactly zero); ``pose`` is the relative ego-motion since the
+    previous processed frame (see ``PoseSet``).  The frontend fields
+    are also exposed as delegating properties so existing
+    ``StereoOutput`` consumers read either type.
+    """
+
+    stereo: "StereoOutput"
+    points: jnp.ndarray        # (..., n_pairs, K, 3) float32, rig frame
+    pose: "PoseSet"
+
+    @property
+    def features_l(self) -> "FeatureSet":
+        return self.stereo.features_l
+
+    @property
+    def features_r(self) -> "FeatureSet":
+        return self.stereo.features_r
+
+    @property
+    def matches(self) -> "MatchSet":
+        return self.stereo.matches
+
+    @property
+    def depth(self) -> "DepthSet":
+        return self.stereo.depth
+
+
+class LocalizationState(NamedTuple):
+    """Previous-frame memory the temporal pose solve consumes: the last
+    frame's left descriptors + matcher meta (to temporal-match against),
+    its rig-frame points, and the combined feature-and-depth usability
+    mask.  Derivable from any ``LocalizationOutput`` slice
+    (``repro.localization.state_from``), which is how the serving tier
+    keeps per-rig state across re-bucketed fleet batches.  Leading axes:
+    ``(n_pairs, K)`` per rig, ``(n_rigs, n_pairs, K)`` for a fleet."""
+
+    desc: jnp.ndarray          # (..., n_pairs, K, 8) uint32
+    meta: jnp.ndarray          # (..., n_pairs, K, 4) float32 (x,y,lvl,valid)
+    points: jnp.ndarray        # (..., n_pairs, K, 3) float32, rig frame
+    valid: jnp.ndarray         # (..., n_pairs, K) bool — feature & depth
+
+
 class MatchSet(NamedTuple):
     """Stereo matches: one candidate per left feature."""
 

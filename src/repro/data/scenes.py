@@ -10,12 +10,39 @@ corners); the background is a smooth gradient plus mild noise.
 from __future__ import annotations
 
 import dataclasses
+import typing
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import CameraIntrinsics
+
+
+class SequenceOutput(typing.NamedTuple):
+    """One rendered trajectory with its ground truth.  ``poses`` is the
+    per-frame rig pose [(R, t)] — R maps rig->world, t is the rig's
+    world position — the ego-motion the localization backend's accuracy
+    gates compare against.  Field order matches the historical
+    ``(frames, poses, intrinsics)`` tuple, so positional unpacking of
+    ``render_sequence`` keeps working."""
+
+    frames: jnp.ndarray                 # (T, 4, H, W)
+    poses: list                         # T x (R (3,3), t (3,)) rig poses
+    intrinsics: CameraIntrinsics
+
+
+class FleetSequenceOutput(typing.NamedTuple):
+    """Fleet traffic with per-rig ground truth.  ``poses[r]`` is rig
+    ``r``'s per-frame [(R, t)] trajectory (rigs are phase-offset views
+    of one master trajectory; the offset is applied here so callers
+    never re-derive it).  The historical return was ``(frames,
+    intrinsics)`` — the first two fields — so 2-tuple unpacking must be
+    updated to name the fields or unpack all three."""
+
+    frames: jnp.ndarray                 # (T, n_rigs, 4, H, W)
+    intrinsics: CameraIntrinsics
+    poses: tuple                        # n_rigs x [T x (R, t)]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,22 +163,26 @@ def render_fleet_sequence(cfg: SceneConfig, n_frames: int, n_rigs: int,
     so rigs see DISTINCT images while the whole fleet renders only
     ``n_frames + n_rigs - 1`` quad frames once.  This is the traffic
     source for the serving layer's fault-injection episodes and the
-    ``table_service`` benchmark.  Returns (frames, intrinsics)."""
+    ``table_service`` benchmark.  Returns a ``FleetSequenceOutput``
+    (frames, intrinsics, per-rig ground-truth pose trajectories)."""
     if n_rigs < 1:
         raise ValueError(f"n_rigs must be >= 1, got {n_rigs}")
-    frames, _, intr = render_sequence(cfg, n_frames + n_rigs - 1,
-                                      step_t=step_t,
-                                      yaw_per_frame=yaw_per_frame)
+    frames, poses, intr = render_sequence(cfg, n_frames + n_rigs - 1,
+                                          step_t=step_t,
+                                          yaw_per_frame=yaw_per_frame)
     fleet = jnp.stack([frames[r:r + n_frames] for r in range(n_rigs)],
                       axis=1)
-    return fleet, intr
+    rig_poses = tuple(poses[r:r + n_frames] for r in range(n_rigs))
+    return FleetSequenceOutput(fleet, intr, rig_poses)
 
 
 def render_sequence(cfg: SceneConfig, n_frames: int,
                     step_t: tuple[float, float, float] = (0.05, 0.0, 0.10),
                     yaw_per_frame: float = 0.01):
-    """Deterministic trajectory: constant twist. Returns
-    (frames (T, 4, H, W), rig poses [(R, t)], intrinsics)."""
+    """Deterministic trajectory: constant twist. Returns a
+    ``SequenceOutput`` of (frames (T, 4, H, W), rig poses [(R, t)],
+    intrinsics) — the per-frame ground-truth ego-motion is part of the
+    public return, not internal state."""
     pts, tex = make_landmarks(cfg)
     pts = jnp.asarray(pts)
     intr = default_intrinsics(cfg)
@@ -166,4 +197,4 @@ def render_sequence(cfg: SceneConfig, n_frames: int,
         poses.append((r, t))
         t = t + r @ dt
         r = r @ dr
-    return jnp.stack(frames), poses, intr
+    return SequenceOutput(jnp.stack(frames), poses, intr)

@@ -35,7 +35,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as Ps
 
-from repro.core.types import DepthSet, FeatureSet, MatchSet
+from repro.core.types import DepthSet, FeatureSet, MatchSet, PoseSet
 
 
 def _quant(x: jnp.ndarray):
@@ -219,7 +219,23 @@ def decode_features(wire: dict) -> FeatureSet:
 
 def encode_matches(matches: MatchSet) -> dict:
     """MatchSet -> wire dict: uint16 index/distance with a no-match
-    sentinel (LOSSLESS — both fields are small ints), packed validity."""
+    sentinel (LOSSLESS — both fields are small ints), packed validity.
+
+    Raises eagerly when the feature budget is too large for the uint16
+    sentinel scheme: with K >= WIRE_NO_MATCH a legitimate
+    ``right_index`` value can equal (or exceed and silently map to) the
+    0xFFFF no-match sentinel, corrupting matches on decode with no
+    error anywhere — the failure the eager check converts into a named
+    ValueError at encode time."""
+    k = int(matches.right_index.shape[-1])
+    if k >= WIRE_NO_MATCH:
+        raise ValueError(
+            f"encode_matches: matches.right_index has K = {k} "
+            f">= WIRE_NO_MATCH (0x{WIRE_NO_MATCH:04X}) — a legitimate "
+            "match index would collide with the uint16 no-match "
+            "sentinel and decode as 'no match'.  Shrink "
+            "ORBConfig.max_features or widen the wire index field "
+            "before shipping this set.")
     return dict(
         right_index=_encode_u16(matches.right_index, WIRE_NO_MATCH),
         distance=_encode_u16(matches.distance, WIRE_NO_MATCH),
@@ -255,6 +271,42 @@ def decode_depth(wire: dict) -> DepthSet:
         depth=_dequant(wire["depth"], wire["depth_scale"]),
         xy_right=_dequant(wire["xy_right"], wire["xy_right_scale"]),
         valid=_unpack_mask(wire["valid"], wire["shape"]))
+
+
+def encode_pose(pose: PoseSet) -> dict:
+    """PoseSet -> wire dict, LOSSLESS (raw f32/i32 + packed validity).
+
+    The pose is the backend's *product* — the thing the accuracy gates
+    certify — so unlike the bulky int8 feature/depth payloads it ships
+    verbatim: 9 + 3 floats and one int per rig is noise next to the
+    descriptor slabs, and quantizing it would corrupt exactly the
+    quantity the fleet operator consumes."""
+    valid = jnp.atleast_1d(jnp.asarray(pose.valid, bool))
+    return dict(rotation=jnp.asarray(pose.rotation, jnp.float32),
+                translation=jnp.asarray(pose.translation, jnp.float32),
+                inliers=jnp.asarray(pose.inliers, jnp.int32),
+                valid=_pack_mask(valid),
+                shape=tuple(np.shape(pose.valid)))
+
+
+def decode_pose(wire: dict) -> PoseSet:
+    return PoseSet(
+        rotation=wire["rotation"], translation=wire["translation"],
+        inliers=wire["inliers"],
+        valid=_unpack_mask(wire["valid"], wire["shape"]))
+
+
+def encode_points(points: jnp.ndarray) -> dict:
+    """Rig-frame 3-D points -> wire dict, LOSSLESS raw f32.  Validity
+    is NOT duplicated here: a point is usable iff the feature and depth
+    masks already on the wire say so (``features_l.valid & depth.valid``
+    — what ``localization.state_from`` reconstructs on the far side)."""
+    return dict(points=jnp.asarray(points, jnp.float32),
+                shape=tuple(np.shape(points)))
+
+
+def decode_points(wire: dict) -> jnp.ndarray:
+    return wire["points"]
 
 
 def wire_bytes(wire) -> int:

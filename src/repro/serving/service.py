@@ -28,10 +28,12 @@ import collections
 import typing
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro import localization
 from repro.core.pipeline import VisualSystem
-from repro.core.types import StereoOutput
+from repro.core.types import LocalizationOutput, StereoOutput
 from repro.distributed import compression
 from repro.kernels import ops
 from repro.serving.faults import FaultInjector
@@ -42,9 +44,10 @@ from repro.serving.supervisor import (Supervisor, SupervisorConfig,
 
 class RigReport(typing.NamedTuple):
     """One served (or dropped) rig frame.  ``output`` is the rig's
-    ``StereoOutput`` slice (leading (n_pairs,) axes) for served frames,
-    None for drops; ``status`` is ``"ok"``, ``"degraded"``, or one of
-    the ``"dropped_*"`` reasons."""
+    ``StereoOutput`` slice (leading (n_pairs,) axes) for served frames
+    — a ``LocalizationOutput`` slice (with 3-D points + pose) when the
+    session localizes — None for drops; ``status`` is ``"ok"``,
+    ``"degraded"``, or one of the ``"dropped_*"`` reasons."""
 
     rig_id: typing.Any
     t: float                    # service-step time the frame was served
@@ -72,6 +75,11 @@ class FleetService:
         self.supervisor = Supervisor(sup_cfg, restart_cb)
         self.events: list[SupervisorEvent] = []
         self.counters = collections.Counter()
+        # Per-rig cross-frame localization memory (LocalizationState),
+        # keyed by rig_id.  The queue re-buckets rigs freely between
+        # batches, so the service — not the session — owns this state
+        # and hands each batch an explicitly assembled ``prev``.
+        self._loc_state: dict = {}
 
     # -- intake ------------------------------------------------------------
 
@@ -130,21 +138,68 @@ class FleetService:
 
     # -- serving -----------------------------------------------------------
 
+    def _assemble_prev(self, batch):
+        """Stack each batch row's previous-frame ``LocalizationState``
+        (all-invalid ``zero_state`` for first-seen rigs and padding
+        rows, so they localize to identity + ``valid=False`` through
+        the same jitted graph).
+
+        A backlogged rig can appear TWICE in one batch (its frames are
+        oldest-first).  The batch is one jit call, so the second frame
+        cannot chain on the first's not-yet-computed state; giving it
+        the same stored state would silently solve a double-length
+        step.  Instead only the FIRST occurrence chains; later ones get
+        ``zero_state`` and honestly report identity + ``valid=False``
+        (the stored state still advances to the newest frame, so the
+        next batch chains from there)."""
+        zero = localization.zero_state(self.vs.rig.n_pairs,
+                                       self.vs.pipe.orb.max_features)
+        n_slots = batch.images.shape[0]
+        rows, seen = [], set()
+        for b in range(n_slots):
+            if b >= len(batch.rig_ids):
+                rows.append(zero)                      # padding row
+                continue
+            rid = batch.rig_ids[b]
+            rows.append(zero if rid in seen
+                        else self._loc_state.get(rid, zero))
+            seen.add(rid)
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+
     def step(self, now: float, force: bool = False) -> list[RigReport]:
         """One service tick: advance the watchdog, then serve at most
         one bucketed fleet batch (3 kernel launches regardless of how
-        many rigs are real, padded, or degraded)."""
-        self.events.extend(self.supervisor.poll(now))
+        many rigs are real, padded, or degraded — plus 1 localization
+        launch when the session localizes)."""
+        new_events = self.supervisor.poll(now)
+        self.events.extend(new_events)
+        # A restarted rig's frame stream has a gap: its stashed state
+        # is stale, and a pose solved against it would be finite but
+        # meaningless.  Drop it — the next served frame then reports
+        # the honest identity + valid=False.
+        for ev in new_events:
+            if ev.kind in ("restart", "quarantine"):
+                self._loc_state.pop(ev.rig_id, None)
         batch = self.queue.next_batch(now, force=force)
         if batch is None:
             return []
-        out = self.vs.process_fleet(batch.images,
-                                    camera_mask=batch.camera_mask)
+        localize = self.vs.pipe.localize
+        if localize:
+            out = self.vs.process_fleet(batch.images,
+                                        camera_mask=batch.camera_mask,
+                                        prev=self._assemble_prev(batch))
+            state = localization.state_from(out)
+        else:
+            out = self.vs.process_fleet(batch.images,
+                                        camera_mask=batch.camera_mask)
         self.counters["batches"] += 1
         self.counters["padded_rows"] += len(batch.rig_mask) - batch.n_real
         reports = []
         for b, rig_id in enumerate(batch.rig_ids):
             mask = batch.camera_mask[b]
+            if localize:
+                self._loc_state[rig_id] = jax.tree.map(
+                    lambda x: x[b], state)
             reports.append(RigReport(
                 rig_id=rig_id, t=float(now),
                 t_arrival=batch.t_arrivals[b],
@@ -168,14 +223,22 @@ class FleetService:
         }
 
 
-def wire_encode(output: StereoOutput) -> dict:
-    """Serialize one served ``StereoOutput`` into the fleet uplink wire
-    format (``repro.distributed.compression``): descriptors as lossless
-    uint8 bytes, match index/distance as uint16 with a no-match
-    sentinel, float fields (xy, score, theta, disparity, depth) as
-    int8+scale with bounded error, validity as packed bits — ~4x fewer
-    payload bytes than shipping the f32 pytree.  Use
+def wire_encode(output) -> dict:
+    """Serialize one served output into the fleet uplink wire format
+    (``repro.distributed.compression``): descriptors as lossless uint8
+    bytes, match index/distance as uint16 with a no-match sentinel,
+    float fields (xy, score, theta, disparity, depth) as int8+scale
+    with bounded error, validity as packed bits — ~4x fewer payload
+    bytes than shipping the f32 pytree.  A ``LocalizationOutput``
+    additionally ships its rig-frame 3-D points and pose LOSSLESSLY
+    (see ``compression.encode_pose``/``encode_points`` — the pose is
+    the accuracy-gated product, so it rides uncompressed).  Use
     ``compression.wire_bytes`` on the result for the payload size."""
+    if isinstance(output, LocalizationOutput):
+        wire = wire_encode(output.stereo)
+        wire["points"] = compression.encode_points(output.points)
+        wire["pose"] = compression.encode_pose(output.pose)
+        return wire
     return dict(
         features_l=compression.encode_features(output.features_l),
         features_r=compression.encode_features(output.features_r),
@@ -183,17 +246,26 @@ def wire_encode(output: StereoOutput) -> dict:
         depth=compression.encode_depth(output.depth))
 
 
-def wire_decode(wire: dict) -> StereoOutput:
+def wire_decode(wire: dict):
     """Inverse of ``wire_encode``.  Descriptors, match indices/
-    distances (the kernels' BIG sentinel restored) and validity masks
-    round-trip bit-exact; quantized float fields come back within the
-    int8+scale error bound (pinned in tests/test_precision.py)."""
-    return StereoOutput(
+    distances (the kernels' BIG sentinel restored), validity masks,
+    and — when present — 3-D points and pose round-trip bit-exact;
+    quantized float fields come back within the int8+scale error bound
+    (pinned in tests/test_precision.py).  Returns a
+    ``LocalizationOutput`` when the wire dict carries a pose, else a
+    ``StereoOutput``."""
+    stereo = StereoOutput(
         features_l=compression.decode_features(wire["features_l"]),
         features_r=compression.decode_features(wire["features_r"]),
         matches=compression.decode_matches(
             wire["matches"], no_match_distance=ops.NO_MATCH_DIST),
         depth=compression.decode_depth(wire["depth"]))
+    if "pose" in wire:
+        return LocalizationOutput(
+            stereo=stereo,
+            points=compression.decode_points(wire["points"]),
+            pose=compression.decode_pose(wire["pose"]))
+    return stereo
 
 
 class EpisodeResult(typing.NamedTuple):

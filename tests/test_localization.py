@@ -1,0 +1,577 @@
+"""Localization backend: triangulation, robust pose solve, degeneracy,
+session wiring, wire format, and the MIN_DISPARITY boundary pins.
+
+The contract under test is "degeneracy is data": every pathological
+input — too few correspondences, collapsed clouds, zero baselines, dead
+cameras, non-finite garbage — must yield EXACTLY identity +
+``valid=False``, never NaN, through the same jitted graph as a healthy
+frame.  Accuracy itself is gated in benchmarks (``accuracy_gate/*``);
+here we pin exactness, equivalence across entry points, and graceful
+degradation monotonicity."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import localization
+from repro.core import (ORBConfig, PipelineConfig, RigConfig,
+                        VisualSystem)
+from repro.core import matching
+from repro.core.types import (CameraIntrinsics, FeatureSet,
+                              LocalizationOutput, LocalizationState,
+                              MatchSet)
+from repro.data import scenes
+from repro.distributed import compression
+from repro.localization import geometry, metrics, pose
+from repro.serving import wire_decode, wire_encode
+
+H, W = 96, 128
+T, KMAX = 4, 96
+
+
+@functools.lru_cache(maxsize=1)
+def _scene():
+    cfg = scenes.SceneConfig(height=H, width=W, baseline=0.5, seed=1)
+    out = scenes.render_sequence(cfg, n_frames=T,
+                                 step_t=(0.25, 0.0, 0.1),
+                                 yaw_per_frame=0.0)
+    return cfg, np.asarray(out.frames), out.poses, out.intrinsics
+
+
+def _session(intr, localize=True, impl="ref", **pipe_kw):
+    ocfg = ORBConfig(height=H, width=W, max_features=KMAX,
+                     fast_threshold=15)
+    return VisualSystem(
+        RigConfig.quad(intr),
+        PipelineConfig(orb=ocfg, impl=impl, localize=localize, **pipe_kw))
+
+
+def _pose_np(p):
+    return (np.asarray(p.rotation), np.asarray(p.translation),
+            np.asarray(p.inliers), np.asarray(p.valid))
+
+
+def _assert_finite_pose(p):
+    for leaf in _pose_np(p)[:2]:
+        assert np.isfinite(leaf).all(), leaf
+
+
+# -- S1: the MIN_DISPARITY boundary ------------------------------------------
+
+def test_min_disparity_boundary_unit():
+    """At exactly MIN_DISPARITY the gate is strict (invalid, depth 0);
+    just above, the depth divisor is the RAW disparity (the clamp is
+    bit-exact identity for every valid lane)."""
+    cfg = ORBConfig(height=H, width=W, max_features=4)
+    intr = CameraIntrinsics(fx=100.0, baseline=0.5)
+    fxb = 100.0 * 0.5
+    eps = 0.25
+    d = np.array([matching.MIN_DISPARITY,          # exactly at -> invalid
+                  matching.MIN_DISPARITY + eps,    # just above -> valid
+                  0.0,                             # no parallax -> invalid
+                  -2.0], np.float32)               # crossed     -> invalid
+    x_l = jnp.asarray([40.0, 40.0, 40.0, 40.0], jnp.float32)
+    rxy = jnp.stack([x_l - jnp.asarray(d), jnp.full(4, 7.0)], axis=-1)
+    m = MatchSet(right_index=jnp.zeros(4, jnp.int32),
+                 distance=jnp.zeros(4, jnp.int32),
+                 valid=jnp.ones(4, bool))
+    ds = matching._depth_set(x_l, rxy, jnp.zeros(4, jnp.float32), m,
+                             cfg, intr)
+    np.testing.assert_array_equal(np.asarray(ds.valid),
+                                  [False, True, False, False])
+    assert float(ds.depth[0]) == 0.0 and float(ds.disparity[0]) == 0.0
+    # raw-divisor pin: bit-exact against the unclamped division
+    want = np.float32(fxb) / np.float32(matching.MIN_DISPARITY + eps)
+    assert float(ds.depth[1]) == float(want)
+    assert np.asarray(ds.depth)[2:].tolist() == [0.0, 0.0]
+    assert np.isfinite(np.asarray(ds.depth)).all()
+
+
+#: Lane disparities the boundary pair bakes into its images/features:
+#: 0.0 and 0.5 must come out INVALID (strict gate), the integers VALID.
+_BOUNDARY_DISPS = (0.0, 0.5, 1.0, 2.0, 3.0, 4.0)
+
+
+def _boundary_pair():
+    """Deterministic stereo pair whose lanes straddle MIN_DISPARITY.
+
+    One lane per 16-row band (so the 11x11 SAD windows never mix
+    bands); each lane's left/right descriptors are identical (Hamming
+    0) and its band of the RIGHT image is the left ramp shifted by the
+    lane's integer disparity, so the SAD argmin is uniquely offset 0
+    and the decoded disparity is EXACTLY ``x_l - x_r``.  The half-pixel
+    lane keeps shift 0: whichever integer the SAD snaps to, its
+    disparity lands at +-0.5 — at/below the strict gate either way."""
+    disp = np.asarray(_BOUNDARY_DISPS, np.float32)
+    k = len(disp)
+    rng = np.random.RandomState(7)
+    desc = jnp.asarray(rng.randint(0, 2**32, (k, 8), dtype=np.uint64)
+                       .astype(np.uint32))
+    ys = 12.0 + 16.0 * np.arange(k, dtype=np.float32)
+    x_r = np.full(k, 40.0, np.float32)
+    feat = dict(level=jnp.zeros(k, jnp.int32),
+                score=jnp.ones(k, jnp.float32),
+                theta=jnp.zeros(k, jnp.float32), desc=desc,
+                valid=jnp.ones(k, bool))
+    fl = FeatureSet(xy=jnp.asarray(np.stack([x_r + disp, ys], 1)), **feat)
+    fr = FeatureSet(xy=jnp.asarray(np.stack([x_r, ys], 1)), **feat)
+    col = np.arange(W, dtype=np.float32) * 2.0
+    img_l = np.tile(col, (H, 1))
+    img_r = np.empty_like(img_l)
+    shifts = np.zeros(H, np.float32)
+    for i, d in enumerate(disp):
+        shifts[int(ys[i]) - 8:int(ys[i]) + 8] = np.floor(d)
+    for y in range(H):
+        img_r[y] = col + 2.0 * shifts[y]
+    return fl, fr, jnp.asarray(img_l)[None], jnp.asarray(img_r)[None], disp
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_min_disparity_boundary_through_fused_matcher(impl):
+    """End-to-end through ``match_pair_fused`` on BOTH impls (ref and
+    pallas-interpret): the 0 px and 0.5 px lanes are invalid with depth
+    exactly 0; every valid lane's depth divides by the RAW disparity
+    (bit-exact against the unclamped f32 division)."""
+    fl, fr, img_l, img_r, disp = _boundary_pair()
+    cfg = ORBConfig(height=H, width=W, max_features=8, max_disparity=16)
+    intr = CameraIntrinsics(fx=120.0, baseline=0.4)
+    fl = jax.tree.map(lambda x: x[None], fl)
+    fr = jax.tree.map(lambda x: x[None], fr)
+    matches, depth = matching.match_pair_fused(
+        img_l, img_r, fl, fr, cfg, intr, impl=impl)
+    assert np.asarray(matches.valid)[0].all()   # every lane matched...
+    v = np.asarray(depth.valid)[0]
+    got_disp = np.asarray(depth.disparity)[0]
+    got_depth = np.asarray(depth.depth)[0]
+    # ...but sub-boundary disparity kills the depth observation
+    np.testing.assert_array_equal(v, disp > matching.MIN_DISPARITY)
+    np.testing.assert_array_equal(got_disp[:2], [0.0, 0.0])
+    np.testing.assert_array_equal(got_depth[:2], [0.0, 0.0])
+    np.testing.assert_array_equal(got_disp[2:], disp[2:])
+    want = np.float32(120.0 * 0.4) / disp[2:].astype(np.float32)
+    np.testing.assert_array_equal(got_depth[2:], want)
+    assert np.isfinite(got_depth).all()
+
+
+def test_min_disparity_fused_ref_equals_pallas():
+    fl, fr, img_l, img_r, _ = _boundary_pair()
+    cfg = ORBConfig(height=H, width=W, max_features=8, max_disparity=16)
+    intr = CameraIntrinsics(fx=120.0, baseline=0.4)
+    fl = jax.tree.map(lambda x: x[None], fl)
+    fr = jax.tree.map(lambda x: x[None], fr)
+    a = matching.match_pair_fused(img_l, img_r, fl, fr, cfg, intr,
+                                  impl="ref")
+    b = matching.match_pair_fused(img_l, img_r, fl, fr, cfg, intr,
+                                  impl="pallas")
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# -- triangulation -----------------------------------------------------------
+
+def test_backproject_exact():
+    intr = CameraIntrinsics(fx=100.0, fy=50.0, cx=10.0, cy=20.0)
+    xy = jnp.asarray([[110.0, 70.0]])
+    pts = geometry.backproject(xy, jnp.asarray([4.0]), intr.fx, intr.fy,
+                               intr.cx, intr.cy)
+    np.testing.assert_allclose(np.asarray(pts), [[4.0, 4.0, 4.0]],
+                               atol=1e-6)
+    # invalid lane contract: depth 0 -> exactly the origin
+    zero = geometry.backproject(xy, jnp.asarray([0.0]), intr.fx, intr.fy,
+                                intr.cx, intr.cy)
+    np.testing.assert_array_equal(np.asarray(zero), [[0.0, 0.0, 0.0]])
+
+
+def test_rig_points_fuses_back_pair():
+    """The quad rig's back pair looks along -z: a point at camera-frame
+    (x, y, z) lands at rig-frame (-x, y, -z); the front pair is
+    identity."""
+    rig = RigConfig.quad(CameraIntrinsics(fx=100.0, fy=100.0, cx=0.0,
+                                          cy=0.0))
+    xy = jnp.asarray([[[100.0, 50.0]], [[100.0, 50.0]]])   # (P=2, K=1, 2)
+    z = jnp.asarray([[2.0], [2.0]])
+    pts = np.asarray(geometry.rig_points(xy, z, rig))
+    np.testing.assert_allclose(pts[0, 0], [2.0, 1.0, 2.0], atol=1e-5)
+    np.testing.assert_allclose(pts[1, 0], [-2.0, 1.0, -2.0], atol=1e-5)
+
+
+def test_rig_points_rejects_wrong_pair_axis():
+    rig = RigConfig.quad()
+    with pytest.raises(ValueError, match="pair axis"):
+        geometry.rig_points(jnp.zeros((3, 4, 2)), jnp.zeros((3, 4)), rig)
+
+
+# -- the robust solve --------------------------------------------------------
+
+def _cloud(rng, n=64):
+    return rng.uniform(-4.0, 4.0, (n, 3)).astype(np.float32)
+
+
+def _rot_y(a):
+    c, s = np.cos(a), np.sin(a)
+    return np.asarray([[c, 0, s], [0, 1, 0], [-s, 0, c]], np.float32)
+
+
+def test_solve_pose_recovers_known_motion_with_outliers():
+    rng = np.random.RandomState(0)
+    pts = _cloud(rng)
+    r = _rot_y(0.05)
+    t = np.asarray([0.3, -0.1, 0.2], np.float32)
+    curr = pts @ r.T + t
+    # 25% metre-scale outliers that the top-K reweighting must shed
+    out_idx = rng.choice(len(pts), 16, replace=False)
+    curr[out_idx] += rng.uniform(2.0, 5.0, (16, 3)).astype(np.float32)
+    est = pose.solve_pose(jnp.asarray(pts), jnp.asarray(curr),
+                          jnp.ones(len(pts)))
+    rr, tt, inl, valid = _pose_np(est)
+    assert bool(valid)
+    # the top-K loop trims support toward keep_frac^iters of the pool;
+    # what matters is that the kept support excludes the outliers and
+    # the pose is right
+    assert int(inl) >= pose.MIN_CORRESPONDENCES
+    np.testing.assert_allclose(rr, r, atol=1e-3)
+    np.testing.assert_allclose(tt, t, atol=1e-2)
+
+
+def test_solve_pose_degenerate_inputs_never_nan():
+    rng = np.random.RandomState(1)
+    pts = jnp.asarray(_cloud(rng, 16))
+    eye = np.eye(3, dtype=np.float32)
+    cases = {
+        "all_invalid": jnp.zeros(16),
+        "two_points": jnp.asarray([1.0, 1.0] + [0.0] * 14),
+    }
+    for name, w in cases.items():
+        est = pose.solve_pose(pts, pts, w)
+        rr, tt, _, valid = _pose_np(est)
+        assert not bool(valid), name
+        np.testing.assert_array_equal(rr, eye, err_msg=name)
+        np.testing.assert_array_equal(tt, np.zeros(3), err_msg=name)
+    # collapsed cloud: every point at the origin (zero-baseline depth)
+    zero = jnp.zeros((16, 3))
+    est = pose.solve_pose(zero, zero, jnp.ones(16))
+    rr, tt, _, valid = _pose_np(est)
+    assert not bool(valid)
+    np.testing.assert_array_equal(rr, eye)
+    # non-finite correspondences are scrubbed, not propagated
+    bad = pts.at[:8].set(jnp.nan)
+    est = pose.solve_pose(bad, bad, jnp.ones(16))
+    _assert_finite_pose(est)
+    est = pose.solve_pose(jnp.full((16, 3), jnp.nan),
+                          jnp.full((16, 3), jnp.nan), jnp.ones(16))
+    rr, tt, _, valid = _pose_np(est)
+    assert not bool(valid)
+    assert np.isfinite(rr).all() and np.isfinite(tt).all()
+
+
+def test_solve_pose_batched_matches_loop():
+    rng = np.random.RandomState(2)
+    pts = np.stack([_cloud(rng, 24) for _ in range(3)])
+    curr = pts + np.asarray([0.1, 0.0, -0.2], np.float32)
+    w = np.ones((3, 24), np.float32)
+    batched = pose.solve_pose_batched(jnp.asarray(pts),
+                                      jnp.asarray(curr), jnp.asarray(w))
+    for b in range(3):
+        single = pose.solve_pose(jnp.asarray(pts[b]),
+                                 jnp.asarray(curr[b]), jnp.asarray(w[b]))
+        for la, lb in zip(jax.tree.leaves(single),
+                          jax.tree.leaves(jax.tree.map(lambda x: x[b],
+                                                       batched))):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# -- session wiring ----------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _run_localized():
+    cfg, frames, poses, intr = _scene()
+    vs = _session(intr)
+    return vs.run(jnp.asarray(frames)), poses
+
+
+def test_run_returns_localization_output():
+    out, poses = _run_localized()
+    assert isinstance(out, LocalizationOutput)
+    rig = RigConfig.quad()
+    assert out.points.shape == (T, rig.n_pairs, KMAX, 3)
+    assert out.pose.rotation.shape == (T, 3, 3)
+    # delegation keeps the stereo API readable on the wrapped output
+    assert out.matches.valid.shape == (T, rig.n_pairs, KMAX)
+    # frame 0 has no predecessor: identity + invalid, by construction
+    rr, tt, inl, valid = _pose_np(out.pose)
+    assert not valid[0] and valid[1:].all()
+    np.testing.assert_array_equal(rr[0], np.eye(3, dtype=np.float32))
+    assert np.isfinite(rr).all() and np.isfinite(tt).all()
+
+
+def test_run_accuracy_against_ground_truth():
+    """The sequence solve tracks the constant-twist ground truth: ATE
+    well under the travelled distance and every per-step estimate close
+    to the true relative motion (thresholds are ~2x measured)."""
+    out, poses = _run_localized()
+    m = metrics.trajectory_metrics(out.pose.rotation,
+                                   out.pose.translation, poses)
+    assert m["travel_m"] > 0.5
+    assert m["ate_rmse_m"] <= 0.4, m
+    assert m["rpe_trans_rmse_m"] <= 0.25, m
+    assert m["rpe_rot_mean_deg"] <= 1.0, m
+
+
+def test_process_frame_loop_matches_run():
+    """The stateful per-frame loop and the one-shot sequence solve are
+    the same computation (the T-1 transitions just fold into one
+    launch)."""
+    cfg, frames, _, intr = _scene()
+    run_out, _ = _run_localized()
+    vs = _session(intr)
+    vs.reset_localization()
+    rots, trs, valids = [], [], []
+    for t in range(T):
+        out = vs.process_frame(jnp.asarray(frames[t]))
+        assert isinstance(out, LocalizationOutput)
+        rr, tt, _, valid = _pose_np(out.pose)
+        rots.append(rr), trs.append(tt), valids.append(bool(valid))
+    np.testing.assert_array_equal(valids, np.asarray(run_out.pose.valid))
+    np.testing.assert_allclose(np.stack(rots),
+                               np.asarray(run_out.pose.rotation),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.stack(trs),
+                               np.asarray(run_out.pose.translation),
+                               atol=1e-4)
+
+
+def test_fleet_matches_per_frame():
+    """Two identical rigs in a fleet localize exactly like the single
+    frame path (the rig axis folds into the matcher grid + vmap)."""
+    cfg, frames, _, intr = _scene()
+    vs = _session(intr)
+    vs.reset_localization()
+    singles = [vs.process_frame(jnp.asarray(frames[t]))
+               for t in range(2)]
+    vf = _session(intr)
+    fleet = jnp.asarray(np.stack([frames[:2], frames[:2]], axis=1))
+    prev = None
+    for t in range(2):
+        fout = vf.process_fleet(fleet[t])
+        assert isinstance(fout, LocalizationOutput)
+    for b in range(2):
+        np.testing.assert_allclose(
+            np.asarray(fout.pose.translation)[b],
+            np.asarray(singles[1].pose.translation), atol=1e-4)
+        assert bool(np.asarray(fout.pose.valid)[b]) \
+            == bool(singles[1].pose.valid)
+
+
+def test_explicit_prev_overrides_session_state():
+    cfg, frames, _, intr = _scene()
+    vs = _session(intr)
+    vs.reset_localization()
+    out0 = vs.process_frame(jnp.asarray(frames[0]))
+    state0 = localization.state_from(out0)
+    out1 = vs.process_frame(jnp.asarray(frames[1]))
+    assert bool(out1.pose.valid)
+    # replaying frame 1 against an explicit zero state -> invalid
+    vs.reset_localization()
+    zero = localization.zero_state(vs.rig.n_pairs, KMAX)
+    out1z = vs.process_frame(jnp.asarray(frames[1]), prev=zero)
+    assert not bool(out1z.pose.valid)
+    # and against the explicit frame-0 state -> the same pose again
+    out1e = vs.process_frame(jnp.asarray(frames[1]), prev=state0)
+    np.testing.assert_allclose(np.asarray(out1e.pose.translation),
+                               np.asarray(out1.pose.translation),
+                               atol=1e-5)
+
+
+def test_prev_validation_errors():
+    cfg, frames, _, intr = _scene()
+    vs = _session(intr)
+    with pytest.raises(TypeError, match="LocalizationState"):
+        vs.process_frame(jnp.asarray(frames[0]), prev=np.zeros(3))
+    bad = localization.zero_state(vs.rig.n_pairs, KMAX + 1)
+    with pytest.raises(ValueError, match="prev.points"):
+        vs.process_frame(jnp.asarray(frames[0]), prev=bad)
+
+
+def test_zero_baseline_rig_invalid_not_nan():
+    """A zero-baseline rig has no depth: every point collapses to the
+    origin and the pose must come out identity + invalid — finite,
+    through the same graph."""
+    cfg, frames, _, intr = _scene()
+    import dataclasses
+    zb = dataclasses.replace(intr, baseline=0.0)
+    vs = _session(zb)
+    for t in range(2):
+        out = vs.process_frame(jnp.asarray(frames[t]))
+        _assert_finite_pose(out.pose)
+        assert not bool(out.pose.valid)
+        np.testing.assert_array_equal(np.asarray(out.points), 0.0)
+
+
+def test_masked_fleet_pose_graceful():
+    """Dead cameras degrade accuracy, never NaN: a rig with a dead back
+    pair still localizes from the front pair; an all-dead rig is
+    identity + invalid; healthy rigs are unaffected."""
+    cfg, frames, _, intr = _scene()
+    vs = _session(intr)
+    fleet = jnp.asarray(np.stack([frames, frames, frames], axis=1))
+    mask = np.ones((3, 4), bool)
+    mask[1, 2:] = False          # rig 1: back pair dead
+    mask[2, :] = False           # rig 2: fully dead
+    prev_pose = None
+    for t in range(2):
+        out = vs.process_fleet(fleet[t], camera_mask=jnp.asarray(mask))
+        _assert_finite_pose(out.pose)
+    valid = np.asarray(out.pose.valid)
+    assert valid[0] and valid[1]
+    assert not valid[2]
+    np.testing.assert_array_equal(
+        np.asarray(out.pose.rotation)[2], np.eye(3, dtype=np.float32))
+    # healthy rig matches the unmasked single-frame path
+    vs2 = _session(intr)
+    vs2.reset_localization()
+    for t in range(2):
+        single = vs2.process_frame(jnp.asarray(frames[t]))
+    np.testing.assert_allclose(np.asarray(out.pose.translation)[0],
+                               np.asarray(single.pose.translation),
+                               atol=1e-4)
+
+
+def test_localized_launch_budget():
+    """Frame budget with localization: 3 frontend + 1 backend = 4
+    launches, frame and fleet, masked or not; a non-localized session
+    stays at 3; a localized RUN costs 3 per scan step + 1 total."""
+    cfg, frames, _, intr = _scene()
+    vs = _session(intr)
+    im = jnp.asarray(frames[0])
+    fleet = jnp.asarray(np.stack([frames[0]] * 2))
+    assert vs.traced_launches("process_frame", im) == 4
+    assert vs.traced_launches("process_frame", im,
+                              jnp.ones(4, bool)) == 4
+    assert vs.traced_launches("process_fleet", fleet) == 4
+    off = _session(intr, localize=False)
+    assert off.traced_launches("process_frame", im) == 3
+    # a localized RUN adds exactly ONE launch to the traced graph for
+    # ALL T-1 transitions (the scan body's 3 launches appear once)
+    seq = jnp.asarray(frames)
+    assert vs.traced_launches("run", seq) \
+        == off.traced_launches("run", seq) + 1 == 4
+
+
+# -- wire format (S3) --------------------------------------------------------
+
+def test_wire_roundtrip_localization_output():
+    out, _ = _run_localized()
+    one = jax.tree.map(lambda x: x[1], out)
+    wire = wire_encode(one)
+    back = wire_decode(wire)
+    assert isinstance(back, LocalizationOutput)
+    np.testing.assert_array_equal(np.asarray(back.points),
+                                  np.asarray(one.points))
+    for la, lb in zip(jax.tree.leaves(back.pose),
+                      jax.tree.leaves(one.pose)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # a stereo-only wire dict still decodes to a StereoOutput
+    stereo_back = wire_decode(wire_encode(one.stereo))
+    assert not isinstance(stereo_back, LocalizationOutput)
+    # and the localized payload accounts for the extra fields
+    assert compression.wire_bytes(wire) \
+        > compression.wire_bytes(wire_encode(one.stereo))
+
+
+def test_wire_pose_batched_roundtrip():
+    out, _ = _run_localized()
+    wire = compression.encode_pose(out.pose)
+    back = compression.decode_pose(wire)
+    for la, lb in zip(jax.tree.leaves(back), jax.tree.leaves(out.pose)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_wire_encode_matches_rejects_sentinel_collision():
+    k = compression.WIRE_NO_MATCH
+    m = MatchSet(right_index=jnp.zeros((1, k), jnp.int32),
+                 distance=jnp.zeros((1, k), jnp.int32),
+                 valid=jnp.zeros((1, k), bool))
+    with pytest.raises(ValueError, match="right_index"):
+        compression.encode_matches(m)
+    # one below the sentinel is the last legal budget
+    m_ok = jax.tree.map(lambda x: x[:, :-1], m)
+    compression.encode_matches(m_ok)
+
+
+# -- graceful-degradation sweeps (S4) ----------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                        # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20)
+    @given(seed=st.integers(0, 2**16), n_rigs=st.integers(1, 4))
+    def test_prop_solver_rig_count_invariant(seed, n_rigs):
+        """vmapping the solve over any rig count reproduces the
+        single-rig result bit for bit on every row."""
+        rng = np.random.RandomState(seed)
+        pts = _cloud(rng, 32)
+        curr = pts @ _rot_y(0.03).T + np.asarray([0.2, 0.0, -0.1],
+                                                 np.float32)
+        w = (rng.uniform(size=32) > 0.2).astype(np.float32)
+        single = pose.solve_pose(jnp.asarray(pts), jnp.asarray(curr),
+                                 jnp.asarray(w))
+        tile = lambda x: jnp.asarray(np.stack([x] * n_rigs))
+        batched = pose.solve_pose_batched(tile(pts), tile(curr), tile(w))
+        for b in range(n_rigs):
+            for la, lb in zip(jax.tree.leaves(single),
+                              jax.tree.leaves(jax.tree.map(
+                                  lambda x: x[b], batched))):
+                np.testing.assert_array_equal(np.asarray(la),
+                                              np.asarray(lb))
+
+    @settings(max_examples=15)
+    @given(seed=st.integers(0, 2**16))
+    def test_prop_noise_monotone_graceful(seed):
+        """Scaling the SAME noise draw up never improves the pose: the
+        translation error is monotone in the noise level, and even at
+        metre-scale noise the solve stays finite (identity + invalid at
+        worst) — graceful degradation, not collapse."""
+        rng = np.random.RandomState(seed)
+        pts = _cloud(rng, 48)
+        t_true = np.asarray([0.3, -0.2, 0.1], np.float32)
+        curr0 = pts + t_true
+        unit = rng.normal(size=(48, 3)).astype(np.float32)
+        errs = []
+        for sigma in (0.0, 0.05, 0.5):
+            est = pose.solve_pose(jnp.asarray(pts),
+                                  jnp.asarray(curr0 + sigma * unit),
+                                  jnp.ones(48))
+            _assert_finite_pose(est)
+            errs.append(float(np.linalg.norm(
+                np.asarray(est.translation) - t_true)))
+        assert errs[0] <= 1e-4
+        assert errs[0] <= errs[1] + 1e-6 <= errs[2] + 2e-6, errs
+
+    @settings(max_examples=10)
+    @given(n_dead=st.integers(0, 4))
+    def test_prop_dead_cameras_monotone_valid(n_dead):
+        """Killing cameras only ever shrinks the usable-correspondence
+        pool: inlier count is non-increasing in the number of dead
+        cameras, validity flips off (never NaN) once both pairs die."""
+        cfg, frames, _, intr = _scene()
+        vs = _session(intr)
+        vs.reset_localization()
+        mask = np.ones(4, bool)
+        mask[:n_dead] = False
+        for t in range(2):
+            out = vs.process_frame(jnp.asarray(frames[t]),
+                                   camera_mask=jnp.asarray(mask))
+            _assert_finite_pose(out.pose)
+        if n_dead == 0:
+            assert bool(out.pose.valid)
+        if n_dead >= 3:        # both pairs broken -> no stereo at all
+            assert not bool(out.pose.valid)
