@@ -37,12 +37,22 @@ import sys
 # precision='uint8' integer datapath (still 3 for frame AND fleet
 # frame: dtype switches the kernels' element type, never the launch
 # graph), loc_* = a localized frame / fleet frame (<= 4: the 3-launch
-# frontend plus ONE fused temporal-match backend launch).
+# frontend plus ONE fused temporal-match backend launch),
+# restored_fleet_frame = a fleet frame dispatched by a service rebuilt
+# from a crash-consistent snapshot (still 3: restore repopulates state,
+# never the launch graph).
 REQUIRED_GATES = ("quad_frame_launches", "fm_frame_launches",
                   "fleet_frame_launches",
                   "degraded_fleet_frame_launches",
                   "u8_frame_launches", "u8_fleet_frame_launches",
-                  "loc_frame_launches", "loc_fleet_frame_launches")
+                  "loc_frame_launches", "loc_fleet_frame_launches",
+                  "restored_fleet_frame_launches")
+
+# Failover rows that MUST be present (presence, not thresholds —
+# recovery wall clock is host-dependent): the kill-and-recover and
+# host_down episodes in benchmarks.run must keep reporting.
+REQUIRED_FAILOVER = ("recovery_ms", "frames_dropped_host_down",
+                     "rigs_redistributed")
 
 # Accuracy gates that MUST be present: trajectory error of the
 # localization backend vs ground truth, for BOTH precisions.  Each name
@@ -113,6 +123,16 @@ def check(path: str) -> int:
               f"{actual_row['note']})")
         if not ok:
             status = 1
+
+    for name in REQUIRED_FAILOVER:
+        row = rows.get(("failover", name))
+        if row is None:
+            print(f"FAIL: required row failover/{name} is missing from "
+                  f"{path} — did benchmarks.run drop table_failover?")
+            status = 1
+        else:
+            print(f"ok: failover/{name} = {row['value']} {row['unit']} "
+                  f"({row['note']})")
     return status
 
 

@@ -57,6 +57,15 @@
                                   launch_gate/loc_* rows (localized
                                   frame <= 3 frontend + 1 backend
                                   launches)
+  table_failover         PR 9     multi-host failover: host_down
+                                  redistribution + guarded-dispatch
+                                  episode (frames dropped, rigs moved,
+                                  retries) and a kill-and-recover
+                                  episode through a crash-consistent
+                                  snapshot (recovery wall clock,
+                                  snapshot bytes); emits the
+                                  launch_gate/restored_fleet_frame_*
+                                  rows CI enforces
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--out PATH]
 Prints CSV rows ``table,name,value,unit,note`` and writes them to a
@@ -908,6 +917,110 @@ def table_localization(quick=False):
          "fleet == single-rig localized budget")
 
 
+def table_failover(quick=False):
+    """Multi-host failover (PR 9, `repro.serving.failover` +
+    `repro.serving.snapshot`): two measured episodes on the SAME
+    `run_episode` driver the fault-injection tests use.
+
+    Episode A — host_down + faulted dispatch: one of two host fault
+    domains dies mid-stream and its rigs are redistributed over the
+    survivor while a `dispatch_error` window exercises the guard's
+    seeded retry.  Reports frames dropped (0 is the claim: elastic
+    redistribution keeps every queued frame servable), rigs moved, and
+    dispatch retries.
+
+    Episode B — kill-and-recover: the service object is destroyed after
+    its crash frame and rebuilt cold from the newest crash-consistent
+    snapshot; reports the restore wall clock and the on-disk snapshot
+    footprint.
+
+    Also emits the `launch_gate/restored_fleet_frame_*` rows CI
+    enforces: a fleet frame dispatched by a RESTORED service traces the
+    same 3 launches — recovery repopulates state, it never widens the
+    launch graph."""
+    import shutil
+    import tempfile
+
+    from repro.serving import (DispatchGuard, DispatchGuardConfig,
+                               FaultInjector, FaultSpec, FleetService,
+                               HostMap, QueueConfig, SupervisorConfig,
+                               run_episode, snapshot)
+    h, w = (48, 64) if quick else (96, 128)
+    n_rigs, t_total = 4, 6
+    dt = 1.0 / 30.0
+    scfg = scenes.SceneConfig(height=h, width=w, n_points=60, seed=11,
+                              baseline=0.3)
+    fleet, intr, _ = scenes.render_fleet_sequence(scfg, t_total, n_rigs)
+    fleet = jax.block_until_ready(fleet)
+    ocfg = ORBConfig(height=h, width=w, n_levels=2, max_features=64,
+                     max_disparity=32)
+    vs = VisualSystem(RigConfig.quad(intr), PipelineConfig(orb=ocfg))
+    res = f"{w}x{h}"
+
+    def service():
+        return FleetService(
+            vs, QueueConfig(bucket_sizes=(1, 2, 4), deadline_s=dt),
+            SupervisorConfig(heartbeat_timeout_s=3 * dt,
+                             backoff_base_s=dt, backoff_max_s=4 * dt),
+            guard=DispatchGuard(DispatchGuardConfig(
+                backoff_base_s=dt, backoff_max_s=4 * dt)),
+            host_map=HostMap(["host0", "host1"]))
+
+    # Episode A: host0 dies at frame 2; one dispatch window faults.
+    inj = FaultInjector([
+        FaultSpec("host_down", rig="host0", start=2),
+        FaultSpec("dispatch_error", start=1, stop=2, magnitude=1),
+    ], seed=0)
+    resa = run_episode(service(), fleet, dt=dt, injector=inj)
+    c = resa.status["counters"]
+    emit("failover", "frames_dropped_host_down",
+         c["frames_in"] - c["frames_out"], "frames",
+         f"{n_rigs} rigs {res}, host0 of 2 lost at frame 2 — elastic "
+         "redistribution keeps queued frames servable")
+    emit("failover", "rigs_redistributed", c["rigs_redistributed"],
+         "rigs", "moved to the surviving domain (pose chains gapped)")
+    emit("failover", "dispatch_retries", c.get("dispatch_retries", 0),
+         "retries", "guarded dispatch recovered the injected error "
+         f"({c.get('dropped_dispatch', 0)} batches dropped)")
+
+    # Episode B: crash after frame 2, rebuild cold, restore newest
+    # verifiable snapshot.
+    ckpt = tempfile.mkdtemp(prefix="repro-failover-bench-")
+    try:
+        resb = run_episode(service(), fleet, dt=dt, snapshot_dir=ckpt,
+                           crash_at=2, restore=service)
+        rec = resb.recovery
+        emit("failover", "recovery_ms",
+             round(rec["recovery_wall_s"] * 1e3, 2), "ms",
+             "cold FleetService rebuild + snapshot verify/restore "
+             f"(restored step {rec['restored_step']})")
+        import os
+        newest = sorted(d for d in os.listdir(ckpt)
+                        if d.startswith("step_")
+                        and not d.endswith(".tmp"))[-1]
+        sdir = os.path.join(ckpt, newest)
+        nbytes = sum(os.path.getsize(os.path.join(sdir, f))
+                     for f in os.listdir(sdir))
+        emit("failover", "snapshot_bytes", nbytes, "bytes",
+             f"one crash-consistent step dir: supervisor ledger + "
+             f"pose states + pending frames, {n_rigs} rigs {res}")
+
+        # Launch gate: restore into a fresh service, then trace a fleet
+        # frame — recovery must not widen the 3-launch schedule.
+        svc2 = service()
+        snapshot.restore(svc2, ckpt)
+        actual = svc2.vs.traced_launches("process_fleet",
+                                         jnp.asarray(fleet[0]))
+        emit("launch_gate", "restored_fleet_frame_launches", actual,
+             "kernels",
+             f"traced fleet frame on a snapshot-restored service, "
+             f"{n_rigs} rigs {res}")
+        emit("launch_gate", "restored_fleet_frame_budget", 3, "kernels",
+             "restore repopulates state, never the launch graph")
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -929,6 +1042,7 @@ def main() -> None:
     table_service(args.quick)
     table_precision(args.quick)
     table_localization(args.quick)
+    table_failover(args.quick)
     print(f"# done in {time.time() - t0:.1f}s ({len(ROWS)} rows)")
     if args.out:
         rows = [{"table": t, "name": n, "value": v, "unit": u, "note": note}

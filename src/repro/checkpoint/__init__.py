@@ -1,7 +1,8 @@
 """Atomic, resharding-aware checkpointing."""
 
-from repro.checkpoint.store import (latest_step, restore, restore_array_tree,
-                                    save, save_async)
+from repro.checkpoint.store import (latest_step, list_steps, load_flat,
+                                    restore, restore_array_tree, save,
+                                    save_async)
 
-__all__ = ["latest_step", "restore", "restore_array_tree", "save",
-           "save_async"]
+__all__ = ["latest_step", "list_steps", "load_flat", "restore",
+           "restore_array_tree", "save", "save_async"]

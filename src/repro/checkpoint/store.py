@@ -4,6 +4,10 @@ Layout: <dir>/step_<N>/  one .npy per flattened tree path + index.json.
 Writes go to a tmp dir and are renamed into place (atomic on POSIX), so
 a crash mid-save never corrupts the latest checkpoint — the restart
 driver (launch/train.py) just resumes from the newest complete step.
+Every data file and the index are fsync'd BEFORE the rename, and the
+parent directory is fsync'd after it: without the former, a power loss
+can leave a fully-renamed step whose file contents never hit the disk
+(rename-before-data), which no amount of tmp-dir discipline catches.
 
 Restore reshards: arrays are device_put against the CURRENT mesh/specs,
 so a checkpoint taken on one mesh restores onto a smaller/larger one
@@ -39,6 +43,23 @@ def _flatten(tree) -> dict:
     return flat
 
 
+def _write_fsync(path: str, writer) -> None:
+    """Write through ``writer(f)`` and fsync before close, so the bytes
+    are durable BEFORE the enclosing tmp dir is renamed into place."""
+    with open(path, "wb") as f:
+        writer(f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
     """Synchronous atomic save.  Returns the final directory."""
     flat = _flatten(tree)
@@ -54,14 +75,18 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
         logical = str(arr.dtype)
         if logical in _VIEW_AS:
             arr = arr.view(_VIEW_AS[logical])
-        np.save(os.path.join(tmp, fname), arr)
+        _write_fsync(os.path.join(tmp, fname),
+                     lambda f, a=arr: np.save(f, a))
         index[key] = {"file": fname, "shape": list(arr.shape),
                       "dtype": logical}
-    with open(os.path.join(tmp, "index.json"), "w") as f:
-        json.dump({"step": step, "leaves": index}, f)
+    _write_fsync(os.path.join(tmp, "index.json"),
+                 lambda f: f.write(json.dumps(
+                     {"step": step, "leaves": index}).encode()))
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_dir(ckpt_dir)
     _gc(ckpt_dir, keep)
     return final
 
@@ -87,13 +112,39 @@ def _gc(ckpt_dir: str, keep: int) -> None:
         shutil.rmtree(os.path.join(ckpt_dir, d))
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def list_steps(ckpt_dir: str) -> list[int]:
+    """Completed (renamed, indexed) step numbers, ascending.  In-flight
+    ``.tmp`` dirs from a crashed save are never listed — a torn write
+    is invisible here, not a corrupt restore candidate."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")
-             and os.path.exists(os.path.join(ckpt_dir, d, "index.json"))]
-    return max(steps) if steps else None
+        return []
+    return sorted(
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(ckpt_dir, d, "index.json")))
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def load_flat(ckpt_dir: str, step: int) -> dict:
+    """Load every leaf of one step keyed by its flattened tree path —
+    no ``like`` tree required (the snapshot layer reconstructs its own
+    structure from an embedded manifest).  Raises on missing/truncated
+    files; callers that need graceful fallback (serving.snapshot) catch
+    and step back to an older snapshot."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "index.json")) as f:
+        index = json.load(f)["leaves"]
+    out = {}
+    for key, meta in index.items():
+        arr = np.load(os.path.join(d, meta["file"]))
+        if meta["dtype"] in _VIEW_AS:
+            arr = arr.view(getattr(ml_dtypes, meta["dtype"]))
+        out[key] = arr
+    return out
 
 
 def restore_array_tree(ckpt_dir: str, step: int, like) -> object:

@@ -5,11 +5,18 @@ device_put against the new mesh's resolved specs.  Combined with the
 divisibility-aware resolver this lets a job restart on half (or double)
 the chips after a pod failure — dims that no longer divide simply drop
 that mesh axis instead of failing.
+
+``remesh_tree`` is the shared idiom: full host arrays placed against
+whatever mesh is CURRENT, not the one that produced them.  Training
+restarts use it through ``reshard_restore``; the serving failover layer
+(``repro.serving.failover``) uses ``surviving_mesh`` + ``remesh_tree``
+to re-place a fleet's rig axis after a host fault domain dies.
 """
 
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from repro import checkpoint
 from repro.distributed.sharding import Rules, use_sharding
@@ -17,10 +24,44 @@ from repro.models.params import param_specs
 from jax.sharding import NamedSharding
 
 
+def remesh_tree(tree, mesh, specs):
+    """device_put a tree of full host arrays against ``mesh`` under
+    per-leaf ``specs`` — the elastic re-mesh idiom: the target mesh need
+    not match (in size or topology) whatever produced the arrays."""
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), tree,
+                        shardings)
+
+
+def surviving_mesh(mesh, domain_index: int, axis: str = "data"):
+    """The mesh after losing one fault domain: drop index
+    ``domain_index`` along ``axis`` and rebuild over the surviving
+    devices.  Accepts ``AbstractMesh`` too (shape-only tests)."""
+    sizes = dict(mesh.shape)
+    if axis not in sizes:
+        raise ValueError(f"surviving_mesh: mesh has no axis {axis!r} "
+                         f"(axes: {tuple(sizes)})")
+    n = int(sizes[axis])
+    if not (0 <= domain_index < n):
+        raise ValueError(f"surviving_mesh: domain {domain_index} out of "
+                         f"range for axis {axis!r} of size {n}")
+    if n < 2:
+        raise ValueError(
+            f"surviving_mesh: axis {axis!r} has a single fault domain — "
+            "losing it is a fleet-wide outage, not a re-mesh")
+    if isinstance(mesh, jax.sharding.AbstractMesh):
+        return jax.sharding.AbstractMesh(
+            tuple((name, n - 1 if name == axis else size)
+                  for name, size in mesh.shape.items()))
+    ax = tuple(mesh.axis_names).index(axis)
+    devices = np.delete(np.asarray(mesh.devices), domain_index, axis=ax)
+    return jax.sharding.Mesh(devices, mesh.axis_names)
+
+
 def reshard_restore(ckpt_dir: str, step: int, like, schema, mesh,
                     rules: Rules):
     """Restore `like`-structured params onto `mesh` under `rules`."""
     with use_sharding(mesh, rules):
         specs = param_specs(schema)
-    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
-    return checkpoint.restore(ckpt_dir, step, like, shardings)
+    host = checkpoint.restore_array_tree(ckpt_dir, step, like)
+    return remesh_tree(host, mesh, specs)

@@ -26,6 +26,36 @@ def make_host_mesh(data: int | None = None, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def host_fault_domains(mesh, axis: str = "data") -> tuple[str, ...]:
+    """Name one host fault domain per index along ``axis``: the unit of
+    failure for multi-host failover is a serving HOST (every chip behind
+    one index of the sharded rig axis dies together), not a chip.
+    ``serving.failover.HostMap`` assigns rigs to these domain ids and
+    redistributes them when one goes down.
+
+    Works for both concrete ``Mesh`` and ``AbstractMesh`` (tests run on
+    one CPU device; the domain NAMES are what the failover layer keys
+    on, not the devices behind them).
+    """
+    sizes = dict(mesh.shape)
+    if axis not in sizes:
+        raise ValueError(
+            f"host_fault_domains: mesh has no axis {axis!r} "
+            f"(axes: {tuple(sizes)})")
+    return tuple(f"host{i}" for i in range(int(sizes[axis])))
+
+
+def domain_devices(mesh, axis: str = "data") -> dict[str, tuple]:
+    """Map each fault domain id from ``host_fault_domains`` to the
+    devices it owns (requires a concrete mesh)."""
+    import numpy as np
+    names = host_fault_domains(mesh, axis)
+    ax = tuple(mesh.axis_names).index(axis)
+    dev = np.moveaxis(np.asarray(mesh.devices), ax, 0)
+    return {name: tuple(dev[i].ravel().tolist())
+            for i, name in enumerate(names)}
+
+
 # TPU v5e hardware constants for the roofline terms (per chip).
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # bytes/s

@@ -17,17 +17,34 @@ is the robustness layer between the two:
                   stalled rigs, corrupted frames, trigger desync,
                   arrival jitter) so every failure mode has a
                   reproducible test.
-  ``service``     ``FleetService``: ties the three to a ``VisualSystem``
-                  — submit/step API, never-crash discipline (faults
+  ``failover``    host-level failure domain: ``HostMap`` placing rigs
+                  on host fault domains with deterministic elastic
+                  redistribution on ``host_down``, and ``DispatchGuard``
+                  converting stuck/throwing dispatches into counted,
+                  deterministically backed-off retries.
+  ``snapshot``    crash-consistent service snapshots (versioned +
+                  checksummed over ``repro.checkpoint``): a fresh
+                  service restored from the newest verifiable snapshot
+                  serves healthy rigs bit-exactly; torn snapshots fall
+                  back a step instead of crashing.
+  ``service``     ``FleetService``: ties them to a ``VisualSystem`` —
+                  submit/step API, never-crash discipline (faults
                   become degradation or quarantine, not exceptions),
-                  plus the ``run_episode`` driver tests and benchmarks
-                  share.
+                  plus the ``run_episode`` driver (with kill-and-recover
+                  support) tests and benchmarks share.
 
 All time is explicit (every entry point takes ``now``): tests and the
 fault harness drive a virtual clock, so restart/backoff behavior is
-bit-reproducible under a fixed seed.
+bit-reproducible under a fixed seed.  The one wall-clock exception is
+the ``DispatchGuard`` timeout — a stuck XLA dispatch does not consult
+a virtual clock.
 """
 
+from repro.serving import snapshot
+from repro.serving.failover import (DispatchEvent, DispatchGuard,
+                                    DispatchGuardConfig, DispatchOutcome,
+                                    HostEvent, HostMap,
+                                    InjectedDispatchError)
 from repro.serving.faults import FaultInjector, FaultSpec, InjectedFrame
 from repro.serving.queue import FleetBatch, FrameQueue, QueueConfig
 from repro.serving.service import (EpisodeResult, FleetService, RigReport,
@@ -36,9 +53,12 @@ from repro.serving.supervisor import (RigHealth, Supervisor, SupervisorConfig,
                                       SupervisorEvent)
 
 __all__ = [
+    "DispatchEvent", "DispatchGuard", "DispatchGuardConfig",
+    "DispatchOutcome", "HostEvent", "HostMap", "InjectedDispatchError",
     "FaultInjector", "FaultSpec", "InjectedFrame",
     "FleetBatch", "FrameQueue", "QueueConfig",
     "EpisodeResult", "FleetService", "RigReport", "run_episode",
     "wire_decode", "wire_encode",
     "RigHealth", "Supervisor", "SupervisorConfig", "SupervisorEvent",
+    "snapshot",
 ]

@@ -21,6 +21,24 @@ Fault kinds (who detects them is part of the contract):
   ``arrival_jitter`` delivery time skews (deterministic per-frame
                      half-normal, scale ``magnitude``) -> exercises
                      queue deadlines/bucketing, not a fault per se.
+
+Host-level faults (PR 9 — the failure domain is the serving host, not
+a rig; all still pure functions of (spec, seed, frame)):
+
+  ``host_down``        ``rig`` names the HOST fault domain; fires once
+                       at ``start`` -> ``FleetService.host_down``
+                       redistributes its rigs over the survivors.
+  ``stuck_dispatch``   the guarded ``step`` compute stalls past the
+                       ``DispatchGuard`` timeout for the first
+                       ``int(magnitude)`` attempts of every dispatch
+                       in the window -> counted stall + retry, never a
+                       wedged loop.
+  ``dispatch_error``   same windowing, but the compute raises ->
+                       counted error + deterministic backoff retry.
+  ``corrupt_snapshot`` the newest service snapshot is torn
+                       (deterministically truncated) before a
+                       kill-and-recover restore -> the restore must
+                       fall back to the previous step, never crash.
 """
 
 from __future__ import annotations
@@ -32,7 +50,15 @@ import zlib
 import numpy as np
 
 _KINDS = ("dead_camera", "corrupt_frame", "stalled_rig", "desync",
-          "arrival_jitter")
+          "arrival_jitter",
+          "host_down", "stuck_dispatch", "dispatch_error",
+          "corrupt_snapshot")
+
+# Kinds that perturb one rig's frames in `apply` (vs the host-level
+# kinds queried by the service/episode driver directly).
+_FRAME_KINDS = ("dead_camera", "corrupt_frame", "stalled_rig", "desync",
+                "arrival_jitter")
+_DISPATCH_KINDS = ("stuck_dispatch", "dispatch_error")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,10 +66,15 @@ class FaultSpec:
     """One fault: ``kind`` applied to ``rig`` for frame indices in
     [``start``, ``stop``) (``stop=None`` = forever).  ``camera`` selects
     the slab for dead_camera/corrupt_frame/desync; ``magnitude`` is the
-    desync offset / jitter scale in seconds."""
+    desync offset / jitter scale in seconds — or, for the dispatch
+    kinds, the number of consecutive failing attempts per dispatch.
+
+    For ``host_down`` the ``rig`` field names the HOST fault domain
+    (``launch.mesh.host_fault_domains`` id); for the dispatch and
+    snapshot kinds ``rig`` is unused (the fault hits the whole host)."""
 
     kind: str
-    rig: typing.Any
+    rig: typing.Any = None
     start: int = 0
     stop: int | None = None
     camera: int = 0
@@ -55,6 +86,10 @@ class FaultSpec:
                              f"got {self.kind!r}")
         if self.stop is not None and self.stop <= self.start:
             raise ValueError(f"empty fault window [{self.start}, {self.stop})")
+        if self.kind in _FRAME_KINDS + ("host_down",) and self.rig is None:
+            raise ValueError(
+                f"{self.kind!r} needs a target: rig id for frame faults, "
+                "host domain id for host_down")
 
     def active(self, frame_index: int) -> bool:
         return (frame_index >= self.start
@@ -117,8 +152,8 @@ class FaultInjector:
         delivered = True
         applied: list[str] = []
         for i, s in enumerate(self.specs):
-            if i in self._disabled or s.rig != rig_id \
-                    or not s.active(frame_index):
+            if i in self._disabled or s.kind not in _FRAME_KINDS \
+                    or s.rig != rig_id or not s.active(frame_index):
                 continue
             applied.append(s.kind)
             if s.kind == "dead_camera":
@@ -134,3 +169,44 @@ class FaultInjector:
                 t += abs(self._rng(rig_id, frame_index)
                          .normal(0.0, s.magnitude))
         return InjectedFrame(im, ts, t, delivered, mask, tuple(applied))
+
+    # -- host-level faults (queried, not applied to frames) ----------------
+
+    def hosts_down_at(self, frame_index: int) -> tuple:
+        """Host fault domains whose ``host_down`` spec STARTS at this
+        frame — a host dies once, so the event fires exactly at
+        ``start`` (the window end is irrelevant)."""
+        return tuple(s.rig for i, s in enumerate(self.specs)
+                     if i not in self._disabled and s.kind == "host_down"
+                     and s.start == frame_index)
+
+    def dispatch_fault(self, dispatch_index: int, attempt: int
+                       ) -> str | None:
+        """What the guarded dispatch sees on ``attempt`` (1-based) of
+        dispatch ordinal ``dispatch_index``: ``"stall"``, ``"error"``
+        or None.  A spec fails the first ``int(magnitude)`` attempts of
+        every dispatch in its window, so retries deterministically
+        recover when the guard's budget exceeds the fault's depth —
+        pure function of (specs, frame, attempt), no RNG needed."""
+        for i, s in enumerate(self.specs):
+            if i in self._disabled or s.kind not in _DISPATCH_KINDS \
+                    or not s.active(dispatch_index):
+                continue
+            if attempt <= max(1, int(s.magnitude)):
+                return "stall" if s.kind == "stuck_dispatch" else "error"
+        return None
+
+    def snapshot_corruption(self, frame_index: int) -> dict | None:
+        """Deterministic torn-snapshot parameters for a crash at
+        ``frame_index`` (None when no ``corrupt_snapshot`` spec is
+        active): which leaf file to tear and how much of it to keep,
+        drawn from the same seeded (spec, frame) stream as every other
+        fault."""
+        for i, s in enumerate(self.specs):
+            if i in self._disabled or s.kind != "corrupt_snapshot" \
+                    or not s.active(frame_index):
+                continue
+            rng = self._rng("snapshot", frame_index)
+            return {"leaf_index": int(rng.randint(0, 1 << 30)),
+                    "keep_fraction": float(0.1 + 0.7 * rng.uniform())}
+        return None

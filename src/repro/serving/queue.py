@@ -133,6 +133,26 @@ class FrameQueue:
             self.dropped_overflow += 1
         self._pending.append(_Pending(rig_id, im, float(t_arrival), mask))
 
+    # -- snapshot ----------------------------------------------------------
+
+    def export_pending(self) -> list[_Pending]:
+        """The buffered-but-unserved frames, oldest first — part of the
+        crash-consistent service snapshot (a frame accepted by
+        ``submit`` must survive a host crash, or recovery silently
+        drops it and the restored run diverges from an uninterrupted
+        one)."""
+        return list(self._pending)
+
+    def restore_pending(self, items, dropped_overflow: int = 0) -> None:
+        """Replace the pending buffer (snapshot restore).  Each frame
+        re-enters through ``put`` so a corrupt snapshot cannot smuggle
+        a bad shape past the eager validation."""
+        self._pending.clear()
+        for p in items:
+            self.put(p.rig_id, p.images, p.t_arrival,
+                     camera_mask=p.camera_mask)
+        self.dropped_overflow = int(dropped_overflow)
+
     # -- draining ----------------------------------------------------------
 
     def pending(self) -> int:

@@ -25,6 +25,7 @@ episode bit-identically.
 from __future__ import annotations
 
 import collections
+import time
 import typing
 
 import jax
@@ -36,8 +37,11 @@ from repro.core.pipeline import VisualSystem
 from repro.core.types import LocalizationOutput, StereoOutput
 from repro.distributed import compression
 from repro.kernels import ops
+from repro.serving.failover import DispatchEvent, DispatchGuard, HostEvent, \
+    HostMap
 from repro.serving.faults import FaultInjector
 from repro.serving.queue import FrameQueue, QueueConfig
+from repro.serving import snapshot
 from repro.serving.supervisor import (Supervisor, SupervisorConfig,
                                       SupervisorEvent)
 
@@ -62,7 +66,9 @@ class FleetService:
     def __init__(self, vs: VisualSystem,
                  queue_cfg: QueueConfig | None = None,
                  sup_cfg: SupervisorConfig | None = None,
-                 restart_cb=None) -> None:
+                 restart_cb=None,
+                 guard: DispatchGuard | None = None,
+                 host_map: HostMap | None = None) -> None:
         self.vs = vs
         # The queue buffers frames in the session's datapath dtype —
         # a uint8-precision session keeps the whole intake path 8-bit
@@ -73,7 +79,13 @@ class FleetService:
                                 (vs.pipe.orb.height, vs.pipe.orb.width),
                                 queue_cfg, dtype=self._frame_dtype)
         self.supervisor = Supervisor(sup_cfg, restart_cb)
-        self.events: list[SupervisorEvent] = []
+        # Optional failover layer: a DispatchGuard turns stuck/throwing
+        # dispatches into counted retries/drops; a HostMap places rigs
+        # on host fault domains so ``host_down`` can redistribute.
+        self.guard = guard
+        self.host_map = host_map
+        self._dispatch_injector: FaultInjector | None = None
+        self.events: list = []
         self.counters = collections.Counter()
         # Per-rig cross-frame localization memory (LocalizationState),
         # keyed by rig_id.  The queue re-buckets rigs freely between
@@ -92,28 +104,41 @@ class FleetService:
         bugs, not sensor faults)."""
         now = float(t_arrival)
         self.supervisor.register(rig_id, now)
+        if self.host_map is not None:
+            self.host_map.assign(rig_id)
         self.counters["frames_in"] += 1
         if self.supervisor.health(rig_id) is not None \
                 and self.supervisor.health(rig_id).value == "quarantined":
             self.counters["dropped_quarantined"] += 1
             return "dropped_quarantined"
 
-        im = np.asarray(images, dtype=np.float32)
+        arr = np.asarray(images)
         mask = (np.ones(self.vs.rig.n_cameras, dtype=bool)
                 if camera_mask is None
                 else np.asarray(camera_mask, dtype=bool).reshape(-1))
-        # Corruption: a NaN/inf slab with a healthy driver mask — catch
-        # it here so garbage never reaches (or retraces) the kernels.
-        finite = np.isfinite(im).all(axis=tuple(range(1, im.ndim)))
-        if not finite.all():
-            self.counters["corrupt_cameras"] += int((~finite & mask).sum())
-            mask &= finite
-        if self._frame_dtype == np.uint8:
-            # Quantize at ingest (round/clip, matching the f32 path's
-            # quantized pyramid) — NaNs were already masked above, so
-            # the cast is well-defined on every surviving camera.
-            im = np.round(np.clip(np.nan_to_num(im), 0.0, 255.0)) \
-                .astype(np.uint8)
+        if self._frame_dtype == np.uint8 and arr.dtype == np.uint8:
+            # Integer fast path: a uint8 slab into a uint8-precision
+            # session is already finite and already quantized — the
+            # float32 widen + finite scan + round/clip/cast (4x the
+            # bytes, three full passes) would be pure overhead, so the
+            # 8-bit intake stays actually 8-bit.
+            im = arr
+        else:
+            im = np.asarray(arr, dtype=np.float32)
+            # Corruption: a NaN/inf slab with a healthy driver mask —
+            # catch it here so garbage never reaches (or retraces) the
+            # kernels.
+            finite = np.isfinite(im).all(axis=tuple(range(1, im.ndim)))
+            if not finite.all():
+                self.counters["corrupt_cameras"] += int((~finite & mask).sum())
+                mask &= finite
+            if self._frame_dtype == np.uint8:
+                # Quantize at ingest (round/clip, matching the f32
+                # path's quantized pyramid) — NaNs were already masked
+                # above, so the cast is well-defined on every surviving
+                # camera.
+                im = np.round(np.clip(np.nan_to_num(im), 0.0, 255.0)) \
+                    .astype(np.uint8)
         if timestamps is not None:
             decision = self.vs.desync_decision(timestamps)
             if decision.action in ("raise", "drop_frame"):
@@ -184,14 +209,28 @@ class FleetService:
         if batch is None:
             return []
         localize = self.vs.pipe.localize
-        if localize:
-            out = self.vs.process_fleet(batch.images,
-                                        camera_mask=batch.camera_mask,
-                                        prev=self._assemble_prev(batch))
-            state = localization.state_from(out)
+
+        def _compute():
+            if localize:
+                out = self.vs.process_fleet(batch.images,
+                                            camera_mask=batch.camera_mask,
+                                            prev=self._assemble_prev(batch))
+                return out, localization.state_from(out)
+            return self.vs.process_fleet(batch.images,
+                                         camera_mask=batch.camera_mask), None
+
+        if self.guard is not None:
+            out, state = self._guarded(_compute, now)
+            if out is None:
+                # Budget exhausted: the batch is dropped (counted per
+                # rig frame, health degraded) but the loop keeps
+                # serving — same never-crash discipline as intake.
+                for rig_id in batch.rig_ids:
+                    self.counters["dropped_dispatch"] += 1
+                    self.supervisor.heartbeat(rig_id, now, degraded=True)
+                return []
         else:
-            out = self.vs.process_fleet(batch.images,
-                                        camera_mask=batch.camera_mask)
+            out, state = _compute()
         self.counters["batches"] += 1
         self.counters["padded_rows"] += len(batch.rig_mask) - batch.n_real
         reports = []
@@ -211,16 +250,72 @@ class FleetService:
             self.counters["late_frames"] += int(batch.late[b])
         return reports
 
+    def _guarded(self, compute, now: float):
+        """Run one batch compute under the ``DispatchGuard``: stalls and
+        exceptions become counted events + deterministic-backoff retries,
+        and an exhausted budget returns ``(None, None)`` instead of
+        raising.  The dispatch ordinal keys the injector window AND the
+        backoff stream, and lives in ``counters`` so it survives a
+        snapshot/restore (a restored service does not replay old
+        ordinals)."""
+        dispatch = int(self.counters["dispatches"])
+        self.counters["dispatches"] += 1
+        inj = self._dispatch_injector
+        inject = (None if inj is None
+                  else lambda attempt: inj.dispatch_fault(dispatch, attempt))
+        outcome = self.guard.run(dispatch, compute, inject=inject)
+        for fault in outcome.faults:
+            kind = "dispatch_stalls" if fault == "stall" \
+                else "dispatch_errors"
+            self.counters[kind] += 1
+        if outcome.faults:
+            self.counters["dispatch_retries"] += outcome.attempts - 1
+            self.events.append(DispatchEvent(
+                "dispatch_recovered" if outcome.ok else "dispatch_drop",
+                float(now), dispatch, outcome.attempts, outcome.faults,
+                outcome.backoff_s))
+        if not outcome.ok:
+            return None, None
+        return outcome.value
+
+    # -- failover ----------------------------------------------------------
+
+    def host_down(self, host, now: float) -> HostEvent:
+        """A host fault domain died: redistribute its rigs over the
+        survivors (``HostMap.host_down``) and gap their pose chains —
+        migration is a stream gap exactly like a restart, so a moved
+        rig's next frame reports identity + ``valid=False`` rather than
+        chaining across the outage.  Supervisor state is untouched: the
+        rigs themselves are healthy, they just live somewhere else now."""
+        if self.host_map is None:
+            raise ValueError(
+                "FleetService.host_down needs a HostMap (pass host_map= "
+                "at construction)")
+        moved = self.host_map.host_down(host)
+        for rig_id, _ in moved:
+            self._loc_state.pop(rig_id, None)
+        self.counters["host_down_events"] += 1
+        self.counters["rigs_redistributed"] += len(moved)
+        event = HostEvent("host_down", float(now), host, moved)
+        self.events.append(event)
+        return event
+
     def status(self, now: float) -> dict:
         """Structured service snapshot: supervisor report + queue depth
-        + intake/serve counters."""
-        return {
+        + intake/serve counters (queue-side drop/lateness tallies are
+        mirrored into ``counters`` so one dict answers "what did we
+        lose"), plus host placement when a ``HostMap`` is attached."""
+        out = {
             "supervisor": self.supervisor.status_report(now),
             "queue": {"pending": self.queue.pending(),
                       "oldest_wait_s": self.queue.oldest_wait(now),
                       "dropped_overflow": self.queue.dropped_overflow},
-            "counters": dict(self.counters),
+            "counters": {**dict(self.counters),
+                         "dropped_overflow": self.queue.dropped_overflow},
         }
+        if self.host_map is not None:
+            out["hosts"] = self.host_map.status()
+        return out
 
 
 def wire_encode(output) -> dict:
@@ -270,34 +365,56 @@ def wire_decode(wire: dict):
 
 class EpisodeResult(typing.NamedTuple):
     reports: list        # every RigReport, in service order
-    events: list         # every SupervisorEvent
+    events: list         # Supervisor/Dispatch/Host events, in order
     status: dict         # final FleetService.status snapshot
+    recovery: dict | None = None   # kill-and-recover timing (crash_at)
 
 
 def run_episode(service: FleetService, frames, dt: float = 1.0 / 30.0,
                 t0: float = 0.0, rig_ids: typing.Sequence | None = None,
                 injector: FaultInjector | None = None,
-                settle_steps: int = 4) -> EpisodeResult:
+                settle_steps: int = 4,
+                snapshot_dir: str | None = None, snapshot_keep: int = 3,
+                crash_at: int | None = None,
+                restore=None) -> EpisodeResult:
     """Drive a deterministic streaming episode on a virtual clock.
 
     ``frames``: (T, n_rigs, n_cameras, H, W).  Frame t of rig r nominally
     arrives at ``t0 + t * dt`` with trigger tags equal to the arrival
     time; the optional ``injector`` perturbs images/tags/arrival or
-    withholds delivery per its specs.  After the T arrival ticks,
-    ``settle_steps`` extra force-flushed ticks let watchdog timeouts,
-    backoff restarts and the final partial batch play out.  The SAME
-    driver feeds the fault-injection tests and the ``table_service``
-    benchmark, so "what CI verifies" and "what we measure" is one code
-    path.
+    withholds delivery per its specs (and its host-level specs fire
+    here: ``host_down`` at its start frame, dispatch faults through the
+    service's guard).  After the T arrival ticks, ``settle_steps``
+    extra force-flushed ticks let watchdog timeouts, backoff restarts
+    and the final partial batch play out.  The SAME driver feeds the
+    fault-injection tests and the service/failover benchmarks, so
+    "what CI verifies" and "what we measure" is one code path.
+
+    Kill-and-recover: with ``snapshot_dir`` set, every tick ends in a
+    crash-consistent ``serving.snapshot`` save; with ``crash_at=t`` the
+    service object is DESTROYED after tick ``t`` and replaced by
+    ``restore()`` (a zero-arg factory building a fresh, cold
+    ``FleetService``) restored from the newest verifiable snapshot —
+    through any ``corrupt_snapshot`` tearing the injector dictates.
+    The episode then simply continues; ``result.recovery`` reports the
+    restored step and the recovery wall clock.
     """
+    if crash_at is not None and (restore is None or snapshot_dir is None):
+        raise ValueError("crash_at requires restore= and snapshot_dir=")
     frames = np.asarray(frames)
     t_total, n_rigs = frames.shape[0], frames.shape[1]
     n_cameras = frames.shape[2]
     if rig_ids is None:
         rig_ids = tuple(range(n_rigs))
+    service._dispatch_injector = injector
     reports: list[RigReport] = []
+    pre_crash_events: list = []
+    recovery = None
     for t in range(t_total):
         now = t0 + t * dt
+        if injector is not None:
+            for host in injector.hosts_down_at(t):
+                service.host_down(host, now)
         for r in range(n_rigs):
             ts = np.full(n_cameras, now, dtype=np.float64)
             if injector is None:
@@ -310,9 +427,30 @@ def run_episode(service: FleetService, frames, dt: float = 1.0 / 30.0,
                            timestamps=inj.timestamps,
                            camera_mask=inj.camera_mask)
         reports.extend(service.step(now + 0.5 * dt))
+        if snapshot_dir is not None:
+            snapshot.save(service, snapshot_dir, step=t, keep=snapshot_keep)
+        if crash_at is not None and t == crash_at:
+            pre_crash_events = list(service.events)
+            torn = (injector.snapshot_corruption(t)
+                    if injector is not None else None)
+            if torn is not None:
+                snapshot.corrupt_newest(snapshot_dir, torn["leaf_index"],
+                                        torn["keep_fraction"])
+            wall = time.perf_counter()
+            service = restore()
+            restored_step = snapshot.restore(service, snapshot_dir)
+            wall = time.perf_counter() - wall
+            service._dispatch_injector = injector
+            recovery = {
+                "crash_at": int(t),
+                "restored_step": restored_step,
+                "recovery_wall_s": float(wall),
+                "snapshot_fallback": bool(restored_step is not None
+                                          and restored_step < t),
+            }
     for k in range(settle_steps):
         now = t0 + (t_total + k) * dt
         reports.extend(service.step(now, force=True))
     final = t0 + (t_total + settle_steps) * dt
-    return EpisodeResult(reports, list(service.events),
-                         service.status(final))
+    return EpisodeResult(reports, pre_crash_events + list(service.events),
+                         service.status(final), recovery)

@@ -194,6 +194,42 @@ class Supervisor:
         st.restart_times = []
         st.restart_at = float(now)
 
+    # -- snapshot ----------------------------------------------------------
+
+    def export_state(self) -> list:
+        """The full per-rig ledger as plain JSON-able records (rig ids
+        left as-is — ``serving.snapshot`` tags them for JSON).  This is
+        the state a host crash must NOT launder: restart times, flap
+        budgets and quarantine flags all survive a snapshot/restore
+        round trip bit-for-bit."""
+        return [
+            {"rig_id": rig_id,
+             "health": st.health.value,
+             "last_heartbeat": st.last_heartbeat,
+             "restart_at": st.restart_at,
+             "restart_times": list(st.restart_times),
+             "restarts_total": st.restarts_total,
+             "degraded_frames": st.degraded_frames,
+             "frames": st.frames}
+            for rig_id, st in self._rigs.items()]
+
+    def restore_state(self, records: list) -> None:
+        """Inverse of ``export_state``: replace the ledger wholesale.
+        A quarantined rig stays quarantined, a rig mid-backoff keeps its
+        scheduled ``restart_at`` and its in-window restart history — the
+        watchdog resumes exactly where the dead host left off."""
+        self._rigs = {}
+        for rec in records:
+            self._rigs[rec["rig_id"]] = _RigState(
+                health=RigHealth(rec["health"]),
+                last_heartbeat=float(rec["last_heartbeat"]),
+                restart_at=(None if rec["restart_at"] is None
+                            else float(rec["restart_at"])),
+                restart_times=[float(t) for t in rec["restart_times"]],
+                restarts_total=int(rec["restarts_total"]),
+                degraded_frames=int(rec["degraded_frames"]),
+                frames=int(rec["frames"]))
+
     # -- reporting ---------------------------------------------------------
 
     def status_report(self, now: float) -> dict:

@@ -1,0 +1,386 @@
+"""Multi-host failover acceptance tests: crash-consistent snapshots
+(kill a service mid-episode, restore a FRESH one, continue bit-exactly),
+torn-snapshot fallback, quarantine/flap-budget survival across a crash,
+elastic host_down redistribution inside the launch budget, and the
+guarded dispatch loop — all on the virtual clock with seeded injection,
+so every scenario is a bit-reproducible replay."""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (ORBConfig, PipelineConfig, RigConfig, VisualSystem)
+from repro.data import scenes
+from repro.serving import (DispatchGuard, DispatchGuardConfig, FaultInjector,
+                           FaultSpec, FleetService, HostMap, QueueConfig,
+                           RigHealth, SupervisorConfig, run_episode, snapshot)
+
+H, W = 48, 64
+DT = 1.0 / 30.0
+N_RIGS, T = 3, 4
+
+
+@functools.lru_cache(maxsize=1)
+def _fleet():
+    cfg = scenes.SceneConfig(height=H, width=W, n_points=40, seed=3,
+                             baseline=0.3)
+    frames, intr, _ = scenes.render_fleet_sequence(cfg, n_frames=T,
+                                                   n_rigs=N_RIGS)
+    return np.asarray(frames), intr
+
+
+def _service(impl=None, localize=False, guard=None, host_map=None,
+             **sup_kw):
+    frames, intr = _fleet()
+    ocfg = ORBConfig(height=H, width=W, max_features=16, n_levels=1,
+                     max_disparity=24)
+    rig = RigConfig.quad(intr, desync_policy="degrade", max_desync=1e-3)
+    vs = VisualSystem(rig, PipelineConfig(orb=ocfg, impl=impl,
+                                          localize=localize))
+    sup = dict(heartbeat_timeout_s=2.5 * DT, backoff_base_s=DT,
+               backoff_max_s=4 * DT, restart_budget=2, flap_window_s=1.0,
+               seed=0)
+    sup.update(sup_kw)
+    return FleetService(vs, QueueConfig(bucket_sizes=(1, 2, 4),
+                                        deadline_s=DT),
+                        SupervisorConfig(**sup), guard=guard,
+                        host_map=host_map)
+
+
+def _assert_bit_exact(a, b, msg=""):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=msg)
+
+
+def _by_key(result, rig_id):
+    return {round(r.t_arrival, 9): r for r in result.reports
+            if r.rig_id == rig_id and r.output is not None}
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-recover: the tentpole acceptance test
+
+CRASH_AT = 1
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_kill_and_recover_bit_exact(impl, tmp_path):
+    """Snapshot every tick, destroy the service after tick CRASH_AT,
+    restore a fresh one, continue: every healthy rig's STEREO outputs
+    are bit-exact against the uninterrupted run; its pose chain shows
+    ``valid=False`` exactly at the first post-restore frame (the crash
+    is a stream gap) and is bit-exact again afterwards."""
+    frames, _ = _fleet()
+    base = run_episode(_service(impl=impl, localize=True), frames, dt=DT,
+                       settle_steps=6)
+    crashed = run_episode(
+        _service(impl=impl, localize=True), frames, dt=DT, settle_steps=6,
+        snapshot_dir=str(tmp_path), crash_at=CRASH_AT,
+        restore=lambda: _service(impl=impl, localize=True))
+
+    assert crashed.recovery is not None
+    assert crashed.recovery["restored_step"] == CRASH_AT
+    assert not crashed.recovery["snapshot_fallback"]
+    # the crash happens after the tick-CRASH_AT service step
+    crash_time = CRASH_AT * DT + 0.5 * DT + 1e-9
+
+    reestablished = False
+    for rig in range(N_RIGS):
+        want, got = _by_key(base, rig), _by_key(crashed, rig)
+        assert set(want) == set(got), f"rig {rig} served different frames"
+        # a rig's GAP frame is the first one SERVED by the restored
+        # service (it may have arrived pre-crash and ridden the
+        # snapshot's pending buffer)
+        post = sorted(k for k in got if got[k].t > crash_time)
+        assert post, f"rig {rig} never served after the crash"
+        gap_key = post[0]
+        for key in want:
+            _assert_bit_exact(got[key].output.stereo,
+                              want[key].output.stereo,
+                              f"rig {rig} stereo at t_arrival={key}")
+            _assert_bit_exact(got[key].output.points,
+                              want[key].output.points,
+                              f"rig {rig} points at t_arrival={key}")
+            if key == gap_key:
+                # The deliberate difference: identity + valid=False at
+                # the gap, where the uninterrupted run chained a pose.
+                assert not np.asarray(got[key].output.pose.valid).any(), \
+                    f"rig {rig} chained a pose across the crash gap"
+            else:
+                _assert_bit_exact(got[key].output.pose,
+                                  want[key].output.pose,
+                                  f"rig {rig} pose at t_arrival={key}")
+        reestablished |= any(np.asarray(got[k].output.pose.valid).any()
+                             for k in post[1:])
+    assert reestablished, "no rig re-established its pose chain"
+
+
+def test_kill_and_recover_preserves_pending_frames(tmp_path):
+    """A frame accepted by ``submit`` but not yet served must survive
+    the crash: snapshot with a pending frame, restore fresh, serve it."""
+    frames, _ = _fleet()
+    svc = _service()
+    svc.submit(0, frames[0, 0], 0.0)
+    svc.submit(1, frames[0, 1], 0.001)
+    assert svc.queue.pending() == 2
+    snapshot.save(svc, str(tmp_path), step=0)
+
+    fresh = _service()
+    assert snapshot.restore(fresh, str(tmp_path)) == 0
+    assert fresh.queue.pending() == 2
+    want = svc.step(1.0, force=True)
+    got = fresh.step(1.0, force=True)
+    assert [r.rig_id for r in got] == [r.rig_id for r in want] == [0, 1]
+    assert [r.t_arrival for r in got] == [r.t_arrival for r in want]
+    for a, b in zip(got, want):
+        _assert_bit_exact(a.output, b.output)
+
+
+def test_quarantine_survives_restore(tmp_path):
+    """A quarantined rig cannot launder its flap budget through a host
+    crash: quarantine state, restart ledger and counters all ride the
+    snapshot."""
+    frames, _ = _fleet()
+    svc = _service(restart_budget=1)
+    svc.submit(1, frames[0, 1], 0.0)
+    svc.step(0.0, force=True)
+    now, t = 0.0, 1
+    while svc.supervisor.health(1) is not RigHealth.QUARANTINED:
+        assert t < 200, "rig 1 never quarantined"
+        now = t * DT
+        svc.step(now, force=True)
+        t += 1
+    snapshot.save(svc, str(tmp_path), step=42)
+
+    fresh = _service(restart_budget=1)
+    assert snapshot.restore(fresh, str(tmp_path)) == 42
+    assert fresh.supervisor.health(1) is RigHealth.QUARANTINED
+    st_want = svc.supervisor.export_state()
+    st_got = fresh.supervisor.export_state()
+    assert st_got == st_want                    # full ledger, bit-for-bit
+    assert dict(fresh.counters) == dict(svc.counters)
+    # and the restored service keeps enforcing the quarantine
+    assert fresh.submit(1, frames[1, 1], now + DT) == "dropped_quarantined"
+
+
+def test_corrupt_snapshot_falls_back_a_step(tmp_path):
+    """A torn newest snapshot (injected ``corrupt_snapshot``) must not
+    crash the restore — it falls back to the previous verifiable step
+    and the episode completes."""
+    frames, _ = _fleet()
+    inj = FaultInjector([FaultSpec("corrupt_snapshot", start=CRASH_AT)],
+                        seed=11)
+    result = run_episode(
+        _service(), frames, dt=DT, injector=inj, settle_steps=6,
+        snapshot_dir=str(tmp_path), crash_at=CRASH_AT,
+        restore=_service)
+    assert result.recovery["restored_step"] == CRASH_AT - 1
+    assert result.recovery["snapshot_fallback"]
+    # the episode still finished serving; no frame raised
+    assert any(r.t_arrival > CRASH_AT * DT for r in result.reports)
+
+
+def test_snapshot_layout_mismatch_raises(tmp_path):
+    """Restoring across rig geometries is a caller bug, not a torn
+    write — it must raise, not silently misread state."""
+    frames, _ = _fleet()
+    svc = _service()
+    svc.submit(0, frames[0, 0], 0.0)
+    snapshot.save(svc, str(tmp_path), step=0)
+    other = _service(localize=True)             # different layout echo
+    with pytest.raises(ValueError, match="layout"):
+        snapshot.restore(other, str(tmp_path))
+
+
+def test_restore_with_no_snapshot_is_cold_start(tmp_path):
+    assert snapshot.restore(_service(), str(tmp_path)) is None
+
+
+# ---------------------------------------------------------------------------
+# HostMap: elastic rig redistribution
+
+def test_host_map_places_deterministically():
+    hm = HostMap(["h0", "h1", "h2"])
+    assert [hm.assign(r) for r in range(6)] == \
+        ["h0", "h1", "h2", "h0", "h1", "h2"]
+    assert hm.assign(0) == "h0"                 # sticky
+    assert hm.load() == {"h0": 2, "h1": 2, "h2": 2}
+    # same arrival order -> identical map
+    hm2 = HostMap(["h0", "h1", "h2"])
+    for r in range(6):
+        hm2.assign(r)
+    assert hm2.export_state() == hm.export_state()
+
+
+def test_host_map_down_redistributes_least_loaded():
+    hm = HostMap(["h0", "h1", "h2"])
+    for r in range(6):
+        hm.assign(r)
+    moved = hm.host_down("h1")
+    assert moved == ((1, "h0"), (4, "h2"))
+    assert hm.down == ["h1"]
+    assert hm.load() == {"h0": 3, "h2": 3}
+    with pytest.raises(ValueError, match="not an active domain"):
+        hm.host_down("h1")                      # already down
+    hm.host_down("h0")
+    with pytest.raises(ValueError, match="last surviving"):
+        hm.host_down("h2")                      # fleet-wide outage
+
+
+def test_host_map_rejects_bad_construction():
+    with pytest.raises(ValueError, match="at least one"):
+        HostMap([])
+    with pytest.raises(ValueError, match="duplicate"):
+        HostMap(["h0", "h0"])
+    with pytest.raises(ValueError, match="unknown host"):
+        HostMap(["h0"], assignment={0: "nope"})
+
+
+def test_host_down_episode_stays_in_launch_budget(tmp_path):
+    """host_down mid-episode: the survivors absorb the moved rigs, the
+    moved rigs' pose chains gap, and the whole episode still traces at
+    most once per bucket size (redistribution rides the SAME bucketed
+    batch path — no new fleet shapes)."""
+    frames, _ = _fleet()
+    hm = HostMap(["host0", "host1"])
+    svc = _service(localize=True, host_map=hm)
+    inj = FaultInjector([FaultSpec("host_down", rig="host0", start=2)])
+    result = run_episode(svc, frames, dt=DT, injector=inj, settle_steps=6)
+
+    host_evs = [e for e in result.events
+                if getattr(e, "kind", None) == "host_down"]
+    assert len(host_evs) == 1 and host_evs[0].host == "host0"
+    moved_rigs = [r for r, _ in host_evs[0].moved]
+    assert moved_rigs                           # host0 had rigs placed
+    assert svc.host_map.down == ["host0"]
+    assert svc.host_map.hosts == ["host1"]
+    assert result.status["counters"]["rigs_redistributed"] == len(moved_rigs)
+    # every rig still served every frame — redistribution drops nothing
+    for rig in range(N_RIGS):
+        assert len(_by_key(result, rig)) == T
+    # migration gapped the moved rigs' pose chains: their first frame
+    # served AFTER the host_down event must not chain
+    for rig in moved_rigs:
+        got = _by_key(result, rig)
+        post = sorted(k for k in got if got[k].t > host_evs[0].now)
+        assert post, f"moved rig {rig} never served after host_down"
+        assert not np.asarray(got[post[0]].output.pose.valid).any(), \
+            f"rig {rig} chained a pose across its migration"
+    # launch budget: no new fleet shapes from the failover
+    n_buckets = len(svc.queue.cfg.bucket_sizes)
+    assert svc.vs.trace_count("process_fleet_masked") <= n_buckets
+
+
+def test_host_down_without_host_map_raises():
+    with pytest.raises(ValueError, match="HostMap"):
+        _service().host_down("host0", 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Guarded dispatch through the service
+
+def _guard(**kw):
+    # Generous real timeout: the first dispatch per bucket shape pays
+    # jit tracing; injected stalls simulate the timeout without it.
+    cfg = dict(timeout_s=60.0, max_attempts=2, backoff_base_s=DT,
+               backoff_max_s=4 * DT, seed=0)
+    cfg.update(kw)
+    return DispatchGuard(DispatchGuardConfig(**cfg))
+
+
+def test_dispatch_error_retries_and_recovers():
+    """magnitude=1 fails the first attempt of every dispatch in the
+    window; max_attempts=2 means the retry lands — every frame is still
+    served, the faults are counted, recovery events are recorded."""
+    frames, _ = _fleet()
+    base = run_episode(_service(), frames, dt=DT, settle_steps=6)
+    inj = FaultInjector([FaultSpec("dispatch_error", start=1, stop=3,
+                                   magnitude=1)])
+    svc = _service(guard=_guard())
+    result = run_episode(svc, frames, dt=DT, injector=inj, settle_steps=6)
+    assert svc.counters["dispatch_errors"] == 2
+    assert svc.counters["dispatch_retries"] == 2
+    assert svc.counters["dropped_dispatch"] == 0
+    recovered = [e for e in result.events
+                 if getattr(e, "kind", None) == "dispatch_recovered"]
+    assert len(recovered) == 2
+    assert all(e.faults == ("error:InjectedDispatchError",)
+               for e in recovered)
+    # recovered dispatches serve bit-exactly what an unguarded run does
+    for rig in range(N_RIGS):
+        want, got = _by_key(base, rig), _by_key(result, rig)
+        assert set(want) == set(got)
+        for key in want:
+            _assert_bit_exact(got[key].output, want[key].output)
+
+
+def test_stuck_dispatch_exhausts_budget_and_drops():
+    """magnitude >= max_attempts: every attempt stalls, the batch is
+    dropped (counted per rig, health degraded) — and the loop KEEPS
+    SERVING the frames outside the fault window."""
+    frames, _ = _fleet()
+    inj = FaultInjector([FaultSpec("stuck_dispatch", start=1, stop=2,
+                                   magnitude=2)])
+    svc = _service(guard=_guard())
+    result = run_episode(svc, frames, dt=DT, injector=inj, settle_steps=6)
+    assert svc.counters["dispatch_stalls"] == 2
+    drops = [e for e in result.events
+             if getattr(e, "kind", None) == "dispatch_drop"]
+    assert len(drops) == 1 and drops[0].faults == ("stall", "stall")
+    assert svc.counters["dropped_dispatch"] > 0
+    assert result.status["counters"]["dropped_dispatch"] == \
+        svc.counters["dropped_dispatch"]
+    # later dispatches (past the window) still served frames
+    assert any(r.t_arrival > 1 * DT for r in result.reports)
+
+
+def test_guard_times_out_a_genuinely_stuck_compute():
+    """The real wall-clock watchdog (no injection): a compute that
+    outlives timeout_s is abandoned and counted a stall."""
+    import time as _time
+    g = DispatchGuard(DispatchGuardConfig(timeout_s=0.05, max_attempts=2))
+    out = g.run("stuck", lambda: _time.sleep(5.0))
+    assert not out.ok and out.faults == ("stall", "stall")
+    out = g.run("fine", lambda: 7)
+    assert out.ok and out.value == 7 and out.faults == ()
+
+
+def test_guard_backoff_is_deterministic_and_bounded():
+    g = _guard()
+    for key in (0, 1, "batch-7"):
+        for attempt in (1, 2, 3, 9):
+            d = g.backoff(key, attempt)
+            assert d == _guard().backoff(key, attempt)
+            assert 0.0 < d <= g.cfg.backoff_max_s * \
+                (1.0 + g.cfg.backoff_jitter)
+    assert g.backoff(0, 1) != g.backoff(1, 1)   # keys decorrelate
+
+
+def test_failover_episode_replays_bit_identically(tmp_path):
+    """The new fault kinds (host_down + dispatch_error + crash/restore)
+    preserve the replay guarantee: two identical episodes produce
+    identical reports, events and outputs."""
+    def run(d):
+        inj = FaultInjector([
+            FaultSpec("host_down", rig="host0", start=2),
+            FaultSpec("dispatch_error", start=1, stop=2, magnitude=1),
+        ], seed=9)
+        svc = _service(guard=_guard(), host_map=HostMap(["host0", "host1"]))
+        return run_episode(svc, _fleet()[0], dt=DT, injector=inj,
+                           settle_steps=6, snapshot_dir=str(d),
+                           crash_at=2,
+                           restore=lambda: _service(
+                               guard=_guard(),
+                               host_map=HostMap(["host0", "host1"])))
+
+    a = run(tmp_path / "a")
+    b = run(tmp_path / "b")
+    assert [(r.rig_id, r.status, r.t, r.t_arrival) for r in a.reports] == \
+           [(r.rig_id, r.status, r.t, r.t_arrival) for r in b.reports]
+    assert a.events == b.events
+    assert a.recovery["restored_step"] == b.recovery["restored_step"]
+    for ra, rb in zip(a.reports, b.reports):
+        _assert_bit_exact(ra.output, rb.output)

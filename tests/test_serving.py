@@ -247,3 +247,63 @@ def test_service_drops_quarantined_rig_frames():
     svc.supervisor._rigs["r"].health = RigHealth.QUARANTINED
     assert svc.submit("r", _frame(), 1.0) == "dropped_quarantined"
     assert svc.queue.pending() == 0
+
+
+def _u8_service():
+    ocfg = ORBConfig(height=H, width=W, max_features=8, n_levels=1,
+                     max_disparity=16)
+    vs = VisualSystem(_rig(), PipelineConfig(orb=ocfg, precision="uint8"))
+    return FleetService(vs, QueueConfig(bucket_sizes=(1, 2, 4),
+                                        deadline_s=0.01))
+
+
+def test_service_uint8_submit_is_zero_copy():
+    """uint8 frames into a uint8-precision service skip the float32
+    widen + finite scan + requantize entirely: the queued slab IS the
+    caller's array (integer slabs are always finite), keeping the
+    8-bit intake actually 8-bit."""
+    svc = _u8_service()
+    im = _frame().astype(np.uint8)
+    assert svc.submit("r", im, 0.0) == "queued"
+    pending = svc.queue.export_pending()
+    assert pending[0].images.dtype == np.uint8
+    assert np.shares_memory(pending[0].images, im)
+
+
+def test_service_uint8_and_float_submits_agree():
+    """The fast path changes the cost, not the bytes: a uint8 slab and
+    its float32 twin queue identical frames (the float path round/clip
+    quantizes to the same values)."""
+    svc = _u8_service()
+    im = _frame(4).astype(np.uint8)
+    svc.submit("a", im, 0.0)
+    svc.submit("b", im.astype(np.float32), 0.0)
+    a, b = svc.queue.export_pending()
+    np.testing.assert_array_equal(a.images, b.images)
+    assert a.images.dtype == b.images.dtype == np.uint8
+
+
+def test_service_uint8_still_catches_float_corruption():
+    """A float slab with NaN into a uint8 service still takes the
+    checked path — the fast path is gated on dtype, not assumed."""
+    svc = _u8_service()
+    im = _frame()
+    im[1] = np.nan
+    assert svc.submit("r", im, 0.0) == "queued_degraded"
+    assert svc.counters["corrupt_cameras"] == 1
+    batch = svc.queue.next_batch(0.0, force=True)
+    assert batch.camera_mask[0].tolist() == [True, False, True, True]
+
+
+def test_service_status_surfaces_queue_drop_counters():
+    """``status()['counters']`` answers "what did we lose" in one dict:
+    queue overflow drops are mirrored in alongside the intake/serve
+    counters (late_frames already lives there)."""
+    svc = _service()
+    for i in range(4):      # max_pending_per_rig=2 -> 2 overflow drops
+        svc.submit("r", _frame(i), float(i))
+    status = svc.status(4.0)
+    assert svc.queue.dropped_overflow == 2
+    assert status["counters"]["dropped_overflow"] == 2
+    assert status["queue"]["dropped_overflow"] == 2
+    assert status["counters"]["frames_in"] == 4

@@ -1,0 +1,100 @@
+"""Property tests for the deterministic backoff schedules — the one
+piece of "randomness" in the serving layer.  Both the ``Supervisor``
+(restart scheduling) and the ``DispatchGuard`` (dispatch retries) use
+the same ``RandomState([seed, crc32(key), attempt])`` idiom; these pin
+the three properties every consumer relies on:
+
+  replay     same config + seed -> bit-identical schedule, across
+             instances (fault episodes replay exactly);
+  bound      every delay is positive and <= backoff_max_s * (1+jitter)
+             (a restart can never be scheduled unboundedly far out);
+  monotone   pre-cap, delays grow with the attempt number whenever the
+             worst-case jitter cannot invert the exponential growth
+             (factor * (1-j) >= (1+j)) — flapping rigs back OFF.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, strategies as st      # noqa: E402
+
+from repro.serving.failover import (DispatchGuard,      # noqa: E402
+                                    DispatchGuardConfig)
+from repro.serving.supervisor import Supervisor, SupervisorConfig  # noqa: E402
+
+# Configs constrained so the monotonicity property is actually implied:
+# with jitter j and factor f, attempt n+1 beats attempt n in the worst
+# case iff f * (1 - j) >= (1 + j); j <= 0.25 and f >= 1.7 guarantees it
+# (1.7 * 0.75 = 1.275 >= 1.25).
+_cfgs = st.builds(
+    SupervisorConfig,
+    backoff_base_s=st.floats(0.01, 2.0),
+    backoff_factor=st.floats(1.7, 3.0),
+    backoff_max_s=st.floats(2.0, 60.0),
+    backoff_jitter=st.floats(0.0, 0.25),
+    seed=st.integers(0, 2**31 - 1),
+)
+_rig_ids = st.one_of(st.integers(0, 1000), st.text(min_size=1, max_size=8))
+_attempts = st.integers(1, 12)
+
+
+@given(cfg=_cfgs, rig=_rig_ids, attempt=_attempts)
+def test_backoff_replays_identically(cfg, rig, attempt):
+    assert Supervisor(cfg)._backoff(rig, attempt) == \
+        Supervisor(cfg)._backoff(rig, attempt)
+
+
+@given(cfg=_cfgs, rig=_rig_ids, attempt=_attempts)
+def test_backoff_is_positive_and_bounded(cfg, rig, attempt):
+    d = Supervisor(cfg)._backoff(rig, attempt)
+    assert 0.0 < d <= cfg.backoff_max_s * (1.0 + cfg.backoff_jitter)
+
+
+@given(cfg=_cfgs, rig=_rig_ids)
+def test_backoff_monotone_nondecreasing_precap(cfg, rig):
+    """Growth holds up to the attempt where the deterministic part hits
+    the cap; past that, only the bound (above) is promised."""
+    sup = Supervisor(cfg)
+    delays, det = [], []
+    for attempt in range(1, 10):
+        base = cfg.backoff_base_s * cfg.backoff_factor ** (attempt - 1)
+        det.append(base)
+        delays.append(sup._backoff(rig, attempt))
+    for i in range(len(delays) - 1):
+        if det[i + 1] >= cfg.backoff_max_s:
+            break                        # capped: growth no longer promised
+        assert delays[i + 1] >= delays[i], (
+            f"backoff shrank pre-cap at attempt {i + 1}: {delays}")
+
+
+@given(cfg=_cfgs, attempt=_attempts)
+def test_backoff_decorrelates_rigs(cfg, attempt):
+    """Different rigs draw different jitter (no restart stampede) —
+    unless jitter is disabled, in which case schedules coincide by
+    construction."""
+    a = Supervisor(cfg)._backoff("rig-a", attempt)
+    b = Supervisor(cfg)._backoff("rig-b", attempt)
+    if cfg.backoff_jitter > 1e-6:       # sub-ulp jitter can round equal
+        assert a != b
+    else:
+        assert abs(a - b) <= cfg.backoff_max_s * 2e-6
+
+
+@given(
+    cfg=st.builds(
+        DispatchGuardConfig,
+        timeout_s=st.floats(0.1, 60.0),
+        backoff_base_s=st.floats(0.01, 2.0),
+        backoff_factor=st.floats(1.7, 3.0),
+        backoff_max_s=st.floats(2.0, 60.0),
+        backoff_jitter=st.floats(0.0, 0.25),
+        seed=st.integers(0, 2**31 - 1),
+    ),
+    key=st.integers(0, 10_000),
+    attempt=_attempts,
+)
+def test_dispatch_guard_backoff_same_properties(cfg, key, attempt):
+    """The guard shares the idiom, so it shares the guarantees."""
+    d = DispatchGuard(cfg).backoff(key, attempt)
+    assert d == DispatchGuard(cfg).backoff(key, attempt)
+    assert 0.0 < d <= cfg.backoff_max_s * (1.0 + cfg.backoff_jitter)
