@@ -1,0 +1,115 @@
+"""Static-audit CI gate: AUDIT.json green AND reconciled with runtime.
+
+``python -m repro.analysis`` proves the launch/VMEM/dtype/bounds
+invariants from the TRACE; ``benchmarks.run`` counts launches at
+RUNTIME into the ``launch_gate/*`` rows of ``BENCH_frontend.json``.
+This gate requires both views and their AGREEMENT:
+
+  1. every check in ``AUDIT.json`` is green (launch budgets, VMEM
+     residency under the core budget, zero dtype / bounds violations,
+     clean serving hostlint);
+  2. every required ``launch_gate/*launches`` row is covered by a
+     matrix entry claiming that gate, and the entry's STATIC count
+     EQUALS the row's runtime value — a drift in either direction
+     (analyzer under-modeling the program, or the runtime schedule
+     widening past what was proven) fails CI with a reconciliation
+     table.
+
+Usage: python -m benchmarks.check_audit [AUDIT.json [BENCH.json]]
+Exit status: 0 all green + reconciled, 1 otherwise.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+from benchmarks.check_launches import REQUIRED_GATES
+
+
+def _load(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"FAIL: cannot load {path}: {e}")
+        return None
+
+
+def _static_by_gate(audit: dict) -> dict:
+    out = {}
+    for entry in audit.get("entries", ()):
+        for gate in entry.get("gates", ()):
+            out[gate] = entry
+    return out
+
+
+def reconcile(audit: dict, bench: dict) -> int:
+    """Print the static-vs-runtime table; return exit status."""
+    rows = {(r["table"], r["name"]): r for r in bench["rows"]}
+    by_gate = _static_by_gate(audit)
+    status = 0
+    print("gate                              static  runtime  verdict")
+    for name in REQUIRED_GATES:
+        row = rows.get(("launch_gate", name))
+        entry = by_gate.get(name)
+        if entry is None:
+            print(f"{name:<33} -       -        FAIL: no audit matrix "
+                  "entry claims this gate")
+            status = 1
+            continue
+        static = entry["launches"]["static"]
+        if row is None:
+            print(f"{name:<33} {static:<7} -        FAIL: row missing "
+                  "from benchmark artifact")
+            status = 1
+            continue
+        try:
+            runtime = float(row["value"])
+        except (TypeError, ValueError):
+            runtime = math.nan
+        if math.isnan(runtime):
+            print(f"{name:<33} {static:<7} {row['value']!r:<8} FAIL: "
+                  "runtime value is not a number")
+            status = 1
+            continue
+        runtime = int(runtime)
+        ok = static == runtime
+        verdict = "ok" if ok else (
+            f"MISMATCH ({entry['name']}: proven {static}, observed "
+            f"{runtime})")
+        print(f"{name:<33} {static:<7} {runtime:<8} {verdict}")
+        if not ok:
+            status = 1
+    return status
+
+
+def check(audit_path: str, bench_path: str) -> int:
+    audit = _load(audit_path)
+    bench = _load(bench_path)
+    if audit is None or bench is None:
+        return 1
+    status = 0
+    for name, ok in audit.get("checks", {}).items():
+        print(f"{'ok' if ok else 'FAIL'}: audit check {name}")
+        if not ok:
+            status = 1
+    if not audit.get("checks"):
+        print(f"FAIL: {audit_path} has no checks section — wrong file?")
+        status = 1
+    status |= reconcile(audit, bench)
+    if status == 0:
+        print("static audit reconciled with runtime launch gates")
+    return status
+
+
+def main() -> None:
+    audit_path = sys.argv[1] if len(sys.argv) > 1 else "AUDIT.json"
+    bench_path = (sys.argv[2] if len(sys.argv) > 2
+                  else "BENCH_frontend.json")
+    sys.exit(check(audit_path, bench_path))
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,8 @@ Exit status: 0 when every gate holds, 1 on regression or missing rows.
 from __future__ import annotations
 
 import json
+import math
+import os
 import sys
 
 # Gates that MUST be present in the artifact: a refactor that silently
@@ -63,6 +65,47 @@ REQUIRED_ACCURACY = ("ate_f32", "ate_u8",
                      "rpe_rot_f32", "rpe_rot_u8")
 
 
+def _numeric(row: dict, table: str, name: str) -> float | None:
+    """The row's value as a finite float, else None with a clear FAIL
+    diagnosis — a gate row holding "n/a"/None/NaN would otherwise crash
+    this script (or, worse for NaN, slide through a <= comparison as a
+    silent pass/fail)."""
+    value = row.get("value")
+    try:
+        out = float(value)
+    except (TypeError, ValueError):
+        print(f"FAIL: {table}/{name} value {value!r} is not numeric — "
+              "did benchmarks.run emit a placeholder?")
+        return None
+    if not math.isfinite(out):
+        print(f"FAIL: {table}/{name} value is {out} (not finite) — a "
+              "NaN gate would compare as neither pass nor fail")
+        return None
+    return out
+
+
+def _print_reconciliation(bench_path: str, artifact: dict) -> None:
+    """On a launch-gate failure, show the static-vs-runtime table from
+    the sibling AUDIT.json (when present) — whichever side drifted, the
+    mismatch is then visible in one place."""
+    audit_path = os.path.join(os.path.dirname(os.path.abspath(bench_path)),
+                              "AUDIT.json")
+    if not os.path.exists(audit_path):
+        print(f"(no {audit_path} for static-vs-runtime reconciliation — "
+              "run `python -m repro.analysis` to produce it)")
+        return
+    from benchmarks import check_audit
+    try:
+        with open(audit_path) as f:
+            audit = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"(cannot load {audit_path} for reconciliation: {e})")
+        return
+    print("static-vs-runtime launch reconciliation "
+          f"({audit_path}):")
+    check_audit.reconcile(audit, artifact)
+
+
 def check(path: str) -> int:
     with open(path) as f:
         artifact = json.load(f)
@@ -76,6 +119,7 @@ def check(path: str) -> int:
         return 1
 
     status = 0
+    launch_failed = False
     for name in REQUIRED_GATES:
         if name not in gates:
             print(f"FAIL: required gate launch_gate/{name} is missing "
@@ -88,13 +132,23 @@ def check(path: str) -> int:
         if budget_row is None:
             print(f"FAIL: {name} has no matching {budget_name} row")
             status = 1
+            launch_failed = True
             continue
-        actual, budget = int(actual_row["value"]), int(budget_row["value"])
+        actual = _numeric(actual_row, "launch_gate", name)
+        budget = _numeric(budget_row, "launch_gate", budget_name)
+        if actual is None or budget is None:
+            status = 1
+            launch_failed = True
+            continue
+        actual, budget = int(actual), int(budget)
         verdict = "ok" if actual <= budget else "REGRESSION"
         print(f"{verdict}: launch_gate/{name} = {actual} "
               f"(budget {budget}; {actual_row['note']})")
         if actual > budget:
             status = 1
+            launch_failed = True
+    if launch_failed:
+        _print_reconciliation(path, artifact)
 
     acc = [name for (table, name) in rows
            if table == "accuracy_gate" and not name.endswith("_limit")]
@@ -114,8 +168,11 @@ def check(path: str) -> int:
             print(f"FAIL: {name} has no matching {name}_limit row")
             status = 1
             continue
-        actual = float(actual_row["value"])
-        limit = float(limit_row["value"])
+        actual = _numeric(actual_row, "accuracy_gate", name)
+        limit = _numeric(limit_row, "accuracy_gate", name + "_limit")
+        if actual is None or limit is None:
+            status = 1
+            continue
         ok = actual <= limit
         verdict = "ok" if ok else "REGRESSION"
         print(f"{verdict}: accuracy_gate/{name} = {actual} "

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.models import lm, transformer
+from repro.models import lm
 from repro.models.params import init_params
 
 

@@ -1,0 +1,85 @@
+"""CLI: ``python -m repro.analysis`` — run the static audit, print a
+summary, write ``AUDIT.json``, exit non-zero on any violation.
+
+    PYTHONPATH=src python -m repro.analysis [--out AUDIT.json]
+        [--quick] [--height H --width W] [--vmem-budget-mib 16]
+
+``--quick`` audits a small 240x320 / K=512 matrix (seconds instead of
+tens of seconds); launch counts, dtype contracts and bounds proofs are
+resolution-independent, only the absolute VMEM numbers shrink.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import report as report_mod
+from repro.analysis import vmem as vmem_mod
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static trace-time audit of every VisualSystem "
+                    "entry point (launches / VMEM / dtypes / bounds / "
+                    "serving lint).")
+    ap.add_argument("--out", default="AUDIT.json",
+                    help="report path (default AUDIT.json)")
+    ap.add_argument("--height", type=int, default=720)
+    ap.add_argument("--width", type=int, default=1280)
+    ap.add_argument("--max-features", type=int, default=1000)
+    ap.add_argument("--vmem-budget-mib", type=float, default=None,
+                    help="per-launch resident budget in MiB "
+                         "(default 16 — one TPU core)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small 240x320 / K=512 matrix")
+    args = ap.parse_args(argv)
+
+    height, width, kmax = args.height, args.width, args.max_features
+    if args.quick:
+        height, width, kmax = 240, 320, 512
+    budget = (vmem_mod.DEFAULT_VMEM_BUDGET
+              if args.vmem_budget_mib is None
+              else int(args.vmem_budget_mib * 2 ** 20))
+
+    rep = report_mod.run_audit(vmem_budget=budget, height=height,
+                               width=width, max_features=kmax)
+    for e in rep["entries"]:
+        la = e["launches"]
+        worst = max((v["resident_mib"] for v in e["vmem"]),
+                    default=0.0)
+        flags = []
+        if not la["budget_ok"]:
+            flags.append(f"launches {la['static']}>"
+                         f"{e['launch_budget']}")
+        if not la["consistent"]:
+            flags.append(f"static {la['static']} != trace_audit "
+                         f"{la['trace_audit']}")
+        if any(not v["ok"] for v in e["vmem"]):
+            flags.append("VMEM over budget")
+        if e["dtype_violations"]:
+            flags.append(f"{len(e['dtype_violations'])} dtype")
+        if e["bounds_violations"]:
+            flags.append(f"{len(e['bounds_violations'])} bounds")
+        verdict = "ok" if e["ok"] else "FAIL(" + ", ".join(flags) + ")"
+        print(f"{verdict:>8}  {e['name']:<18} launches="
+              f"{la['static']}/{e['launch_budget']} "
+              f"kernels={len(e['vmem'])} "
+              f"peak_vmem={worst:.2f}MiB")
+    lint = rep["hostlint"]
+    print(f"{'ok' if lint['ok'] else 'FAIL':>8}  serving hostlint: "
+          f"{len(lint['findings'])} finding(s)")
+    for f in lint["findings"]:
+        print(f"          {f['file']}:{f['line']} [{f['rule']}] "
+              f"{f['symbol']}: {f['message']}")
+    bad = [k for k, ok in rep["checks"].items() if not ok]
+    print(("AUDIT ok — all checks green" if rep["ok"]
+           else f"AUDIT FAILED: {', '.join(bad)}"))
+    report_mod.write_report(rep, args.out)
+    print(f"wrote {args.out}")
+    return 0 if rep["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

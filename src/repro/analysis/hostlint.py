@@ -1,0 +1,245 @@
+"""AST lint over the serving tier: host-boundary + concurrency hygiene.
+
+The kernels are audited from their traces; the serving loop's failure
+modes are PYTHON-side and invisible to a jaxpr: a stray
+``block_until_ready`` serializing the dispatch pipeline, an
+``np.asarray`` forcing a device sync in the middle of ``step``, a
+``jax.jit`` constructed per call (fresh cache -> retrace every tick),
+or the ``DispatchGuard`` watchdog thread mutating service state the
+main loop reads concurrently.  These are linted at the SOURCE level:
+
+  ``blocking-call``      ``.block_until_ready()`` / ``.item()`` /
+                         ``time.sleep()`` inside a hot-path function —
+                         each is a host sync or a stall in the serve
+                         loop.
+  ``host-transfer``      ``np.asarray`` / ``np.array`` / ``jnp.asarray``
+                         inside a hot-path function: on a jitted
+                         output this is a blocking device->host copy.
+                         Intake (``submit``) is NOT a hot path — frames
+                         arrive as host arrays there by design.
+  ``retrace-risk``       ``jax.jit(...)`` called inside a hot-path
+                         function: a jit wrapper built per call has an
+                         empty cache, i.e. unbounded retracing.  Jitted
+                         entry points must be built once and cached
+                         (``VisualSystem._jit``).
+  ``watchdog-unlocked``  assignment / mutation of ``self.*`` state from
+                         a function defined inside a thread-spawning
+                         function (the ``DispatchGuard`` watchdog
+                         worker) without an enclosing ``with *lock*:``
+                         block.  The worker's contract is to hand its
+                         result through a joined-before-read local; any
+                         ``self`` touch races the main loop.
+
+A finding on a line carrying the pragma comment ``audit: host-ok`` is
+suppressed — the escape hatch for a call that is deliberate and
+documented at the site.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+
+__all__ = ["HostLintFinding", "HOT_PATHS", "lint_source", "lint_serving"]
+
+# Hot-path functions per serving module: the per-tick serve loop and
+# the guarded-dispatch machinery.  Nested functions (e.g. ``step``'s
+# ``_compute`` closure) inherit hotness from their enclosing function.
+HOT_PATHS = {
+    "service.py": ("step", "_guarded", "_assemble_prev"),
+    "failover.py": ("run", "_attempt", "backoff"),
+    "queue.py": ("next_batch",),
+    "supervisor.py": ("poll", "heartbeat"),
+}
+
+_BLOCKING_ATTRS = ("block_until_ready", "item")
+_TRANSFER_CALLS = ("np.asarray", "np.array", "jnp.asarray", "np.copy")
+_MUTATING_METHODS = ("append", "extend", "add", "update", "pop",
+                     "popleft", "remove", "clear", "insert",
+                     "setdefault", "appendleft")
+_PRAGMA = "audit: host-ok"
+
+
+@dataclasses.dataclass(frozen=True)
+class HostLintFinding:
+    file: str
+    line: int
+    rule: str
+    symbol: str
+    message: str
+
+
+def _dotted(node: ast.AST) -> str:
+    """'np.asarray' for Attribute chains, 'name' for Names, '' else."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_lock_ctx(item: ast.withitem) -> bool:
+    return "lock" in _dotted(item.context_expr).lower()
+
+
+def _touches_self(node: ast.AST) -> bool:
+    """Does this store/mutation target reach through ``self``?"""
+    while True:
+        if isinstance(node, ast.Attribute) or isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Name):
+            return node.id == "self"
+        else:
+            return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, filename: str, source: str,
+                 hot_names: tuple[str, ...]):
+        self.filename = filename
+        self.lines = source.splitlines()
+        self.hot_names = hot_names
+        self.findings: list[HostLintFinding] = []
+        self._hot_depth = 0
+        self._thread_body_depth = 0
+        self._lock_depth = 0
+
+    # -- helpers -----------------------------------------------------------
+
+    def _suppressed(self, node: ast.AST) -> bool:
+        line = getattr(node, "lineno", 0)
+        if 1 <= line <= len(self.lines):
+            return _PRAGMA in self.lines[line - 1]
+        return False
+
+    def _emit(self, node: ast.AST, rule: str, symbol: str,
+              message: str) -> None:
+        if not self._suppressed(node):
+            self.findings.append(HostLintFinding(
+                self.filename, getattr(node, "lineno", 0), rule, symbol,
+                message))
+
+    @staticmethod
+    def _spawns_thread(fn: ast.AST) -> bool:
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Call) and \
+                    _dotted(sub.func).endswith("Thread"):
+                return True
+        return False
+
+    # -- scope tracking ----------------------------------------------------
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        hot = self._hot_depth > 0 or node.name in self.hot_names
+        self._generic_function(node, hot)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _generic_function(self, node, hot: bool) -> None:
+        spawns = self._spawns_thread(node)
+        self._hot_depth += int(hot)
+        for child in ast.iter_child_nodes(node):
+            self._dispatch_child(child, nested_is_thread_body=spawns)
+        self._hot_depth -= int(hot)
+
+    def _dispatch_child(self, child: ast.AST,
+                        nested_is_thread_body: bool = False) -> None:
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if nested_is_thread_body:
+                self._thread_body_depth += 1
+                self.visit(child)
+                self._thread_body_depth -= 1
+            else:
+                self.visit(child)
+        else:
+            self.visit(child)
+
+    def visit_With(self, node: ast.With) -> None:
+        locked = any(_is_lock_ctx(i) for i in node.items)
+        self._lock_depth += int(locked)
+        self.generic_visit(node)
+        self._lock_depth -= int(locked)
+
+    # -- rules -------------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _dotted(node.func)
+        # Mutating-method calls on self state count as shared stores
+        # when made from a thread body.
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _MUTATING_METHODS and \
+                _touches_self(node.func.value):
+            self._check_shared_store(node, node.func)
+        if self._hot_depth > 0:
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _BLOCKING_ATTRS:
+                self._emit(node, "blocking-call", node.func.attr,
+                           f".{node.func.attr}() in a hot-path function "
+                           "blocks the serve loop on the device")
+            elif name == "time.sleep":
+                self._emit(node, "blocking-call", name,
+                           "time.sleep() in a hot-path function stalls "
+                           "the serve loop (the guard REPORTS backoff, "
+                           "it never sleeps)")
+            elif name in _TRANSFER_CALLS:
+                self._emit(node, "host-transfer", name,
+                           f"{name}() in a hot-path function forces a "
+                           "device->host sync on jitted outputs")
+            elif name == "jax.jit":
+                self._emit(node, "retrace-risk", name,
+                           "jax.jit() constructed inside a hot-path "
+                           "function: per-call wrapper -> empty cache "
+                           "-> unbounded retracing")
+        self.generic_visit(node)
+
+    def _check_shared_store(self, node: ast.AST, target: ast.AST) -> None:
+        if self._thread_body_depth > 0 and self._lock_depth == 0 and \
+                _touches_self(target):
+            sym = target
+            while isinstance(sym, ast.Subscript):
+                sym = sym.value
+            self._emit(node, "watchdog-unlocked", _dotted(sym) or "self",
+                       "shared `self` state mutated from the watchdog "
+                       "thread body without holding a lock — races the "
+                       "main serve loop")
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for target in node.targets:
+            self._check_shared_store(node, target)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._check_shared_store(node, node.target)
+        self.generic_visit(node)
+
+
+def lint_source(source: str, filename: str,
+                hot_names: tuple[str, ...] | None = None
+                ) -> list[HostLintFinding]:
+    """Lint one serving module's source text."""
+    base = os.path.basename(filename)
+    if hot_names is None:
+        hot_names = HOT_PATHS.get(base, ())
+    tree = ast.parse(source, filename=filename)
+    linter = _Linter(base, source, tuple(hot_names))
+    linter.visit(tree)
+    return linter.findings
+
+
+def lint_serving(root: str | None = None) -> list[HostLintFinding]:
+    """Lint every module of ``repro.serving`` (or of ``root``)."""
+    if root is None:
+        from repro import serving
+        root = os.path.dirname(serving.__file__)
+    findings: list[HostLintFinding] = []
+    for name in sorted(os.listdir(root)):
+        if not name.endswith(".py"):
+            continue
+        path = os.path.join(root, name)
+        with open(path) as f:
+            findings.extend(lint_source(f.read(), path))
+    return findings

@@ -1,0 +1,140 @@
+"""Assemble the audit: run every checker over the traced matrix and
+emit the structured ``AUDIT.json`` the CI gate
+(``benchmarks/check_audit.py``) consumes.
+
+Top-level shape::
+
+    {
+      "version": 1,
+      "params":  {height, width, max_features, n_rigs, seq_len,
+                  vmem_budget},
+      "entries": [ {name, entry, precision, masked, localize, gates,
+                    launch_budget,
+                    launches: {static, trace_audit, bounded,
+                               budget_ok, consistent},
+                    vmem:   [ per-launch residency verdicts ],
+                    dtype_violations:  [...],
+                    bounds_violations: [...],
+                    ok} ],
+      "hostlint": {findings: [...], ok},
+      "checks":  {launch_budget, launch_consistency, vmem, dtype,
+                  bounds, hostlint},
+      "ok": bool
+    }
+
+``launches.static`` is the jaxpr-walk count; ``launches.trace_audit``
+is what the runtime ``ops.launch_audit`` counter saw during the same
+abstract trace.  ``consistent`` (they agree) is checked HERE; equality
+against the benchmark artifact's ``launch_gate/*`` rows is checked in
+``benchmarks/check_audit.py`` where the artifact is available.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.analysis import bounds as bounds_mod
+from repro.analysis import dtype_flow, hostlint
+from repro.analysis import matrix as matrix_mod
+from repro.analysis import vmem as vmem_mod
+
+__all__ = ["audit_entry", "run_audit", "write_report"]
+
+
+def _vmem_dict(v: vmem_mod.LaunchVmem, mult) -> dict:
+    return {
+        "kernel": v.kernel,
+        "grid": list(v.grid),
+        "mult": mult,
+        "resident_bytes": v.resident_bytes,
+        "resident_mib": round(v.resident_bytes / 2 ** 20, 3),
+        "pipelined_bytes": v.pipelined_bytes,
+        "budget": v.budget,
+        "ok": v.ok,
+        "blocks": [dataclasses.asdict(b) for b in v.blocks],
+    }
+
+
+def audit_entry(te: matrix_mod.TracedEntry,
+                vmem_budget: int = vmem_mod.DEFAULT_VMEM_BUDGET) -> dict:
+    """Run the launch / VMEM / dtype / bounds checkers over one traced
+    entry."""
+    spec = te.spec
+    vmem = [_vmem_dict(vmem_mod.launch_vmem(s, vmem_budget), s.mult)
+            for s in te.sites]
+    dtype_v = [dataclasses.asdict(v) for s in te.sites
+               for v in dtype_flow.check_kernel_dtypes(s)]
+    bounds_v = [dataclasses.asdict(v) for s in te.sites
+                for v in bounds_mod.check_bounds(s)]
+    for v in bounds_v:
+        v["grid_point"] = list(v["grid_point"])
+    # The runtime audit counter fires once per pallas dispatch DURING
+    # TRACING — a scan body traces once however many trips it runs — so
+    # it must equal the number of discovered SITES; the static count
+    # (trip multipliers applied) is what the budget bounds.
+    launches = {
+        "static": te.count.total,
+        "sites": len(te.sites),
+        "trace_audit": te.audit_count,
+        "bounded": te.count.bounded,
+        "budget_ok": (te.count.bounded
+                      and te.count.total <= spec.launch_budget),
+        "consistent": len(te.sites) == te.audit_count,
+    }
+    entry = {
+        "name": spec.name,
+        "entry": spec.entry,
+        "precision": spec.precision,
+        "masked": spec.masked,
+        "localize": spec.localize,
+        "gates": list(spec.gates),
+        "launch_budget": spec.launch_budget,
+        "note": spec.note,
+        "launches": launches,
+        "vmem": vmem,
+        "dtype_violations": dtype_v,
+        "bounds_violations": bounds_v,
+    }
+    entry["ok"] = (launches["budget_ok"] and launches["consistent"]
+                   and all(v["ok"] for v in vmem)
+                   and not dtype_v and not bounds_v)
+    return entry
+
+
+def run_audit(specs: tuple = matrix_mod.MATRIX,
+              vmem_budget: int = vmem_mod.DEFAULT_VMEM_BUDGET,
+              serving_root: str | None = None,
+              **trace_kwargs) -> dict:
+    """The full audit: trace the matrix, run every checker, lint the
+    serving tier, and assemble the report dict."""
+    entries = [audit_entry(te, vmem_budget) for te in
+               matrix_mod.trace_matrix(specs, **trace_kwargs)]
+    findings = hostlint.lint_serving(serving_root)
+    lint = {"findings": [dataclasses.asdict(f) for f in findings],
+            "ok": not findings}
+    checks = {
+        "launch_budget": all(e["launches"]["budget_ok"]
+                             for e in entries),
+        "launch_consistency": all(e["launches"]["consistent"]
+                                  for e in entries),
+        "vmem": all(v["ok"] for e in entries for v in e["vmem"]),
+        "dtype": not any(e["dtype_violations"] for e in entries),
+        "bounds": not any(e["bounds_violations"] for e in entries),
+        "hostlint": lint["ok"],
+    }
+    params = {"vmem_budget": int(vmem_budget),
+              "height": trace_kwargs.get("height", 720),
+              "width": trace_kwargs.get("width", 1280),
+              "max_features": trace_kwargs.get("max_features", 1000),
+              "n_rigs": trace_kwargs.get("n_rigs", 2),
+              "seq_len": trace_kwargs.get("seq_len", 2)}
+    return {"version": 1, "params": params, "entries": entries,
+            "hostlint": lint, "checks": checks,
+            "ok": all(checks.values())}
+
+
+def write_report(report: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=False)
+        f.write("\n")

@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import warnings
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.types import (CameraIntrinsics, DepthSet, FeatureSet,

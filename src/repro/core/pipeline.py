@@ -959,53 +959,85 @@ class VisualSystem:
 
     # -- audit --------------------------------------------------------------
 
-    def traced_launches(self, entry: str, *args) -> int:
-        """Trace ``entry`` shape-only under impl='pallas' and return the
-        number of kernel launches in the traced graph — the
-        deterministic schedule number the CI launch gates enforce (3
-        per frame / fleet frame), independent of the session's impl.
-        ``process_frame`` / ``process_fleet`` accept an optional second
-        camera-mask argument so the DEGRADED budget (also 3 — masking is
-        elementwise jnp, not a launch) is gateable too.  On a
-        ``localize`` session the frame/fleet/run entries trace the FULL
-        localized graph (frontend + temporal matcher + solve), so the
-        <= 4 localized budget is gateable the same way."""
+    ENTRY_POINTS = ("process_frame", "process_fleet", "extract",
+                    "match", "run", "run_fleet")
+
+    def entry_core(self, entry: str, impl: str = "pallas"):
+        """The PURE traceable core of one entry point — the exact
+        function graph the jitted public entry dispatches, with impl
+        pinned and all eager validation / state plumbing stripped, so
+        audit tooling can ``jax.make_jaxpr`` / ``jax.eval_shape`` it
+        over abstract shapes (no data, no execution).
+
+        ``process_frame`` / ``process_fleet`` cores accept an optional
+        trailing camera-mask argument (the DEGRADED graph — same 3
+        launches, masking is elementwise jnp).  On a ``localize``
+        session the frame / fleet / run cores trace the FULL localized
+        graph (frontend + temporal matcher + solve) against the zero
+        previous state, which shares the launch graph of every steady
+        state.  ``match`` is the FM stage alone over a flat
+        (n_pairs,)-leading pair batch (``launch_gate/fm_frame_*``).
+
+        Both ``traced_launches`` (the runtime CI gate numbers) and
+        ``repro.analysis`` (the static auditor) trace THESE cores, so
+        static counts reconcile with the benchmark rows by
+        construction."""
         k = self.pipe.orb.max_features
 
         def frame_core(im, cm=None):
-            out = self._frame_core(im, "pallas", cm)
+            out = self._frame_core(im, impl, cm)
             if not self.pipe.localize:
                 return out
             prev = localization.zero_state(self.rig.n_pairs, k)
-            return self._localize_frame(out, prev, "pallas")
+            return self._localize_frame(out, prev, impl)
 
         def fleet_core(im, cm=None):
-            out = self._fleet_core(im, "pallas", cm)
+            out = self._fleet_core(im, impl, cm)
             if not self.pipe.localize:
                 return out
             prev = localization.zero_state(self.rig.n_pairs, k,
                                            int(im.shape[0]))
-            return self._localize_fleet(out, prev, "pallas")
+            return self._localize_fleet(out, prev, impl)
 
         def run_core(f, fleet):
             if self.pipe.localize:
-                return self._run_loc(f, "pallas", fleet)
-            return self._run_core(f, "pallas", fleet)
+                return self._run_loc(f, impl, fleet)
+            return self._run_core(f, impl, fleet)
+
+        def match_core(il, ir, fl, fr):
+            n_rigs = max(1, il.shape[0] // self.rig.n_pairs)
+            return self._fm_flat((il, ir, fl, fr), n_rigs, impl)
 
         cores = {
             "process_frame": frame_core,
             "process_fleet": fleet_core,
             "extract": lambda im: orb.extract_features_batched(
-                im, self.pipe.orb, impl="pallas"),
+                im, self.pipe.orb, impl=impl,
+                precision=self.pipe.precision),
+            "match": match_core,
             "run": lambda f: run_core(f, False),
             "run_fleet": lambda f: run_core(f, True),
         }
         try:
-            core = cores[entry]
+            return cores[entry]
         except KeyError:
             raise ValueError(
-                f"traced_launches supports {sorted(cores)}, "
+                f"entry_core supports {sorted(cores)}, "
                 f"got {entry!r}") from None
+
+    def traced_launches(self, entry: str, *args) -> int:
+        """Trace ``entry``'s core (``entry_core``) shape-only under
+        impl='pallas' and return the number of kernel launches in the
+        traced graph — the deterministic schedule number the CI launch
+        gates enforce (3 per frame / fleet frame), independent of the
+        session's impl.  ``process_frame`` / ``process_fleet`` accept an
+        optional second camera-mask argument so the DEGRADED budget
+        (also 3 — masking is elementwise jnp, not a launch) is gateable
+        too.  On a ``localize`` session the frame/fleet/run entries
+        trace the FULL localized graph (frontend + temporal matcher +
+        solve), so the <= 4 localized budget is gateable the same
+        way."""
+        core = self.entry_core(entry, impl="pallas")
         with ops.launch_audit() as audit:
             jax.eval_shape(core, *args)
         return audit.count

@@ -55,7 +55,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import pattern
-from repro.kernels.ref import (PATCH, RADIUS, pack_bits, patch_theta,
+from repro.kernels.ref import (PATCH, pack_bits, patch_theta,
                                patch_theta_int, theta_to_bin)
 
 KP_BLOCK = 8            # keypoints per grid step (unrolled in-kernel)

@@ -5,7 +5,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # module, so they keep seeing the single real CPU device.
 
 import argparse     # noqa: E402
-import dataclasses  # noqa: E402
 import json         # noqa: E402
 import time         # noqa: E402
 import traceback    # noqa: E402
@@ -17,7 +16,7 @@ from repro.launch import hlo_stats, specs as specs_mod       # noqa: E402
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
                                make_production_mesh)
 from repro.models import lm  # noqa: E402
-from repro.models.params import P, logical_axes  # noqa: E402
+from repro.models.params import P  # noqa: E402
 
 """Multi-pod dry-run: AOT lower + compile every (architecture x shape)
 cell on the production meshes, and extract the roofline terms from the

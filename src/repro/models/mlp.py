@@ -10,7 +10,6 @@ dense one-hot dispatch einsum.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -22,7 +22,6 @@ Families:
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +29,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
 from repro.models import attention, layers, mlp, ssm
-from repro.models.params import P, stack_layers
+from repro.models.params import stack_layers
 
 
 # ---------------------------------------------------------------------------

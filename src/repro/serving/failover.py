@@ -25,6 +25,7 @@ Crash-consistent snapshots (the third piece) live in
 
 from __future__ import annotations
 
+import contextvars
 import dataclasses
 import threading
 import typing
@@ -277,7 +278,14 @@ class DispatchGuard:
             except BaseException as e:      # noqa: BLE001 — reported below
                 box["error"] = e
 
-        t = threading.Thread(target=worker, daemon=True,
+        # A fresh Thread starts with an EMPTY contextvars context, so an
+        # ambient ``ops.launch_audit()`` scope (and any other contextvar
+        # the caller holds) would not see launches dispatched inside the
+        # guarded compute.  Run the worker inside a copy of the caller's
+        # context: LaunchAudit objects are shared by reference, so counts
+        # land in the caller's audit even though the context is a copy.
+        ctx = contextvars.copy_context()
+        t = threading.Thread(target=lambda: ctx.run(worker), daemon=True,
                              name="repro-dispatch-guard")
         t.start()
         t.join(self.cfg.timeout_s)

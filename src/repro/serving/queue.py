@@ -190,14 +190,14 @@ class FrameQueue:
         camera_mask = np.zeros((bucket, c), dtype=bool)
         rig_mask = np.zeros(bucket, dtype=bool)
         deadline = self.cfg.deadline_s
-        late = np.asarray([float(now) - p.t_arrival > deadline
-                           for p in frames], dtype=bool)
+        late = np.asarray([float(now) - p.t_arrival > deadline  # audit: host-ok
+                           for p in frames], dtype=bool)        # host floats in
         for b, p in enumerate(frames):
             images[b] = p.images
             camera_mask[b] = p.camera_mask
             rig_mask[b] = True
         return FleetBatch(
-            images=jnp.asarray(images), camera_mask=camera_mask,
+            images=jnp.asarray(images), camera_mask=camera_mask,  # audit: host-ok — upload, not a device sync
             rig_ids=tuple(p.rig_id for p in frames), rig_mask=rig_mask,
             late=late, t_arrivals=tuple(p.t_arrival for p in frames),
             t_oldest=min(p.t_arrival for p in frames))

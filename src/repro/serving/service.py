@@ -42,8 +42,7 @@ from repro.serving.failover import DispatchEvent, DispatchGuard, HostEvent, \
 from repro.serving.faults import FaultInjector
 from repro.serving.queue import FrameQueue, QueueConfig
 from repro.serving import snapshot
-from repro.serving.supervisor import (Supervisor, SupervisorConfig,
-                                      SupervisorEvent)
+from repro.serving.supervisor import Supervisor, SupervisorConfig
 
 
 class RigReport(typing.NamedTuple):

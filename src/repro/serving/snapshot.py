@@ -30,7 +30,6 @@ from __future__ import annotations
 import collections
 import json
 import os
-import typing
 import zlib
 
 import numpy as np

@@ -17,7 +17,6 @@ import functools
 from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as Ps
 

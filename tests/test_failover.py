@@ -384,3 +384,50 @@ def test_failover_episode_replays_bit_identically(tmp_path):
     assert a.recovery["restored_step"] == b.recovery["restored_step"]
     for ra, rb in zip(a.reports, b.reports):
         _assert_bit_exact(ra.output, rb.output)
+
+
+def test_guarded_compute_counts_into_caller_launch_audit():
+    """Regression: the guard's watchdog thread starts with an EMPTY
+    contextvars context, so launches dispatched inside the guarded
+    compute used to escape an ambient ``ops.launch_audit()`` scope.
+    The guard must copy the caller's context into the worker."""
+    from repro.core import orb
+    from repro.kernels import ops
+
+    ocfg = ORBConfig(height=H, width=W, max_features=16, n_levels=1)
+    aval = jax.ShapeDtypeStruct((2, H, W), np.float32)
+
+    def compute():
+        # Trace-only FE dispatch: bumps the launch counter twice
+        # (1 dense + 1 sparse), no kernel execution.
+        return jax.eval_shape(
+            lambda im: orb.extract_features_batched(im, ocfg,
+                                                    impl="pallas"),
+            aval)
+
+    guard = DispatchGuard(DispatchGuardConfig(timeout_s=30.0))
+    with ops.launch_audit() as audit:
+        outcome = guard.run("audit-ctx", compute)
+    assert outcome.ok
+    assert audit.count == 2
+
+
+def test_guarded_compute_audit_counts_match_unguarded():
+    """The guard must be launch-transparent: tracing a fleet frame
+    through the guarded path observes exactly the same count as calling
+    the compute directly (the restored_fleet/degraded gates rely on
+    this when the service dispatches through the guard)."""
+    from repro.kernels import ops
+
+    svc = _service(guard=_guard())
+    frames, _ = _fleet()
+    fleet = jax.numpy.asarray(frames[0])
+
+    def compute():
+        return svc.vs.traced_launches("process_fleet", fleet)
+
+    direct = compute()
+    with ops.launch_audit() as audit:
+        outcome = svc.guard.run("parity", compute)
+    assert outcome.ok and outcome.value == direct
+    assert audit.count == direct == 3

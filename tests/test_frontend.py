@@ -4,7 +4,6 @@ coverage, degenerate sequence lengths, and the analytic Fig. 4
 timeline."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

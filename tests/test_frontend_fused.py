@@ -7,13 +7,12 @@ CPU.  Also checks that the batched extractor the frontend now defaults
 to agrees with per-image extraction.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import ORBConfig, extract_features, extract_features_batched
-from repro.core import frontend, pyramid
+from repro.core import pyramid
 from repro.kernels import ops, ref
 
 

@@ -1,0 +1,249 @@
+"""Pin `launch/hlo_stats.py`'s HLO-text parser against handcrafted
+fixtures: the regex surface (`_SHAPE_RE` / `_TRIP_RE` / headers /
+instructions), the call graph (fusion calls, nested while bodies with
+trip multipliers), and the byte accounting edge cases (scalar `f32[]`
+shapes, unknown dtypes -> 0 bytes).  These underpin every roofline
+number the benchmarks report and previously had no direct coverage."""
+
+import pytest
+
+from repro.launch import hlo_stats
+
+
+# ---------------------------------------------------------------------------
+# regex / low-level helpers
+
+def test_shape_of_scalar_and_ranked():
+    assert hlo_stats._shape_of("f32[] constant(0)") == ("f32", ())
+    assert hlo_stats._shape_of("f32[4,8] parameter(0)") == ("f32", (4, 8))
+    assert hlo_stats._shape_of("u8[720,1280] copy(%x)") == \
+        ("u8", (720, 1280))
+    assert hlo_stats._shape_of("no shape here") == (None, ())
+
+
+def test_nbytes_known_unknown_and_zero_dim():
+    assert hlo_stats._nbytes("f32", (4, 8)) == 128
+    assert hlo_stats._nbytes("u8", (3,)) == 3
+    assert hlo_stats._nbytes("f32", ()) == 4          # scalar
+    assert hlo_stats._nbytes("f32", (0, 8)) == 0      # zero-dim extent
+    # Unknown dtype tokens must degrade to 0 bytes, not crash or guess.
+    assert hlo_stats._nbytes("mystery99", (4, 4)) == 0
+    assert hlo_stats._nbytes(None, ()) == 0
+
+
+def test_trip_re_pins_exact_xla_serialization():
+    """XLA serializes backend_config without spaces; the regex pins
+    that exact form, so a looser variant must NOT match (the fallback
+    `_cond_trip` path handles those)."""
+    tight = '"known_trip_count":{"n":"48"}'
+    loose = '"known_trip_count": {"n": "48"}'
+    m = hlo_stats._TRIP_RE.search(tight)
+    assert m and m.group(1) == "48"
+    assert hlo_stats._TRIP_RE.search(loose) is None
+
+
+# ---------------------------------------------------------------------------
+# parse_hlo structure
+
+_BASIC = """\
+HloModule jit_step
+
+ENTRY %main (p0: f32[4,8], p1: f32[8,16]) -> f32[4,16] {
+  %p0 = f32[4,8] parameter(0)
+  %p1 = f32[8,16] parameter(1)
+  %eps = f32[] constant(1)
+  %odd = q99[4,4] custom-call(%p0)
+  ROOT %d = f32[4,16] dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_parse_basic_entry():
+    comps = hlo_stats.parse_hlo(_BASIC)
+    assert set(comps) == {"main"}
+    main = comps["main"]
+    assert main.is_entry
+    assert main.table["p0"] == ("f32", (4, 8))
+    assert main.table["eps"] == ("f32", ())
+    dot = main.by_name["d"]
+    assert dot.is_root and dot.op == "dot"
+    assert dot.operands == ["p0", "p1"]
+    # dot FLOPs: 2 * out_elems * contracted = 2 * (4*16) * 8
+    assert hlo_stats.dot_flops(dot, main.table) == 1024
+
+
+def test_analyze_basic_flops_and_unknown_dtype_bytes():
+    stats = hlo_stats.analyze(_BASIC)
+    assert stats.flops == 1024
+    # The q99 custom-call result is an unknown dtype: its traffic
+    # contribution must be 0, never a KeyError.
+    assert stats.hbm_bytes >= 0
+
+
+_NESTED_WHILE = """\
+ENTRY %main (p0: f32[2,2]) -> f32[2,2] {
+  %p0 = f32[2,2] parameter(0)
+  %t0 = (f32[2,2]) tuple(%p0)
+  %w1 = (f32[2,2]) while((f32[2,2]) %t0), condition=%outer_cond, body=%outer_body, backend_config={"known_trip_count":{"n":"3"}}
+  ROOT %out = f32[2,2] get-tuple-element((f32[2,2]) %w1), index=0
+}
+
+%outer_body (arg.1: (f32[2,2])) -> (f32[2,2]) {
+  %arg.1 = (f32[2,2]) parameter(0)
+  %w2 = (f32[2,2]) while((f32[2,2]) %arg.1), condition=%inner_cond, body=%inner_body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %r1 = (f32[2,2]) tuple(%w2)
+}
+
+%inner_body (arg.2: (f32[2,2])) -> (f32[2,2]) {
+  %arg.2 = (f32[2,2]) parameter(0)
+  %g = f32[2,2] get-tuple-element((f32[2,2]) %arg.2), index=0
+  %dd = f32[2,2] dot(%g, %g), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %r2 = (f32[2,2]) tuple(%dd)
+}
+
+%outer_cond (arg.3: (f32[2,2])) -> pred[] {
+  %arg.3 = (f32[2,2]) parameter(0)
+  ROOT %c1 = pred[] constant(0)
+}
+
+%inner_cond (arg.4: (f32[2,2])) -> pred[] {
+  %arg.4 = (f32[2,2]) parameter(0)
+  ROOT %c2 = pred[] constant(0)
+}
+"""
+
+
+def test_nested_while_trip_multipliers():
+    """An op inside a 5-trip while inside a 3-trip while counts 15x —
+    the multiplier semantics the scanned-layer roofline relies on."""
+    comps = hlo_stats.parse_hlo(_NESTED_WHILE)
+    assert comps["main"].whiles == [("outer_body", "outer_cond", 3)]
+    assert comps["outer_body"].whiles == \
+        [("inner_body", "inner_cond", 5)]
+    stats = hlo_stats.analyze(_NESTED_WHILE)
+    assert stats.while_trips == {"outer_body": 3, "inner_body": 5}
+    # dot: 2 * (2*2) * 2 = 16 flops per trip, 3*5 trips
+    assert stats.flops == 16 * 15
+
+
+_COND_FALLBACK = """\
+ENTRY %main (p0: s32[]) -> s32[] {
+  %p0 = s32[] parameter(0)
+  %t0 = (s32[]) tuple(%p0)
+  %w = (s32[]) while((s32[]) %t0), condition=%cond, body=%body
+  ROOT %out = s32[] get-tuple-element((s32[]) %w), index=0
+}
+
+%body (arg.1: (s32[])) -> (s32[]) {
+  %arg.1 = (s32[]) parameter(0)
+  %g = s32[] get-tuple-element((s32[]) %arg.1), index=0
+  %one = s32[] constant(1)
+  %n = s32[] add(%g, %one)
+  ROOT %r = (s32[]) tuple(%n)
+}
+
+%cond (arg.2: (s32[])) -> pred[] {
+  %arg.2 = (s32[]) parameter(0)
+  %i = s32[] get-tuple-element((s32[]) %arg.2), index=0
+  %k = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+"""
+
+
+def test_cond_compare_constant_fallback_trip_count():
+    """Without backend_config the trip count falls back to the
+    constant the loop condition compares against."""
+    comps = hlo_stats.parse_hlo(_COND_FALLBACK)
+    assert hlo_stats._cond_trip(comps, "cond") == 7
+    stats = hlo_stats.analyze(_COND_FALLBACK)
+    assert stats.while_trips == {"body": 7}
+
+
+_FUSION = """\
+ENTRY %main (p0: bf16[4,8], p1: bf16[8,16]) -> f32[4,16] {
+  %p0 = bf16[4,8] parameter(0)
+  %p1 = bf16[8,16] parameter(1)
+  %cast = f32[4,8] fusion(%p0), kind=kLoop, calls=%cast_comp
+  %big = f32[4,16] fusion(%cast, %p1), kind=kOutput, calls=%dot_comp
+  ROOT %r = f32[4,16] copy(%big)
+}
+
+%cast_comp (cp: bf16[4,8]) -> f32[4,8] {
+  %cp = bf16[4,8] parameter(0)
+  ROOT %cv = f32[4,8] convert(%cp)
+}
+
+%dot_comp (dp0: f32[4,8], dp1: bf16[8,16]) -> f32[4,16] {
+  %dp0 = f32[4,8] parameter(0)
+  %dp1 = bf16[8,16] parameter(1)
+  %dp1c = f32[8,16] convert(%dp1)
+  ROOT %dd = f32[4,16] dot(%dp0, %dp1c), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_fusion_call_graph_and_classification():
+    comps = hlo_stats.parse_hlo(_FUSION)
+    main = comps["main"]
+    # Both fusion targets land in the call graph.
+    assert "cast_comp" in main.calls and "dot_comp" in main.calls
+    cast = main.by_name["cast"]
+    kind, payload = hlo_stats._classify_fusion(cast, comps)
+    assert (kind, payload) == ("pure_cast", 0)
+    # pure-cast fusions are CPU legalization artifacts: zero traffic.
+    assert hlo_stats._traffic_bytes(cast, main, comps) == 0
+    kind, _ = hlo_stats._classify_fusion(main.by_name["big"], comps)
+    assert kind == "compute"
+
+
+def test_fusion_called_computation_contributes_flops():
+    stats = hlo_stats.analyze(_FUSION)
+    # dot inside the fusion-called computation: 2 * (4*16) * 8
+    assert stats.flops == 1024
+
+
+_COLLECTIVE = """\
+ENTRY %main (p0: f32[64,128]) -> f32[64,128] {
+  %p0 = f32[64,128] parameter(0)
+  %ar = f32[64,128] all-reduce(%p0), replica_groups={}, to_apply=%sum
+  ROOT %r = f32[64,128] copy(%ar)
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_per_kind():
+    stats = hlo_stats.analyze(_COLLECTIVE)
+    assert stats.collective_count == 1
+    assert stats.collective_bytes == 64 * 128 * 4
+    assert stats.per_collective == {"all-reduce": 64 * 128 * 4}
+
+
+def test_entry_fallback_without_entry_marker():
+    """A module printed without the ENTRY keyword still analyzes: the
+    uncalled computation is taken as the root."""
+    text = _BASIC.replace("ENTRY %main", "%main")
+    stats = hlo_stats.analyze(text)
+    assert stats.flops == 1024
+
+
+@pytest.mark.parametrize("line,expect", [
+    ("ENTRY %main (p: f32[2]) -> f32[2] {", ("main", True)),
+    ("%scan_body.17 (arg: f32[2]) -> f32[2] {", ("scan_body.17", False)),
+    ("not a header", None),
+])
+def test_header_regex(line, expect):
+    m = hlo_stats._HEADER_RE.match(line.strip())
+    if expect is None:
+        assert m is None
+    else:
+        name, is_entry = expect
+        assert m is not None
+        assert m.group(2) == name
+        assert bool(m.group(1)) == is_entry

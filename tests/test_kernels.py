@@ -6,7 +6,6 @@ the kernel level: the word-length-optimized (quantized) path is compared
 against the float oracle separately in test_paper_claims.py.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

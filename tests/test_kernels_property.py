@@ -7,7 +7,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 _SETTINGS = dict(max_examples=25, deadline=None)
 

@@ -4,11 +4,10 @@ against a program with known FLOPs/collectives/trip counts."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as Ps
 
-from repro.configs import ARCH_IDS, get_smoke_config, shape_cells
+from repro.configs import ARCH_IDS, get_smoke_config
 from repro.configs.base import ShapeCell
 from repro.launch import hlo_stats
 from repro.launch import specs as specs_mod

@@ -21,7 +21,7 @@ from repro.core import (ORBConfig, PipelineConfig, RigConfig,
                         VisualSystem)
 from repro.core import matching
 from repro.core.types import (CameraIntrinsics, FeatureSet,
-                              LocalizationOutput, LocalizationState,
+                              LocalizationOutput,
                               MatchSet)
 from repro.data import scenes
 from repro.distributed import compression

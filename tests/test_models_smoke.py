@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config, shape_cells
-from repro.models import lm, transformer
+from repro.models import lm
 from repro.models.params import count_params, init_params
 
 B, S = 2, 32

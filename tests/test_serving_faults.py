@@ -9,7 +9,6 @@ import functools
 
 import jax
 import numpy as np
-import pytest
 
 from repro.core import (ORBConfig, PipelineConfig, RigConfig, VisualSystem)
 from repro.data import scenes

@@ -14,11 +14,11 @@ from repro import checkpoint
 from repro.configs import get_smoke_config
 from repro.data.tokens import TokenDataConfig, get_batch, host_shard
 from repro.distributed import compression, pipeline
-from repro.distributed.sharding import Rules, resolve, use_sharding
+from repro.distributed.sharding import Rules, resolve
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import train_loop
 from repro.models import lm
-from repro.models.params import init_params, param_specs
+from repro.models.params import init_params
 from repro.optim import AdamWConfig
 
 

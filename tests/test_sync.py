@@ -3,7 +3,6 @@ plus property tests (hypothesis) of the trigger/sync desync bounds and
 the interface-alignment window over random rates and frame counts."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sync

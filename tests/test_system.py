@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CameraIntrinsics, ORBConfig, PipelineConfig,
+from repro.core import (ORBConfig, PipelineConfig,
                         RigConfig, VisualSystem, backend)
 from repro.data import scenes
 
